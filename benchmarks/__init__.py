@@ -1,0 +1,1 @@
+"""Benchmark harness: paper tables/figures + roofline readers."""

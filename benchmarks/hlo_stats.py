@@ -1,0 +1,3 @@
+"""Re-export: the scan-aware HLO analyzer lives in repro.analysis."""
+from repro.analysis.hlo_stats import *          # noqa: F401,F403
+from repro.analysis.hlo_stats import _parse_computations  # noqa: F401

@@ -1,0 +1,131 @@
+"""§Perf hillclimb: the paper-technique cell (RangeReach query engine).
+
+Unlike the LM/GNN cells (dry-run roofline terms), the paper's own
+workload runs for real on this host, so this hillclimb measures
+wall-clock per query across engine variants and structural parameters:
+
+    engine    host wavefront | jit wavefront (capacity c) | pallas leaf
+    fanout    R-tree node width (VMEM tile shape analogue)
+    capacity  jit wavefront frontier budget
+
+plus the build-side closure: per-level scatter-OR vs the bitset_mm
+fixpoint (VPU word loop vs MXU unpack-matmul) at growing component
+counts.  Each configuration is correctness-checked against the host
+engine before timing.  Output: results/perf_rangereach.json.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import build_2dreach, query_host, query_jax_wavefront
+from repro.data import get_dataset, workload
+from repro.kernels.range_query.ops import range_query_forest
+
+OUT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "perf_rangereach.json",
+)
+
+
+def _t(fn, repeats=5):
+    fn()  # warmup / compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def engine_sweep(dataset="gowalla", scale=0.5, n_q=2000) -> List[Dict]:
+    g = get_dataset(dataset, scale=scale)
+    us, rects = workload(g, n_q, extent_ratio=0.05, seed=5)
+    rows = []
+    for fanout in (8, 16, 32, 64):
+        idx = build_2dreach(g, variant="comp", fanout=fanout)
+        tid = idx.lookup_tree(us)
+        ref = query_host(idx.forest, tid, rects)
+        # host engine
+        dt = _t(lambda: query_host(idx.forest, tid, rects))
+        rows.append(dict(engine="host", fanout=fanout, capacity=None,
+                         us_per_q=dt / n_q * 1e6,
+                         depth=idx.forest.depth))
+        # jit wavefront at several capacities
+        for cap in (32, 64, 128, 256):
+            got, ovf = query_jax_wavefront(idx.forest, tid, rects,
+                                           capacity=cap)
+            valid = ~np.asarray(ovf)
+            assert (np.asarray(got)[valid] == ref[valid]).all()
+            ovf_frac = float(np.asarray(ovf).mean())
+            dt = _t(lambda: query_jax_wavefront(
+                idx.forest, tid, rects, capacity=cap))
+            rows.append(dict(engine="wavefront", fanout=fanout,
+                             capacity=cap, us_per_q=dt / n_q * 1e6,
+                             overflow_frac=ovf_frac,
+                             depth=idx.forest.depth))
+        # pallas leaf scan (interpret on CPU — structural comparison)
+        got = range_query_forest(idx.forest, tid, rects)
+        assert (got == ref).all()
+        dt = _t(lambda: range_query_forest(idx.forest, tid, rects),
+                repeats=3)
+        rows.append(dict(engine="pallas_leafscan", fanout=fanout,
+                         capacity=None, us_per_q=dt / n_q * 1e6,
+                         depth=idx.forest.depth))
+    return rows
+
+
+def closure_sweep() -> List[Dict]:
+    """Build-side: per-level scatter-OR vs bitset-matmul fixpoint."""
+    from repro.core import condense, scc_np
+    from repro.core.reachability import closure_np, pack_rows
+    from repro.kernels.bitset_mm.ops import closure_fixpoint
+
+    rows = []
+    for scale in (0.1, 0.25, 0.5):
+        g = get_dataset("yelp", scale=scale)
+        labels = scc_np(g.n_nodes, g.edges)
+        cond = condense(g.n_nodes, g.edges, labels)
+        t0 = time.perf_counter()
+        clo = closure_np(cond, g.n_nodes, g.spatial_ids)
+        t_np = time.perf_counter() - t0
+        d, p = cond.n_comps, clo.p
+        rows.append(dict(method="scatter_or_levels", scale=scale,
+                         n_comps=d, n_spatial=p, seconds=t_np))
+        if d <= 12000:
+            # dense closure paths only feasible at small d
+            own = np.zeros((d, p), dtype=bool)
+            for c in range(d):
+                own[c, clo.own_cols[
+                    clo.own_indptr[c]:clo.own_indptr[c + 1]]] = True
+            A = np.zeros((d, d), dtype=bool)
+            if cond.dag_edges.size:
+                A[cond.dag_edges[:, 0], cond.dag_edges[:, 1]] = True
+            ob, ab = pack_rows(own), pack_rows(A)
+            t0 = time.perf_counter()
+            closure_fixpoint(ob, ab, n_iters=cond.n_levels + 1,
+                             use_mxu=True)
+            rows.append(dict(method="bitset_mm_mxu", scale=scale,
+                             n_comps=d, n_spatial=p,
+                             seconds=time.perf_counter() - t0))
+    return rows
+
+
+def main():
+    out = {"engine_sweep": engine_sweep(), "closure": closure_sweep()}
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(out, f, indent=1)
+    for r in out["engine_sweep"]:
+        print(r)
+    for r in out["closure"]:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

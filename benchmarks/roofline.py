@@ -1,0 +1,207 @@
+"""Roofline terms per (arch x shape x mesh) from the dry-run artifacts.
+
+Hardware model (TPU v5e, per chip):
+    peak bf16 compute   197 TFLOP/s
+    HBM bandwidth       819 GB/s
+    ICI link bandwidth  ~50 GB/s
+
+The SPMD-partitioned HLO module is the *per-device* program, so the
+scan-aware ``hlo_stats`` totals are per-device quantities and each term
+is simply value / per-chip-peak (seconds per step on that device):
+
+    compute    = flops / 197e12
+    memory     = bytes / 819e9
+    collective = collective_bytes / 50e9
+
+MODEL_FLOPS (the "useful" compute) is analytic per family — 6*N_active*D
+for LM training, 2*N_active*D for single-pass inference, operation counts
+for GNN/recsys — divided by the device count for comparability.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "dryrun",
+)
+
+
+# --------------------------------------------------------------------------
+# analytic MODEL_FLOPS per cell (global; caller divides by n_devices)
+# --------------------------------------------------------------------------
+
+def lm_model_flops(arch: str, shape: str) -> Optional[float]:
+    from repro.configs import get_arch
+    from repro.configs.base import LM_SHAPES
+
+    cfg = get_arch(arch).make_config()
+    n_active = cfg.param_counts()["active"]
+    s = LM_SHAPES[shape]
+    if s["kind"] == "train":
+        tokens = s["seq"] * s["batch"]
+        return 6.0 * n_active * tokens
+    if s["kind"] == "prefill":
+        tokens = s["seq"] * s["batch"]
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * s["batch"]
+
+
+def gnn_model_flops(arch: str, shape: str) -> Optional[float]:
+    from repro.configs import get_arch
+    from repro.configs.base import GNN_SHAPES, round_up
+
+    cfg = get_arch(arch).make_config()
+    s = GNN_SHAPES[shape]
+    if s["batched"]:
+        N, E, rep = s["n"] * s["batch"], s["e"] * s["batch"], 1
+    else:
+        N, E, rep = round_up(s["n"]), round_up(s["e"]), 1
+    d = cfg.d_hidden
+    if arch == "graphcast":
+        fwd = cfg.n_layers * (E * (3 * d) * d * 2 + N * (2 * d) * d * 2)
+    elif arch == "schnet":
+        fwd = cfg.n_interactions * (
+            E * (cfg.n_rbf * d + d * d) * 2 + N * 2 * d * d * 2)
+    elif arch == "dimenet":
+        T = min(2 * E, 1 << 26) if not s["batched"] else 256 * s["batch"]
+        fwd = cfg.n_blocks * (
+            T * (cfg.n_bilinear ** 2 * d) * 2 + E * 2 * d * d * 2)
+    else:  # equiformer-v2
+        # per edge: rotate in/out (block-diag Wigner matmuls over C
+        # channels) + SO(2) linear maps (m=0 full, m>=1 complex pairs)
+        wig = sum((2 * l + 1) ** 2 for l in range(cfg.l_max + 1))
+        so2 = 2 * ((cfg.l_max + 1) * d) ** 2
+        for m in range(1, cfg.m_max + 1):
+            so2 += 2 * 4 * ((cfg.l_max + 1 - m) * d) ** 2
+        fwd = cfg.n_layers * E * (2 * 2 * wig * d + so2)
+    return 3.0 * fwd  # fwd + bwd (train cells)
+
+
+def recsys_model_flops(arch: str, shape: str) -> Optional[float]:
+    from repro.configs import get_arch
+    from repro.configs.base import RECSYS_SHAPES
+
+    cfg = get_arch(arch).make_config()
+    s = RECSYS_SHAPES[shape]
+    de = 2 * cfg.embed_dim
+    attn = cfg.seq_len * (
+        4 * de * cfg.attn_hidden[0]
+        + cfg.attn_hidden[0] * cfg.attn_hidden[1] + cfg.attn_hidden[1]
+    ) * 2
+    out = (3 * de * cfg.mlp_hidden[0]
+           + cfg.mlp_hidden[0] * cfg.mlp_hidden[1]
+           + cfg.mlp_hidden[1]) * 2
+    per_sample = attn + out
+    if s["kind"] == "train":
+        return 3.0 * per_sample * s["batch"]
+    if s["kind"] == "retrieval":
+        return float(per_sample) * s["n_candidates"]
+    return float(per_sample) * s["batch"]
+
+
+def model_flops(arch: str, shape: str) -> Optional[float]:
+    from repro.configs import get_arch
+
+    fam = get_arch(arch).family
+    try:
+        if fam == "lm":
+            return lm_model_flops(arch, shape)
+        if fam == "gnn":
+            return gnn_model_flops(arch, shape)
+        return recsys_model_flops(arch, shape)
+    except Exception:
+        return None
+
+
+# --------------------------------------------------------------------------
+# table assembly
+# --------------------------------------------------------------------------
+
+def load_records(results_dir: str = RESULTS_DIR) -> List[Dict]:
+    recs = []
+    if not os.path.isdir(results_dir):
+        return recs
+    for name in sorted(os.listdir(results_dir)):
+        if name.endswith(".json"):
+            with open(os.path.join(results_dir, name)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok") or "hlo_stats" not in rec:
+        return None
+    st = rec["hlo_stats"]
+    f, c = st["flops"], st["collective_bytes"]
+    ma = rec.get("memory_analysis", {})
+    io_bytes = ma.get("argument_size_in_bytes", 0) + ma.get(
+        "output_size_in_bytes", 0)
+    # HBM traffic model: program inputs+outputs cross HBM once, plus the
+    # fusion-surviving op traffic (dots, gathers/scatters, cache updates).
+    # The raw unfused op traffic ("bytes") is kept as a diagnostic — the
+    # CPU-backend HLO leaves elementwise chains unfused, so it wildly
+    # overstates what a TPU program would move (see EXPERIMENTS.md).
+    b = io_bytes + st.get("hbm_floor_bytes", st["bytes"])
+    t_comp = f / PEAK_FLOPS
+    t_mem = b / HBM_BW
+    t_coll = c / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    mf_dev = mf / rec["n_devices"] if mf else None
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dom,
+        "bound_s": terms[dom],
+        "model_flops_dev": mf_dev,
+        "useful_ratio": (mf_dev / f) if (mf_dev and f) else None,
+        "roofline_frac": (
+            (mf_dev / PEAK_FLOPS) / terms[dom]
+            if (mf_dev and terms[dom] > 0) else None
+        ),
+        "flops_dev": f,
+        "bytes_dev": b,
+        "bytes_unfused_dev": st["bytes"],
+        "coll_dev": c,
+    }
+
+
+def table(results_dir: str = RESULTS_DIR, mesh: str = "pod16x16"
+          ) -> List[Dict]:
+    rows = []
+    for rec in load_records(results_dir):
+        if rec.get("mesh") != mesh:
+            continue
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def format_table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':<28}{'shape':<15}{'comp(s)':>10}{'mem(s)':>10}"
+           f"{'coll(s)':>10}{'dom':>6}{'useful':>8}{'roof%':>7}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        u = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "-"
+        rf = f"{100 * r['roofline_frac']:.1f}" if r["roofline_frac"] else "-"
+        lines.append(
+            f"{r['arch']:<28}{r['shape']:<15}{r['t_compute_s']:>10.4f}"
+            f"{r['t_memory_s']:>10.4f}{r['t_collective_s']:>10.4f}"
+            f"{r['dominant'][:4]:>6}{u:>8}{rf:>7}"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,53 @@
+"""Train SchNet on batched synthetic molecules; verify EquiformerV2's
+exact rotation invariance on the same data.
+
+    PYTHONPATH=src python examples/gnn_molecules.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import molecule_batches
+from repro.models.gnn import equiformer_v2, schnet
+from repro.train import AdamWConfig, adamw_init, make_train_step
+
+cfg = schnet.SchNetConfig(n_interactions=2, d_hidden=32, n_rbf=30)
+params = schnet.init_params(jax.random.PRNGKey(0), cfg)
+step_fn = jax.jit(make_train_step(
+    lambda p, b: (schnet.loss_fn(p, b, cfg), {}),
+    AdamWConfig(lr=2e-3, warmup_steps=5, total_steps=80)))
+opt = adamw_init(params)
+
+data = molecule_batches(n_nodes=12, n_edges=40, batch=16, seed=0)
+losses = []
+t0 = time.perf_counter()
+for step in range(80):
+    batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+    params, opt, m = step_fn(params, opt, batch)
+    losses.append(float(m["loss"]))
+    if (step + 1) % 20 == 0:
+        print(f"schnet step {step + 1:3d} mse {losses[-1]:.4f}")
+print(f"schnet: {np.mean(losses[:5]):.3f} -> {np.mean(losses[-5:]):.3f} "
+      f"({time.perf_counter() - t0:.1f}s)")
+assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+# ---- EquiformerV2: energies are exactly rotation-invariant ---------------
+ecfg = equiformer_v2.EquiformerV2Config(
+    n_layers=2, d_hidden=16, l_max=3, m_max=2, n_heads=4, n_rbf=8)
+ep = equiformer_v2.init_params(jax.random.PRNGKey(1), ecfg)
+b = {k: jnp.asarray(v[0]) for k, v in next(data).items()}
+e0 = float(equiformer_v2.apply(ep, b, ecfg))
+rng = np.random.default_rng(0)
+A = rng.standard_normal((3, 3))
+Q, _ = np.linalg.qr(A)
+if np.linalg.det(Q) < 0:
+    Q[:, 0] *= -1
+e1 = float(equiformer_v2.apply(
+    ep, dict(b, pos=b["pos"] @ jnp.asarray(Q.T, jnp.float32)), ecfg))
+print(f"equiformer-v2 energy {e0:.5f} vs rotated {e1:.5f} "
+      f"(delta {abs(e0 - e1):.2e})")
+assert abs(e0 - e1) < 1e-3
+print("equivariance: OK")

@@ -1,0 +1,2 @@
+"""repro: 2DReach geosocial reachability as a multi-pod JAX framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,1 @@
+from .hlo_stats import analyze_hlo

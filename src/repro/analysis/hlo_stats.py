@@ -1,0 +1,257 @@
+"""Scan-aware HLO analysis: FLOPs / traffic / collective bytes.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` over 48 layers reports 1/48th of the real FLOPs (verified in
+EXPERIMENTS.md §Dry-run).  This module parses the post-optimization HLO
+text instead and walks the call graph, multiplying ``while`` bodies by
+their trip counts (XLA's ``known_trip_count`` backend config, falling
+back to the loop-condition bound constant):
+
+    flops       — 2 * prod(result_dims) * contraction for every dot
+    bytes       — operand + result bytes of every materializing op
+                  (post-fusion: fusion internals don't touch HBM);
+                  operand shapes resolved through a per-computation
+                  symbol table (compact HLO omits them inline)
+    collectives — result bytes of all-gather/all-reduce/reduce-scatter/
+                  all-to-all/collective-permute, x trip multiplicity
+
+Validated against known-FLOPs programs in tests/test_roofline.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "c64": 8, "c128": 16,
+}
+
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\([^()]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([a-z][a-z0-9\-]*)\("
+)
+PARAM_RE = re.compile(r"%?([\w.\-]+)\s*:\s*((?:\([^()]*\))|(?:[a-z0-9]+"
+                      r"\[[0-9,]*\](?:\{[^}]*\})?))")
+OPERAND_RE = re.compile(r"%([\w.\-]+)")
+CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+TRIP_RE = re.compile(r'known_trip_count[^0-9]*"n":"(\d+)"')
+BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+CONST_RE = re.compile(r"constant\((-?\d+)\)")
+LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+SKIP_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id",
+}
+HBM_FLOOR_OPS = {
+    "dot", "convolution", "dynamic-update-slice", "gather", "scatter",
+    "dynamic-slice",
+}
+COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start", "reduce-scatter-start",
+}
+
+
+def _first_shape_elems(text: str) -> Tuple[int, List[int]]:
+    m = SHAPE_RE.search(text)
+    if not m:
+        return 0, []
+    dims = [int(x) for x in m.group(2).split(",") if x]
+    n = 1
+    for d in dims:
+        n *= d
+    return n, dims
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _split_args(line: str, start: int = 0) -> str:
+    """Args between the op's parens; ``start`` points at/after the '('."""
+    i = line.find("(", start)
+    if i < 0:
+        return ""
+    depth = 0
+    for j in range(i, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[i + 1: j]
+    return line[i + 1:]
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    hbm_floor: float = 0.0
+    coll: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    children: List[Tuple[str, float]] = dataclasses.field(
+        default_factory=list)
+    max_const: int = 0
+
+
+def _is_comp_header(line: str) -> bool:
+    if line.startswith((" ", "}", "//")) or "{" not in line:
+        return False
+    head = line.split("{")[0]
+    return "->" in head or head.lstrip().startswith(("ENTRY", "%"))
+
+
+def _parse_computations(hlo: str):
+    comps: Dict[str, CompStats] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    symbols: Dict[str, str] = {}
+
+    for line in hlo.splitlines():
+        if not line.strip():
+            continue
+        if _is_comp_header(line):
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)", line)
+            if not m:
+                continue
+            cur = m.group(2)
+            comps[cur] = CompStats()
+            symbols = {}
+            comps[cur].symbols = symbols  # type: ignore[attr-defined]
+            if m.group(1):
+                entry = cur
+            # parameters declared in the header: name: shape
+            head = line.split("->")[0]
+            for pm in PARAM_RE.finditer(head):
+                symbols[pm.group(1)] = pm.group(2)
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        st = comps[cur]
+        for cm in CONST_RE.finditer(line):
+            st.max_const = max(st.max_const, int(cm.group(1)))
+        m = OP_RE.match(line)
+        if not m:
+            continue
+        name, result_shape, opcode = m.groups()
+        symbols[name] = result_shape
+        args = _split_args(line, m.end() - 1)
+        operand_bytes = 0
+        for om in OPERAND_RE.finditer(args):
+            operand_bytes += _shape_bytes(symbols.get(om.group(1), ""))
+        if opcode == "dot":
+            out_elems, _ = _first_shape_elems(result_shape)
+            contract = 1
+            cd = LHS_C_RE.search(line)
+            lhs_name = OPERAND_RE.search(args)
+            if cd and lhs_name:
+                _, lhs_dims = _first_shape_elems(
+                    symbols.get(lhs_name.group(1), ""))
+                for ci in cd.group(1).split(","):
+                    if ci and int(ci) < len(lhs_dims):
+                        contract *= lhs_dims[int(ci)]
+            st.flops += 2.0 * out_elems * contract
+        if opcode in COLLECTIVES:
+            b = _shape_bytes(result_shape)
+            kind = opcode.replace("-start", "")
+            st.coll += b
+            st.coll_by_kind[kind] = st.coll_by_kind.get(kind, 0) + b
+        if opcode not in SKIP_TRAFFIC:
+            st.bytes += _shape_bytes(result_shape) + operand_bytes
+        if opcode in HBM_FLOOR_OPS:
+            # ops whose operands/results must cross HBM<->VMEM even under
+            # TPU fusion (elementwise chains fuse away; these do not)
+            st.hbm_floor += _shape_bytes(result_shape) + operand_bytes
+        wm = WHILE_RE.search(line)
+        if opcode == "while" and wm:
+            tm = TRIP_RE.search(line)
+            trip = float(tm.group(1)) if tm else -1.0
+            st.children.append(
+                (f"__while__|{wm.group(1)}|{wm.group(2)}|{trip}", 1.0))
+        else:
+            for cm in CALLS_RE.finditer(line):
+                st.children.append((cm.group(1), 1.0))
+            for cm in TO_APPLY_RE.finditer(line):
+                st.children.append((cm.group(1), 1.0))
+            bm = BRANCHES_RE.search(line)
+            if bm:
+                for br in bm.group(1).split(","):
+                    br = br.strip().lstrip("%")
+                    if br:
+                        st.children.append((br, 1.0))
+    if entry is None and comps:
+        entry = next(iter(comps))
+    return comps, entry
+
+
+def analyze_hlo(hlo: str) -> Dict[str, float]:
+    comps, entry = _parse_computations(hlo)
+    memo: Dict[str, Tuple] = {}
+    visiting = set()
+
+    def total(name: str):
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in visiting:
+            return (0.0, 0.0, 0.0, 0.0, {})
+        visiting.add(name)
+        st = comps[name]
+        f, b, h, c = st.flops, st.bytes, st.hbm_floor, st.coll
+        kinds = dict(st.coll_by_kind)
+        for child, mult in st.children:
+            if child.startswith("__while__|"):
+                _, cond, body, trip_s = child.split("|")
+                trip = float(trip_s)
+                if trip < 0:
+                    trip = float(
+                        max(comps.get(cond, CompStats()).max_const, 1))
+                cf, cb, ch, cc, ck = total(body)
+                df, db, dh, dc, dk = total(cond)
+                f += trip * cf + (trip + 1) * df
+                b += trip * cb + (trip + 1) * db
+                h += trip * ch + (trip + 1) * dh
+                c += trip * cc + (trip + 1) * dc
+                for k, v in ck.items():
+                    kinds[k] = kinds.get(k, 0) + trip * v
+            else:
+                cf, cb, ch, cc, ck = total(child)
+                f += mult * cf
+                b += mult * cb
+                h += mult * ch
+                c += mult * cc
+                for k, v in ck.items():
+                    kinds[k] = kinds.get(k, 0) + mult * v
+        visiting.discard(name)
+        memo[name] = (f, b, h, c, kinds)
+        return memo[name]
+
+    f, b, h, c, kinds = total(entry)
+    out = {"flops": f, "bytes": b, "hbm_floor_bytes": h,
+           "collective_bytes": c}
+    for k, v in kinds.items():
+        out[f"coll_{k}"] = v
+    return out

@@ -1,0 +1,2 @@
+"""Per-architecture configs (+ the paper's own RangeReach workload)."""
+from .registry import ARCHS, all_cells, arch_names, get_arch

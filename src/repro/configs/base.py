@@ -1,0 +1,407 @@
+"""Architecture/cell registry used by smoke tests, dry-runs and rooflines.
+
+An ``ArchSpec`` names an architecture, its family, a config factory (full
+or reduced), and its shape cells.  A ``Cell`` knows how to produce, for a
+given mesh:
+
+    fn         — the step to lower (train_step / prefill / decode_step /
+                 serve / retrieval scoring)
+    args       — matching ShapeDtypeStructs **with NamedShardings
+                 attached** (no allocation; the dry-run contract)
+
+Graph-shape dims are rounded up to multiples of 512 so every sharded dim
+divides the (16,16)/(2,16,16) meshes — arena padding with masks, exactly
+like the R-tree arenas in the core library.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..distributed.sharding import (
+    MeshAxes,
+    lm_param_spec,
+    mlp_param_spec,
+    opt_state_specs,
+    param_specs,
+)
+from ..train.optim import AdamWConfig, adamw_init
+from ..train.steps import make_train_step
+
+
+def round_up(x: int, k: int = 512) -> int:
+    return ((x + k - 1) // k) * k
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, spec)
+    )
+
+
+def _attach(sds_tree, spec_tree, mesh):
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)
+        ),
+        sds_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    builder: Callable[[Mesh, MeshAxes], Tuple[Callable, Tuple]]
+
+    def build(self, mesh: Mesh, axes: MeshAxes):
+        return self.builder(mesh, axes)
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    name: str
+    family: str                       # lm | gnn | recsys
+    make_config: Callable[..., Any]   # make_config(reduced=False)
+    cells: Dict[str, Cell]
+    notes: str = ""
+
+
+# ==========================================================================
+# LM family
+# ==========================================================================
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def _lm_params_sds(cfg, mesh, axes):
+    from ..models.lm import init_params
+
+    sds = jax.eval_shape(partial(init_params, cfg=cfg), jax.random.PRNGKey(0))
+    specs = param_specs(sds, lm_param_spec, axes, mesh)
+    return _attach(sds, specs, mesh), specs
+
+
+def _lm_train_builder(cfg_fn, seq, batch):
+    def build(mesh: Mesh, axes: MeshAxes):
+        from ..models.lm import lm_loss
+
+        cfg = cfg_fn()
+        p_sds, pspecs = _lm_params_sds(cfg, mesh, axes)
+        o_sds = jax.eval_shape(adamw_init, p_sds)
+        ospecs = opt_state_specs(o_sds, p_sds, pspecs, axes, mesh)
+        o_sds = _attach(o_sds, ospecs, mesh)
+        bspec = P(axes.data, None)
+        b_sds = {
+            "tokens": _sds((batch, seq), jnp.int32, mesh, bspec),
+            "labels": _sds((batch, seq), jnp.int32, mesh, bspec),
+        }
+        act_spec = P(axes.data, None, None)
+        opt_cfg = AdamWConfig()
+        step = make_train_step(
+            lambda p, b: lm_loss(
+                p, b, cfg, mesh=mesh, act_spec=act_spec, remat=True
+            ),
+            opt_cfg,
+        )
+        return step, (p_sds, o_sds, b_sds)
+
+    return build
+
+
+def _lm_prefill_builder(cfg_fn, seq, batch):
+    def build(mesh: Mesh, axes: MeshAxes):
+        from ..models.lm import prefill
+
+        cfg = cfg_fn()
+        p_sds, _ = _lm_params_sds(cfg, mesh, axes)
+        t_sds = _sds((batch, seq), jnp.int32, mesh, P(axes.data, None))
+        act_spec = P(axes.data, None, None)
+
+        def fn(params, tokens):
+            return prefill(
+                params, tokens, cfg, max_len=seq, mesh=mesh,
+                act_spec=act_spec,
+            )
+
+        return fn, (p_sds, t_sds)
+
+    return build
+
+
+def _lm_decode_builder(cfg_fn, seq, batch):
+    def build(mesh: Mesh, axes: MeshAxes):
+        from ..models.lm import decode_step, init_cache
+
+        cfg = cfg_fn()
+        p_sds, _ = _lm_params_sds(cfg, mesh, axes)
+        c_sds = jax.eval_shape(
+            partial(init_cache, cfg, batch, seq)
+        )
+        tp = axes.model_size(mesh)
+        dsize = axes.data_size(mesh)
+
+        def cache_spec(leaf_sds):
+            shp = leaf_sds.shape
+            if len(shp) == 0:
+                return P()
+            # layouts: (R, B, L, ...) stacked or (B, L, ...) unstacked
+            parts = [None] * len(shp)
+            bi = len(shp) - (3 if len(shp) in (3, 4) else 4)
+            # find batch dim: it equals `batch`
+            for i, d in enumerate(shp):
+                if d == batch and batch % dsize == 0 and batch >= dsize:
+                    parts[i] = axes.data
+                    bi = i
+                    break
+            # sequence dim: first dim after batch divisible by tp
+            for i in range(len(shp)):
+                if parts[i] is None and i != 0 and shp[i] % tp == 0 \
+                        and shp[i] >= tp and i > bi:
+                    parts[i] = axes.model
+                    break
+            return P(*parts)
+
+        cspecs = jax.tree.map(
+            cache_spec, c_sds,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+        c_sds = _attach(c_sds, cspecs, mesh)
+        tok_spec = P(axes.data) if batch % dsize == 0 and batch >= dsize \
+            else P()
+        t_sds = _sds((batch,), jnp.int32, mesh, tok_spec)
+
+        def fn(params, cache, token):
+            return decode_step(params, cache, token, cfg, mesh=mesh)
+
+        return fn, (p_sds, c_sds, t_sds)
+
+    return build
+
+
+def lm_cells(name: str, cfg_fn) -> Dict[str, Cell]:
+    out = {}
+    for shape, s in LM_SHAPES.items():
+        if s["kind"] == "train":
+            b = _lm_train_builder(cfg_fn, s["seq"], s["batch"])
+        elif s["kind"] == "prefill":
+            b = _lm_prefill_builder(cfg_fn, s["seq"], s["batch"])
+        else:
+            b = _lm_decode_builder(cfg_fn, s["seq"], s["batch"])
+        out[shape] = Cell(arch=name, shape=shape, kind=s["kind"], builder=b)
+    return out
+
+
+# ==========================================================================
+# GNN family
+# ==========================================================================
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(kind="train", n=2708, e=10556, f=1433,
+                          batched=False),
+    "minibatch_lg": dict(kind="train", n=1024 + 1024 * 15 + 1024 * 15 * 10,
+                         e=1024 * 15 + 1024 * 15 * 10, f=602,
+                         batched=False, sampled=True),
+    "ogb_products": dict(kind="train", n=2_449_029, e=61_859_140, f=100,
+                         batched=False),
+    "molecule": dict(kind="train", n=30, e=64, f=None, batched=True,
+                     batch=128),
+}
+
+
+def _gnn_batch_sds(arch: str, s: Dict, mesh: Mesh, axes: MeshAxes,
+                   triplet_factor: int = 2):
+    dsize_spec = P(axes.data)
+    if s["batched"]:
+        B, n, e = s["batch"], s["n"], s["e"]
+        lead = dsize_spec
+
+        def bs(shape, dtype):
+            return _sds((B,) + shape, dtype, mesh, P(axes.data))
+
+        batch = {
+            "pos": bs((n, 3), jnp.float32),
+            "species": bs((n,), jnp.int32),
+            "edge_src": bs((e,), jnp.int32),
+            "edge_dst": bs((e,), jnp.int32),
+            "edge_mask": bs((e,), jnp.bool_),
+            "node_mask": bs((n,), jnp.bool_),
+            "energy": bs((), jnp.float32),
+        }
+        if arch == "dimenet":
+            T = 256
+            batch["id_kj"] = bs((T,), jnp.int32)
+            batch["id_ji"] = bs((T,), jnp.int32)
+            batch["triplet_mask"] = bs((T,), jnp.bool_)
+        if arch == "graphcast":
+            f = 16
+            batch["feat"] = bs((n, f), jnp.float32)
+            batch["target"] = bs((n, f), jnp.float32)
+            batch.pop("energy")
+        return batch
+    n, e, f = round_up(s["n"]), round_up(s["e"]), s["f"]
+    node_spec = P(axes.data)
+    edge_spec = P(axes.data)
+    batch = {
+        "pos": _sds((n, 3), jnp.float32, mesh, node_spec),
+        "feat": _sds((n, f), jnp.float32, mesh, node_spec),
+        "edge_src": _sds((e,), jnp.int32, mesh, edge_spec),
+        "edge_dst": _sds((e,), jnp.int32, mesh, edge_spec),
+        "edge_mask": _sds((e,), jnp.bool_, mesh, edge_spec),
+        "node_mask": _sds((n,), jnp.bool_, mesh, node_spec),
+    }
+    if arch == "graphcast":
+        batch["target"] = _sds((n, f), jnp.float32, mesh, node_spec)
+    else:
+        batch["energy"] = _sds((), jnp.float32, mesh, P())
+    if arch == "dimenet":
+        T = round_up(min(triplet_factor * e, 1 << 26))
+        batch["id_kj"] = _sds((T,), jnp.int32, mesh, edge_spec)
+        batch["id_ji"] = _sds((T,), jnp.int32, mesh, edge_spec)
+        batch["triplet_mask"] = _sds((T,), jnp.bool_, mesh, edge_spec)
+    return batch
+
+
+def _gnn_loss(arch: str, module, cfg, batched: bool):
+    def graph_energy_loss(params, batch):
+        # geometric models on feature graphs: graph-scalar regression
+        pred = module.apply(params, batch, cfg)
+        return ((pred - batch["energy"]) ** 2, {})
+
+    def graphcast_loss(params, batch):
+        return (module.loss_fn(params, batch, cfg), {})
+
+    def batched_loss(params, batch):
+        if arch == "graphcast":
+            losses = jax.vmap(
+                lambda b: module.loss_fn(params, b, cfg))(batch)
+            return (losses.mean(), {})
+        # molecular losses vmap internally
+        return (module.loss_fn(params, batch, cfg), {})
+
+    if batched:
+        return batched_loss
+    if arch == "graphcast":
+        return graphcast_loss
+    return graph_energy_loss
+
+
+def _gnn_builder(name: str, module, cfg_fn, shape: str):
+    s = GNN_SHAPES[shape]
+
+    def build(mesh: Mesh, axes: MeshAxes):
+        # feature-graph cells need d_feat wired into the config
+        cfg = cfg_fn(d_feat=None if s["batched"] else s["f"],
+                     shape=shape)
+        p_sds = jax.eval_shape(
+            partial(module.init_params, cfg=cfg), jax.random.PRNGKey(0)
+        )
+        specs = param_specs(p_sds, mlp_param_spec, axes, mesh)
+        p_sds = _attach(p_sds, specs, mesh)
+        o_sds = jax.eval_shape(adamw_init, p_sds)
+        ospecs = opt_state_specs(o_sds, p_sds, specs, axes, mesh)
+        o_sds = _attach(o_sds, ospecs, mesh)
+        b_sds = _gnn_batch_sds(name, s, mesh, axes)
+        step = make_train_step(
+            _gnn_loss(name, module, cfg, s["batched"]), AdamWConfig()
+        )
+        return step, (p_sds, o_sds, b_sds)
+
+    return build
+
+
+def gnn_cells(name: str, module, cfg_fn) -> Dict[str, Cell]:
+    return {
+        shape: Cell(arch=name, shape=shape, kind=GNN_SHAPES[shape]["kind"],
+                    builder=_gnn_builder(name, module, cfg_fn, shape))
+        for shape in GNN_SHAPES
+    }
+
+
+# ==========================================================================
+# RecSys family (DIN)
+# ==========================================================================
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1,
+                           n_candidates=1_000_000),
+}
+
+
+def _din_batch_sds(B, S, mesh, axes, with_label=True):
+    bspec = P(axes.data)
+    b = {
+        "hist_items": _sds((B, S), jnp.int32, mesh, P(axes.data, None)),
+        "hist_mask": _sds((B, S), jnp.bool_, mesh, P(axes.data, None)),
+        "target_item": _sds((B,), jnp.int32, mesh, bspec),
+    }
+    if with_label:
+        b["label"] = _sds((B,), jnp.float32, mesh, bspec)
+    return b
+
+
+def _din_builder(cfg_fn, shape: str):
+    s = RECSYS_SHAPES[shape]
+
+    def build(mesh: Mesh, axes: MeshAxes):
+        from ..models.recsys import din
+
+        cfg = cfg_fn()
+        p_sds = jax.eval_shape(
+            partial(din.init_params, cfg=cfg), jax.random.PRNGKey(0)
+        )
+        specs = param_specs(p_sds, mlp_param_spec, axes, mesh)
+        p_sds = _attach(p_sds, specs, mesh)
+        if s["kind"] == "train":
+            o_sds = jax.eval_shape(adamw_init, p_sds)
+            ospecs = opt_state_specs(o_sds, p_sds, specs, axes, mesh)
+            o_sds = _attach(o_sds, ospecs, mesh)
+            b_sds = _din_batch_sds(s["batch"], cfg.seq_len, mesh, axes)
+            step = make_train_step(
+                lambda p, b: (din.loss_fn(p, b, cfg), {}), AdamWConfig()
+            )
+            return step, (p_sds, o_sds, b_sds)
+        if s["kind"] == "serve":
+            b_sds = _din_batch_sds(
+                s["batch"], cfg.seq_len, mesh, axes, with_label=False
+            )
+            return (lambda p, b: din.apply(p, b, cfg)), (p_sds, b_sds)
+        # retrieval: one user, C candidates sharded over all data axes
+        C = s["n_candidates"]
+        b_sds = {
+            "hist_items": _sds((cfg.seq_len,), jnp.int32, mesh, P()),
+            "hist_mask": _sds((cfg.seq_len,), jnp.bool_, mesh, P()),
+            "candidates": _sds((round_up(C, 8192),), jnp.int32, mesh,
+                               P(axes.data)),
+        }
+        return (lambda p, b: din.score_candidates(p, b, cfg)), (p_sds, b_sds)
+
+    return build
+
+
+def recsys_cells(name: str, cfg_fn) -> Dict[str, Cell]:
+    return {
+        shape: Cell(arch=name, shape=shape,
+                    kind=RECSYS_SHAPES[shape]["kind"],
+                    builder=_din_builder(cfg_fn, shape))
+        for shape in RECSYS_SHAPES
+    }

@@ -1,0 +1,41 @@
+"""Core library: the paper's contribution (2DReach) + baselines.
+
+Public API:
+    build_index(graph, method) / batch_query(index, us, rects)
+"""
+
+from .api import METHODS, batch_query, build_index, index_nbytes
+from .condensation import Condensation, condense
+from .georeach import GeoReachIndex, build_georeach
+from .graph import CSR, GeosocialGraph, build_csr, make_graph
+from .interval_labels import IntervalLabels, build_interval_labels
+from .oracle import rangereach_oracle, rangereach_oracle_batch, reachable_mask
+from .polygon import points_in_convex_polygon, polygon_oracle, polygon_query
+from .reachability import ClosureResult, closure_jax, closure_mbr_np, closure_np
+from .rtree import (
+    DEFAULT_FANOUT,
+    RTreeForest,
+    build_forest,
+    query_host,
+    query_host_collect,
+    query_jax_wavefront,
+)
+from .scc import compact_labels, same_partition, scc_jax, scc_np
+from .three_d_reach import ThreeDReachIndex, build_3dreach
+from .two_d_reach import BitRank, TwoDReachIndex, build_2dreach
+
+__all__ = [
+    "METHODS", "batch_query", "build_index", "index_nbytes",
+    "Condensation", "condense",
+    "GeoReachIndex", "build_georeach",
+    "CSR", "GeosocialGraph", "build_csr", "make_graph",
+    "IntervalLabels", "build_interval_labels",
+    "rangereach_oracle", "rangereach_oracle_batch", "reachable_mask",
+    "points_in_convex_polygon", "polygon_oracle", "polygon_query",
+    "ClosureResult", "closure_jax", "closure_mbr_np", "closure_np",
+    "DEFAULT_FANOUT", "RTreeForest", "build_forest", "query_host",
+    "query_host_collect", "query_jax_wavefront",
+    "compact_labels", "same_partition", "scc_jax", "scc_np",
+    "ThreeDReachIndex", "build_3dreach",
+    "BitRank", "TwoDReachIndex", "build_2dreach",
+]

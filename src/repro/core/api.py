@@ -1,0 +1,69 @@
+"""Unified front door for every RangeReach method.
+
+    index = build_index(graph, method)        # offline
+    ans   = batch_query(index, us, rects)     # online
+
+``method`` is one of METHODS (the five evaluated in the paper's Section 5
+plus the GeoReach baseline).  Benchmarks, examples and the serving stack
+all go through this module so the methods stay interchangeable.
+"""
+
+from __future__ import annotations
+
+from typing import Union
+
+import numpy as np
+
+from .georeach import GeoReachIndex, build_georeach
+from .graph import GeosocialGraph
+from .three_d_reach import ThreeDReachIndex, build_3dreach
+from .two_d_reach import TwoDReachIndex, build_2dreach
+
+METHODS = (
+    "2dreach",
+    "2dreach-comp",
+    "2dreach-pointer",
+    "3dreach",
+    "3dreach-rev",
+    "georeach",
+)
+
+AnyIndex = Union[TwoDReachIndex, ThreeDReachIndex, GeoReachIndex]
+
+
+def build_index(graph: GeosocialGraph, method: str, **kw) -> AnyIndex:
+    method = method.lower()
+    if method == "2dreach":
+        return build_2dreach(graph, variant="base", **kw)
+    if method == "2dreach-comp":
+        return build_2dreach(graph, variant="comp", **kw)
+    if method == "2dreach-pointer":
+        return build_2dreach(graph, variant="pointer", **kw)
+    if method == "3dreach":
+        return build_3dreach(graph, variant="3d", **kw)
+    if method == "3dreach-rev":
+        return build_3dreach(graph, variant="3drev", **kw)
+    if method == "georeach":
+        return build_georeach(graph, **kw)
+    raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+
+
+def batch_query(index: AnyIndex, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
+    return index.query_batch(np.asarray(us), np.asarray(rects))
+
+
+def index_nbytes(index: AnyIndex) -> dict:
+    """Size decomposition mirroring the paper's Table 4 parentheses."""
+    if isinstance(index, TwoDReachIndex):
+        return {
+            "rtree": index.nbytes_rtree(),
+            "aux": index.nbytes_pointers(),
+            "total": index.nbytes_total(),
+        }
+    if isinstance(index, ThreeDReachIndex):
+        return {
+            "rtree": index.nbytes_rtree(),
+            "aux": index.nbytes_labels(),
+            "total": index.nbytes_total(),
+        }
+    return {"rtree": 0, "aux": index.nbytes_total(), "total": index.nbytes_total()}

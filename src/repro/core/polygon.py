@@ -1,0 +1,79 @@
+"""Convex-polygon query regions — the paper's footnote 2 extension.
+
+"Without loss of generality, this paper assumes an axis-aligned rectangle
+for querying. However, the proposed method can be easily extended to
+handle other types of geometric objects, e.g., polygons."  This module
+makes that concrete for 2DReach: the R-tree probe runs with the
+polygon's bounding box (the MBR machinery is unchanged), candidate hits
+are then filtered by exact point-in-convex-polygon half-plane tests —
+all vectorised.
+
+    ans = polygon_query(index, u, vertices)      # (k, 2) CCW convex hull
+"""
+
+from __future__ import annotations
+
+from typing import Iterable
+
+import numpy as np
+
+from .oracle import reachable_mask
+from .rtree import query_host_collect
+from .two_d_reach import TwoDReachIndex
+
+
+def _ccw(vertices: np.ndarray) -> np.ndarray:
+    """Ensure counter-clockwise orientation."""
+    v = np.asarray(vertices, dtype=np.float64).reshape(-1, 2)
+    area2 = np.sum(
+        v[:, 0] * np.roll(v[:, 1], -1) - np.roll(v[:, 0], -1) * v[:, 1]
+    )
+    return v if area2 >= 0 else v[::-1]
+
+
+def points_in_convex_polygon(pts: np.ndarray, vertices: np.ndarray
+                             ) -> np.ndarray:
+    """(n, 2) points inside/on a convex polygon (any vertex order)."""
+    v = _ccw(vertices)
+    pts = np.asarray(pts, dtype=np.float64).reshape(-1, 2)
+    inside = np.ones(len(pts), dtype=bool)
+    for i in range(len(v)):
+        a, b = v[i], v[(i + 1) % len(v)]
+        cross = (b[0] - a[0]) * (pts[:, 1] - a[1]) \
+            - (b[1] - a[1]) * (pts[:, 0] - a[0])
+        inside &= cross >= -1e-9
+    return inside
+
+
+def polygon_bbox(vertices: np.ndarray) -> np.ndarray:
+    v = np.asarray(vertices, dtype=np.float32).reshape(-1, 2)
+    return np.array(
+        [v[:, 0].min(), v[:, 1].min(), v[:, 0].max(), v[:, 1].max()],
+        dtype=np.float32,
+    )
+
+
+def polygon_query(index: TwoDReachIndex, u: int, vertices) -> bool:
+    """RangeReach with a convex polygon region (Alg. 2 + exact filter)."""
+    bbox = polygon_bbox(vertices)
+    if index.excluded[u]:
+        return bool(points_in_convex_polygon(
+            index.coords[u][None], vertices)[0])
+    tid = int(index.lookup_tree(np.array([u]))[0])
+    if tid < 0:
+        return False
+    # bbox prefilter through the R-tree, exact half-plane postfilter
+    cand = query_host_collect(index.forest, tid, bbox)
+    if len(cand) == 0:
+        return False
+    return bool(points_in_convex_polygon(
+        index.coords[cand], vertices).any())
+
+
+def polygon_oracle(graph, u: int, vertices) -> bool:
+    seen = reachable_mask(graph, u)
+    ids = np.nonzero(seen & graph.spatial_mask)[0]
+    if len(ids) == 0:
+        return False
+    return bool(points_in_convex_polygon(
+        graph.coords[ids], vertices).any())

@@ -1,0 +1,358 @@
+"""Reachable-spatial-set closure over the SCC condensation (paper Alg. 1).
+
+The paper merges per-component ``std::set``s while walking the condensation
+in reverse topological order.  The dense, data-parallel equivalent used here
+represents every component's reachable spatial set as a row of a packed
+**uint32 bitset matrix** ``(rows, W)`` with ``W = ceil(p / 32)`` and one
+column per spatial vertex.  "Merging a child's set" is then a bitwise OR of
+rows, and one *level* of the DAG (all components at equal longest-path
+depth) is merged in a single vectorised scatter-OR sweep:
+
+    for L in levels descending:                 # reverse topological order
+        bits[src at L] |= bits[dst]             # np.bitwise_or.at
+
+Space note: the worst case O(d*p) bits is the paper's Theorem 4.1.  Exactly
+as in the paper it does not materialise in practice because (a) *leaf*
+components (no DAG out-edges — e.g. every venue sink) never get a row, their
+reachable set is their own member list, and (b) the compressed variants
+exclude spatial sinks from the decomposition entirely.
+
+Three implementations:
+
+* ``closure_np``       — host build path (default), per-level scatter-OR.
+* ``closure_jax``      — jit fixpoint on a boolean (rows, p) matrix
+                         (``.at[].max`` scatter); small-graph device path.
+* ``closure_bitset_mm``— packed fixpoint R <- own | A.R using the
+                         ``bitset_mm`` Pallas kernel (OR-AND matmul over
+                         uint32 words tiled in VMEM); the TPU build path.
+
+plus ``closure_mbr_np`` which tracks only per-component reachability MBRs
+(min/max scatter) — the GeoReach baseline's R-MBR tier rides on it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .condensation import Condensation
+
+
+# --------------------------------------------------------------------------
+# Bit packing helpers
+# --------------------------------------------------------------------------
+
+def n_words(p: int) -> int:
+    return (p + 31) // 32
+
+
+def pack_rows(rows_bool: np.ndarray) -> np.ndarray:
+    """(r, p) bool -> (r, W) uint32, bit j of word w = column 32*w + j."""
+    rows_bool = np.asarray(rows_bool, dtype=bool)
+    r, p = rows_bool.shape
+    W = n_words(p)
+    padded = np.zeros((r, W * 32), dtype=bool)
+    padded[:, :p] = rows_bool
+    b = padded.reshape(r, W, 4, 8)
+    # np.packbits packs MSB-first per byte; flip for LSB-first bit order
+    by = np.packbits(b[..., ::-1], axis=-1).reshape(r, W, 4)
+    return by.view(np.uint32).reshape(r, W) if by.flags.c_contiguous else (
+        np.ascontiguousarray(by).view(np.uint32).reshape(r, W))
+
+
+def unpack_rows(bits: np.ndarray, p: int) -> np.ndarray:
+    """(r, W) uint32 -> (r, p) bool."""
+    bits = np.asarray(bits, dtype=np.uint32)
+    r, W = bits.shape
+    by = np.ascontiguousarray(bits).view(np.uint8).reshape(r, W, 4)
+    bl = np.unpackbits(by, axis=-1).reshape(r, W, 4, 8)[..., ::-1]
+    return bl.reshape(r, W * 32)[:, :p].astype(bool)
+
+
+def set_bits(bits: np.ndarray, row: np.ndarray, col: np.ndarray) -> None:
+    """In-place bits[row] |= (1 << col)."""
+    np.bitwise_or.at(
+        bits, (row, col // 32), (np.uint32(1) << (col % 32).astype(np.uint32))
+    )
+
+
+def row_popcount(bits: np.ndarray) -> np.ndarray:
+    """(r, W) uint32 -> (r,) int64 number of set bits."""
+    by = np.ascontiguousarray(bits).view(np.uint8)
+    return np.unpackbits(by.reshape(bits.shape[0], -1), axis=1).sum(
+        axis=1, dtype=np.int64
+    )
+
+
+def nonzero_cols(bits_row: np.ndarray, p: int) -> np.ndarray:
+    """Columns set in a single (W,) uint32 row."""
+    return np.nonzero(unpack_rows(bits_row[None, :], p)[0])[0].astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# Closure input: which components get bitset rows
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ClosureResult:
+    """Per-component reachable spatial sets in split representation.
+
+    Components with DAG out-edges ("interior") have a packed bitset row;
+    leaf components (the overwhelming majority in LBSNs — every venue sink)
+    are represented implicitly by their own member column lists.
+    """
+
+    p: int                       # number of spatial columns
+    spatial_vertex: np.ndarray   # (p,) vertex id of each column
+    col_of_vertex: np.ndarray    # (n,) column id or -1
+    interior_row: np.ndarray     # (d,) row idx into ``bits`` or -1 (leaf)
+    bits: np.ndarray             # (n_interior, W) uint32 closure rows
+    own_indptr: np.ndarray       # (d+1,) CSR of own spatial columns per comp
+    own_cols: np.ndarray         # (sum,) int32 columns
+
+    def comp_set_cols(self, c: int) -> np.ndarray:
+        """Reachable spatial columns of component ``c`` (exact)."""
+        r = self.interior_row[c]
+        if r >= 0:
+            return nonzero_cols(self.bits[r], self.p)
+        return self.own_cols[self.own_indptr[c]:self.own_indptr[c + 1]]
+
+    def comp_nonempty(self) -> np.ndarray:
+        """(d,) bool — component has at least one reachable spatial vertex."""
+        d = len(self.interior_row)
+        out = np.zeros(d, dtype=bool)
+        leaf = self.interior_row < 0
+        own_cnt = np.diff(self.own_indptr)
+        out[leaf] = own_cnt[leaf] > 0
+        inter = ~leaf
+        if inter.any():
+            pc = row_popcount(self.bits)
+            out[inter] = pc[self.interior_row[inter]] > 0
+        return out
+
+
+def _own_columns(
+    cond: Condensation,
+    n: int,
+    spatial_vertex: np.ndarray,
+    col_of_vertex: np.ndarray,
+    extra_vertex_comp: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """CSR (indptr, cols) of own spatial columns per component.
+
+    ``extra_vertex_comp`` optionally adds (vertex_ids, comp_ids) pairs — the
+    compressed variant's "spatial neighbours of n" (Alg. 1 line 4 modified).
+    """
+    comp_ids: List[np.ndarray] = []
+    cols: List[np.ndarray] = []
+    in_dec = cond.comp[spatial_vertex] >= 0
+    sv = spatial_vertex[in_dec]
+    if sv.size:
+        comp_ids.append(cond.comp[sv].astype(np.int64))
+        cols.append(col_of_vertex[sv].astype(np.int64))
+    if extra_vertex_comp is not None:
+        ev, ec = extra_vertex_comp
+        if len(ev):
+            comp_ids.append(np.asarray(ec, dtype=np.int64))
+            cols.append(col_of_vertex[np.asarray(ev)].astype(np.int64))
+    if comp_ids:
+        comp_all = np.concatenate(comp_ids)
+        col_all = np.concatenate(cols)
+        # dedup (comp, col) pairs
+        key = comp_all * np.int64(len(spatial_vertex) + 1) + col_all
+        _, idx = np.unique(key, return_index=True)
+        comp_all, col_all = comp_all[idx], col_all[idx]
+        order = np.argsort(comp_all, kind="stable")
+        comp_all, col_all = comp_all[order], col_all[order]
+    else:
+        comp_all = np.zeros(0, dtype=np.int64)
+        col_all = np.zeros(0, dtype=np.int64)
+    indptr = np.zeros(cond.n_comps + 1, dtype=np.int64)
+    np.cumsum(np.bincount(comp_all, minlength=cond.n_comps), out=indptr[1:])
+    return indptr, col_all.astype(np.int32)
+
+
+def closure_np(
+    cond: Condensation,
+    n: int,
+    spatial_vertex: np.ndarray,
+    extra_vertex_comp: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+    chunk_edges: int = 1 << 22,
+) -> ClosureResult:
+    """Host reverse-topological closure (paper Alg. 1 lines 6-9).
+
+    Parameters
+    ----------
+    cond:            SCC condensation (possibly of the social subgraph only).
+    spatial_vertex:  (p,) vertex ids that define bitset columns.
+    extra_vertex_comp: compressed-variant extra own-members, see
+                     ``_own_columns``.
+    """
+    p = len(spatial_vertex)
+    d = cond.n_comps
+    col_of_vertex = np.full(n, -1, dtype=np.int64)
+    col_of_vertex[spatial_vertex] = np.arange(p, dtype=np.int64)
+
+    own_indptr, own_cols = _own_columns(
+        cond, n, spatial_vertex, col_of_vertex, extra_vertex_comp
+    )
+
+    # interior = has at least one DAG out-edge
+    interior = np.zeros(d, dtype=bool)
+    if cond.dag_edges.size:
+        interior[cond.dag_edges[:, 0]] = True
+    interior_ids = np.nonzero(interior)[0]
+    interior_row = np.full(d, -1, dtype=np.int32)
+    interior_row[interior_ids] = np.arange(len(interior_ids), dtype=np.int32)
+
+    W = n_words(p)
+    bits = np.zeros((len(interior_ids), W), dtype=np.uint32)
+
+    # seed interior rows with own columns (vectorised over all comps)
+    if own_cols.size:
+        own_comp = np.repeat(
+            np.arange(d, dtype=np.int64), np.diff(own_indptr)
+        )
+        m0 = interior_row[own_comp] >= 0
+        if m0.any():
+            rr = interior_row[own_comp[m0]]
+            cc = own_cols[m0].astype(np.int64)
+            np.bitwise_or.at(
+                bits, (rr, cc // 32), np.uint32(1) << (cc % 32).astype(np.uint32)
+            )
+
+    if cond.dag_edges.size:
+        edges = cond.edges_by_level_desc()
+        src_lv = cond.level[edges[:, 0]]
+        # process one level at a time (descending); within a level the
+        # scatter-OR is order-independent because no edge joins two comps
+        # of the same level
+        boundaries = np.nonzero(np.diff(-src_lv))[0] + 1
+        seg_starts = np.concatenate([[0], boundaries, [len(edges)]])
+        leaf = ~interior
+        own_cnt = np.diff(own_indptr)
+        for s, e in zip(seg_starts[:-1], seg_starts[1:]):
+            for cs in range(s, e, chunk_edges):
+                ce = min(cs + chunk_edges, e)
+                src = edges[cs:ce, 0]
+                dst = edges[cs:ce, 1]
+                rs = interior_row[src]
+                # contribution of interior children: OR their rows
+                di = interior_row[dst]
+                m = di >= 0
+                if m.any():
+                    np.bitwise_or.at(bits, (rs[m],), bits[di[m]])
+                # contribution of leaf children: OR their own columns
+                lm = leaf[dst] & (own_cnt[dst] > 0)
+                if lm.any():
+                    ls, ld = src[lm], dst[lm]
+                    cnt = own_cnt[ld]
+                    rep_row = np.repeat(interior_row[ls], cnt)
+                    starts = own_indptr[ld]
+                    slot = np.repeat(starts, cnt) + _ragged_arange(cnt)
+                    cc = own_cols[slot]
+                    np.bitwise_or.at(
+                        bits,
+                        (rep_row, cc // 32),
+                        np.uint32(1) << (cc % 32).astype(np.uint32),
+                    )
+
+    return ClosureResult(
+        p=p,
+        spatial_vertex=np.asarray(spatial_vertex, dtype=np.int32),
+        col_of_vertex=col_of_vertex,
+        interior_row=interior_row,
+        bits=bits,
+        own_indptr=own_indptr,
+        own_cols=own_cols,
+    )
+
+
+def _ragged_arange(counts: np.ndarray) -> np.ndarray:
+    counts = counts.astype(np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    return np.arange(total, dtype=np.int64) - np.repeat(starts, counts)
+
+
+# --------------------------------------------------------------------------
+# MBR closure (GeoReach baseline substrate)
+# --------------------------------------------------------------------------
+
+def closure_mbr_np(
+    cond: Condensation,
+    coords: np.ndarray,
+    spatial_mask: np.ndarray,
+) -> np.ndarray:
+    """(d, 4) reachability MBR [xmin, ymin, xmax, ymax] per component;
+    components with empty reachable sets get an empty box (min > max)."""
+    d = cond.n_comps
+    mbr = np.empty((d, 4), dtype=np.float32)
+    mbr[:, :2] = np.inf
+    mbr[:, 2:] = -np.inf
+    sv = np.nonzero(spatial_mask)[0]
+    if sv.size:
+        c = cond.comp[sv]
+        keep = c >= 0
+        c, pts = c[keep], coords[sv[keep]]
+        np.minimum.at(mbr[:, 0], c, pts[:, 0])
+        np.minimum.at(mbr[:, 1], c, pts[:, 1])
+        np.maximum.at(mbr[:, 2], c, pts[:, 0])
+        np.maximum.at(mbr[:, 3], c, pts[:, 1])
+    if cond.dag_edges.size:
+        # process one level at a time: np.minimum.at gathers dst values at
+        # call time, so multi-hop propagation requires the same per-level
+        # segmentation as the bitset closure
+        edges = cond.edges_by_level_desc()
+        src_lv = cond.level[edges[:, 0]]
+        boundaries = np.nonzero(np.diff(src_lv))[0] + 1
+        seg_starts = np.concatenate([[0], boundaries, [len(edges)]])
+        for s, e in zip(seg_starts[:-1], seg_starts[1:]):
+            src, dst = edges[s:e, 0], edges[s:e, 1]
+            np.minimum.at(mbr[:, 0], src, mbr[dst, 0])
+            np.minimum.at(mbr[:, 1], src, mbr[dst, 1])
+            np.maximum.at(mbr[:, 2], src, mbr[dst, 2])
+            np.maximum.at(mbr[:, 3], src, mbr[dst, 3])
+    return mbr
+
+
+# --------------------------------------------------------------------------
+# Device (jit) closure — boolean fixpoint
+# --------------------------------------------------------------------------
+
+def closure_jax(
+    n_comps: int,
+    dag_edges: np.ndarray,
+    own_bool: np.ndarray,
+    n_sweeps: int,
+) -> np.ndarray:
+    """jit boolean closure: rows (d, p) bool; ``n_sweeps`` scatter-max
+    sweeps (>= DAG depth guarantees convergence; one sweep propagates at
+    least one DAG hop)."""
+    if dag_edges.size == 0:
+        return np.asarray(own_bool, dtype=bool)
+    out = _closure_jax_impl(
+        jnp.asarray(dag_edges, jnp.int32),
+        jnp.asarray(own_bool, bool),
+        n_sweeps,
+    )
+    return np.asarray(out)
+
+
+@jax.jit
+def _closure_sweep(bits, src, dst):
+    return bits.at[src].max(bits[dst])
+
+
+def _closure_jax_impl(edges, bits, n_sweeps):
+    src, dst = edges[:, 0], edges[:, 1]
+    for _ in range(int(n_sweeps)):
+        bits = _closure_sweep(bits, src, dst)
+    return bits

@@ -1,0 +1,364 @@
+"""2DReach — the paper's contribution (Section 4).
+
+Three variants, exactly as evaluated in the paper's Section 5:
+
+* ``base``     2DREACH          — SCC decomposition of the *full* graph,
+  one 2-D R-tree per component over its reachable spatial set (no
+  sharing), a per-vertex pointer to the component's tree.
+* ``comp``     2DREACH-COMP     — spatial sinks excluded from the
+  decomposition (Alg. 1 line 4 includes spatial out-neighbours instead);
+  components with empty reachable sets are dropped; a parent whose
+  reachable set equals one of its children's shares the child's R-tree.
+  Queries special-case spatial query vertices (Alg. 2).
+* ``pointer``  2DREACH-POINTER  — like ``comp`` but pointers are stored
+  only per component-with-a-tree, located through a bit vector + rank
+  (popcount) structure rather than a per-vertex array.  Smallest index,
+  ~30% slower lookups (the paper's Figure 3 trade-off).
+
+Beyond-paper option ``dedup="global"`` shares trees between *any* two
+components with identical reachable sets (not only parent/child); the
+paper's Table 2 "distinct R-trees" statistic corresponds to
+``dedup="paper"``.
+
+Build is host-side (NumPy — the index build is offline, exactly as in the
+paper); the query path has a host engine and a jit/Pallas engine (see
+``core.rtree`` and ``kernels.range_query``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .condensation import Condensation, condense
+from .graph import GeosocialGraph
+from .reachability import ClosureResult, closure_np, nonzero_cols, unpack_rows
+from .rtree import DEFAULT_FANOUT, RTreeForest, build_forest, query_host
+from .scc import scc_np
+
+
+# --------------------------------------------------------------------------
+# Bit-vector + rank (the Pointer variant's lookup structure)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BitRank:
+    """Succinct membership + rank over [0, d): ``rank(i)`` = number of set
+    bits strictly below i.  One uint32 word per 32 ids plus one int32
+    exclusive-prefix popcount per word."""
+
+    bits: np.ndarray   # (ceil(d/32),) uint32
+    rank: np.ndarray   # (ceil(d/32),) int32 — popcount of all lower words
+
+    @classmethod
+    def from_mask(cls, mask: np.ndarray) -> "BitRank":
+        d = len(mask)
+        W = (d + 31) // 32
+        pad = np.zeros(W * 32, dtype=bool)
+        pad[:d] = mask
+        by = np.packbits(pad.reshape(W, 4, 8)[..., ::-1], axis=-1)
+        bits = np.ascontiguousarray(by.reshape(W, 4)).view(np.uint32).ravel()
+        pc = _popcount32(bits)
+        rank = np.zeros(W, dtype=np.int64)
+        np.cumsum(pc[:-1], out=rank[1:])
+        return cls(bits=bits, rank=rank.astype(np.int32))
+
+    def test_rank(self, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(member?, rank) for each id — vectorised popcount lookup, the
+        faithful reproduction of the Pointer variant's extra query work."""
+        ids = np.asarray(ids, dtype=np.int64)
+        w, b = ids // 32, (ids % 32).astype(np.uint32)
+        word = self.bits[w]
+        member = (word >> b) & np.uint32(1) > 0
+        below = word & ((np.uint32(1) << b) - np.uint32(1))
+        return member, self.rank[w].astype(np.int64) + _popcount32(below)
+
+    def nbytes(self) -> int:
+        return int(self.bits.nbytes + self.rank.nbytes)
+
+
+def _popcount32(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32)
+    x = x - ((x >> np.uint32(1)) & np.uint32(0x55555555))
+    x = (x & np.uint32(0x33333333)) + ((x >> np.uint32(2)) & np.uint32(0x33333333))
+    x = (x + (x >> np.uint32(4))) & np.uint32(0x0F0F0F0F)
+    return ((x * np.uint32(0x01010101)) >> np.uint32(24)).astype(np.int64)
+
+
+# --------------------------------------------------------------------------
+# Index container
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TwoDReachIndex:
+    variant: str                    # base | comp | pointer
+    n: int
+    coords: np.ndarray              # (n, 2)
+    excluded: np.ndarray            # (n,) bool — spatial sinks (comp/pointer)
+    vertex_comp: np.ndarray         # (n,) int32; -1 for excluded vertices
+    cond: Condensation
+    forest: RTreeForest
+    comp_tree: np.ndarray           # (d,) int32 tree id or -1
+    vertex_tree: Optional[np.ndarray]  # (n,) int64 per-vertex pointer
+    bitrank: Optional[BitRank]      # pointer variant lookup
+    tree_ptrs: Optional[np.ndarray]  # compacted (n_with_tree,) int32
+    stats: Dict[str, float]
+
+    # -- sizes (Table 4 decomposition) ------------------------------------
+    def nbytes_rtree(self) -> int:
+        return self.forest.nbytes_total()
+
+    def nbytes_pointers(self) -> int:
+        if self.variant == "pointer":
+            return int(self.bitrank.nbytes() + self.tree_ptrs.nbytes)
+        return int(self.vertex_tree.nbytes)
+
+    def nbytes_total(self) -> int:
+        return self.nbytes_rtree() + self.nbytes_pointers()
+
+    # -- queries -----------------------------------------------------------
+    def lookup_tree(self, u: np.ndarray) -> np.ndarray:
+        """(B,) vertex ids -> (B,) tree ids (-1: no tree / excluded)."""
+        u = np.asarray(u, dtype=np.int64)
+        if self.variant == "pointer":
+            c = self.vertex_comp[u]
+            ok = c >= 0
+            out = np.full(len(u), -1, dtype=np.int64)
+            if ok.any():
+                member, rank = self.bitrank.test_rank(np.maximum(c[ok], 0))
+                t = np.where(member, self.tree_ptrs[np.minimum(
+                    rank, len(self.tree_ptrs) - 1)], -1)
+                out[ok] = t
+            return out
+        return self.vertex_tree[u]
+
+    def query_batch(self, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
+        """Host batched RangeReach (Alg. 2). us (B,), rects (B, 4)."""
+        us = np.asarray(us, dtype=np.int64)
+        rects = np.asarray(rects, dtype=np.float32).reshape(len(us), 4)
+        ans = np.zeros(len(us), dtype=bool)
+        exc = self.excluded[us]
+        if exc.any():
+            pts = self.coords[us[exc]]
+            r = rects[exc]
+            ans[exc] = (
+                (pts[:, 0] >= r[:, 0]) & (pts[:, 0] <= r[:, 2])
+                & (pts[:, 1] >= r[:, 1]) & (pts[:, 1] <= r[:, 3])
+            )
+        rest = ~exc
+        if rest.any():
+            tid = self.lookup_tree(us[rest])
+            ans[rest] = query_host(self.forest, tid, rects[rest])
+        return ans
+
+    def query(self, u: int, rect) -> bool:
+        return bool(self.query_batch(np.array([u]), np.array([rect]))[0])
+
+
+# --------------------------------------------------------------------------
+# Build
+# --------------------------------------------------------------------------
+
+def build_2dreach(
+    graph: GeosocialGraph,
+    variant: str = "comp",
+    fanout: int = DEFAULT_FANOUT,
+    dedup: str = "paper",
+) -> TwoDReachIndex:
+    """Construct the 2DReach index (paper Alg. 1 + §4.1 compression)."""
+    assert variant in ("base", "comp", "pointer")
+    assert dedup in ("paper", "global", "none")
+    t_start = time.perf_counter()
+    n = graph.n_nodes
+    stats: Dict[str, float] = {}
+
+    # ---- decomposition ---------------------------------------------------
+    t0 = time.perf_counter()
+    if variant == "base":
+        excluded = np.zeros(n, dtype=bool)
+        dec_edges = graph.edges
+        include = None
+    else:
+        excluded = graph.spatial_sink_mask()
+        e = graph.edges
+        keep = ~(excluded[e[:, 0]] | excluded[e[:, 1]])
+        dec_edges = e[keep]
+        include = ~excluded
+    labels = scc_np(n, dec_edges)
+    cond = condense(n, dec_edges, labels, include_mask=include)
+    stats["t_scc"] = time.perf_counter() - t0
+
+    # ---- reachable-set closure (Alg. 1) ----------------------------------
+    t0 = time.perf_counter()
+    spatial_ids = graph.spatial_ids
+    extra = None
+    if variant != "base":
+        # Alg. 1 line 4 (modified): excluded spatial out-neighbours join
+        # the component's own set
+        e = graph.edges
+        m = excluded[e[:, 1]] & ~excluded[e[:, 0]]
+        if m.any():
+            src_c = cond.comp[e[m, 0]]
+            ok = src_c >= 0
+            extra = (e[m, 1][ok], src_c[ok])
+    clo = closure_np(cond, n, spatial_ids, extra_vertex_comp=extra)
+    stats["t_closure"] = time.perf_counter() - t0
+
+    # ---- tree assignment (+ sharing) --------------------------------------
+    t0 = time.perf_counter()
+    d = cond.n_comps
+    comp_tree, tree_cols, n_shared = _assign_trees(
+        cond, clo, variant=variant, dedup=dedup
+    )
+    stats["t_assign"] = time.perf_counter() - t0
+
+    # ---- forest bulk load --------------------------------------------------
+    t0 = time.perf_counter()
+    lens = np.array([len(c) for c in tree_cols], dtype=np.int64)
+    cols_flat = (
+        np.concatenate(tree_cols) if tree_cols else np.zeros(0, np.int64)
+    ).astype(np.int64)
+    vid = clo.spatial_vertex[cols_flat]
+    pts = graph.coords[vid]
+    boxes = np.concatenate([pts, pts], axis=1)
+    tree_of_entry = np.repeat(np.arange(len(tree_cols)), lens)
+    ext = graph.spatial_extent()
+    extent = np.array([ext[0], ext[1], ext[2], ext[3]], dtype=np.float32)
+    forest = build_forest(
+        boxes, vid.astype(np.int32), tree_of_entry, len(tree_cols),
+        fanout=fanout, extent=extent,
+    )
+    stats["t_forest"] = time.perf_counter() - t0
+
+    # ---- pointers ----------------------------------------------------------
+    t0 = time.perf_counter()
+    vertex_tree: Optional[np.ndarray] = None
+    bitrank: Optional[BitRank] = None
+    tree_ptrs: Optional[np.ndarray] = None
+    if variant in ("base", "comp"):
+        vertex_tree = np.full(n, -1, dtype=np.int64)
+        inc = cond.comp >= 0
+        vertex_tree[inc] = comp_tree[cond.comp[inc]]
+    else:
+        has = comp_tree >= 0
+        bitrank = BitRank.from_mask(has)
+        tree_ptrs = comp_tree[has].astype(np.int32)
+        if len(tree_ptrs) == 0:
+            tree_ptrs = np.zeros(1, dtype=np.int32)  # rank-lookup safety
+    stats["t_pointers"] = time.perf_counter() - t0
+    stats["t_total"] = time.perf_counter() - t_start
+
+    # Table 2 statistics
+    nonspatial_comp = np.ones(d, dtype=bool)
+    sc = cond.comp[spatial_ids]
+    nonspatial_comp[sc[sc >= 0]] = False
+    stats["n_comps"] = float(d)
+    stats["user_comps"] = float(nonspatial_comp.sum())
+    stats["distinct_rtrees"] = float(len(tree_cols))
+    stats["shared_trees"] = float(n_shared)
+
+    return TwoDReachIndex(
+        variant=variant,
+        n=n,
+        coords=graph.coords,
+        excluded=excluded,
+        vertex_comp=cond.comp,
+        cond=cond,
+        forest=forest,
+        comp_tree=comp_tree,
+        vertex_tree=vertex_tree,
+        bitrank=bitrank,
+        tree_ptrs=tree_ptrs,
+        stats=stats,
+    )
+
+
+def _assign_trees(
+    cond: Condensation,
+    clo: ClosureResult,
+    variant: str,
+    dedup: str,
+) -> Tuple[np.ndarray, List[np.ndarray], int]:
+    """Map each component to a tree id; returns (comp_tree, per-tree column
+    lists, #components that share another's tree)."""
+    d = cond.n_comps
+    comp_tree = np.full(d, -1, dtype=np.int32)
+    nonempty = clo.comp_nonempty()
+    share = (variant != "base") and (dedup != "none")
+
+    # canonical set keys: sorted column arrays
+    own_cnt = np.diff(clo.own_indptr)
+
+    def comp_cols(c: int) -> np.ndarray:
+        return clo.comp_set_cols(c)
+
+    tree_cols: List[np.ndarray] = []
+    n_shared = 0
+
+    if not share:
+        for c in range(d):
+            if nonempty[c]:
+                comp_tree[c] = len(tree_cols)
+                tree_cols.append(comp_cols(c))
+        return comp_tree, tree_cols, 0
+
+    # children lists for parent-child sharing
+    if dedup == "paper":
+        # process children before parents (descending level)
+        order = np.argsort(-cond.level, kind="stable")
+        dag = cond.dag_edges
+        ch_indptr, ch = _csr(d, dag)
+        keys: Dict[int, bytes] = {}
+
+        def key_of(c: int) -> bytes:
+            k = keys.get(c)
+            if k is None:
+                k = np.ascontiguousarray(comp_cols(c)).tobytes()
+                keys[c] = k
+            return k
+
+        for c in order:
+            if not nonempty[c]:
+                continue
+            kc = key_of(c)
+            shared_t = -1
+            for cc in ch[ch_indptr[c]:ch_indptr[c + 1]]:
+                if comp_tree[cc] >= 0 and key_of(int(cc)) == kc:
+                    shared_t = comp_tree[cc]
+                    break
+            if shared_t >= 0:
+                comp_tree[c] = shared_t
+                n_shared += 1
+            else:
+                comp_tree[c] = len(tree_cols)
+                tree_cols.append(comp_cols(c))
+        return comp_tree, tree_cols, n_shared
+
+    # dedup == "global": one tree per distinct reachable set anywhere
+    seen: Dict[bytes, int] = {}
+    for c in range(d):
+        if not nonempty[c]:
+            continue
+        cc = comp_cols(c)
+        k = np.ascontiguousarray(cc).tobytes()
+        t = seen.get(k)
+        if t is None:
+            t = len(tree_cols)
+            seen[k] = t
+            tree_cols.append(cc)
+        else:
+            n_shared += 1
+        comp_tree[c] = t
+    return comp_tree, tree_cols, n_shared
+
+
+def _csr(d: int, edges: np.ndarray):
+    if edges.size == 0:
+        return np.zeros(d + 1, dtype=np.int64), np.zeros(0, dtype=np.int32)
+    order = np.argsort(edges[:, 0], kind="stable")
+    indptr = np.zeros(d + 1, dtype=np.int64)
+    np.cumsum(np.bincount(edges[order, 0], minlength=d), out=indptr[1:])
+    return indptr, edges[order, 1].astype(np.int32)

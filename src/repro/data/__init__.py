@@ -1,0 +1,15 @@
+"""Data substrate: synthetic LBSN graphs, query workloads, training
+pipelines, and the GraphSAGE-style neighbour sampler."""
+
+from .lbsn import SPECS, LBSNSpec, dataset_stats, generate_lbsn
+from .pipeline import ShardInfo, din_batches, lm_batches, molecule_batches
+from .queries import (
+    DEGREE_BUCKETS,
+    DEGREE_DEFAULT,
+    REGION_EXTENT_DEFAULT,
+    REGION_EXTENT_VALUES,
+    SELECTIVITY_VALUES,
+    workload,
+)
+from .registry import dataset_names, get_dataset
+from .sampler import SampledBlock, pad_block, sample_blocks

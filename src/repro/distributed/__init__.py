@@ -1,0 +1,17 @@
+from .checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from .elastic import reshard, run_with_recovery
+from .sharding import (
+    MeshAxes,
+    batch_spec,
+    lm_param_spec,
+    mlp_param_spec,
+    named,
+    opt_state_specs,
+    param_specs,
+    zero1_specs,
+)

@@ -1,0 +1,58 @@
+"""Elastic scaling + failure-recovery glue.
+
+Checkpoints store *logical* (unsharded) arrays, so a job can restart on a
+different mesh shape: ``reshard`` places a restored pytree onto the new
+mesh under the same partition rules (dims that no longer divide fall back
+to replication inside the rules themselves).
+
+``run_with_recovery`` is the supervisor loop used by launch/train.py:
+it retries the training segment after transient failures, restoring from
+the last committed checkpoint — the single-process stand-in for the
+cluster controller behaviour (restart-on-node-failure), with the same
+code path exercised by tests/test_checkpoint.py.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def reshard(tree: Any, mesh: Mesh, spec_tree: Any) -> Any:
+    """Place (host or device) arrays onto ``mesh`` per ``spec_tree``."""
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(
+        put, tree, spec_tree,
+        is_leaf=lambda s: not isinstance(s, (dict, list, tuple)),
+    )
+
+
+def run_with_recovery(
+    segment: Callable[[int], int],
+    *,
+    start_step: int,
+    max_failures: int = 3,
+    backoff_s: float = 0.5,
+) -> int:
+    """Run ``segment(step) -> next_step`` until it finishes, retrying after
+    exceptions up to ``max_failures`` times (the caller's segment function
+    re-restores from the last checkpoint on entry)."""
+    failures = 0
+    step = start_step
+    while True:
+        try:
+            return segment(step)
+        except KeyboardInterrupt:
+            raise
+        except Exception:
+            failures += 1
+            if failures > max_failures:
+                raise
+            time.sleep(backoff_s * (2 ** (failures - 1)))
+            # segment re-reads the last committed checkpoint itself

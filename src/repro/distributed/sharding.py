@@ -1,0 +1,181 @@
+"""Named-sharding rules: parameters, optimizer state (ZeRO-1), batches.
+
+Axis roles (see launch/mesh.py):
+    pod    — inter-pod data parallelism (the multi-pod dry-run axis)
+    data   — intra-pod data parallelism (+ ZeRO-1 optimizer sharding)
+    model  — tensor/expert parallelism
+
+Rules are name+shape pattern matchers producing PartitionSpecs; any dim
+not divisible by the axis size falls back to replication (e.g. gemma2's
+8 heads on a 16-way model axis — its FFN and vocab still shard).  Specs
+are padded with leading ``None`` for stacked (scanned) layer params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    data: Tuple[str, ...] = ("data",)     # ("pod", "data") multi-pod
+    model: str = "model"
+
+    def data_size(self, mesh: Mesh) -> int:
+        s = 1
+        for a in self.data:
+            s *= mesh.shape.get(a, 1)
+        return s
+
+    def model_size(self, mesh: Mesh) -> int:
+        return mesh.shape.get(self.model, 1)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _pad(spec: Tuple, ndim: int) -> P:
+    spec = tuple(spec)
+    assert len(spec) <= ndim, (spec, ndim)
+    return P(*((None,) * (ndim - len(spec)) + spec))
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+# --------------------------------------------------------------------------
+# LM parameter rules
+# --------------------------------------------------------------------------
+
+def lm_param_spec(path: str, shape: Tuple[int, ...], axes: MeshAxes,
+                  tp: int) -> P:
+    nd = len(shape)
+    m = axes.model
+
+    def last2(a, b):
+        return _pad((a, b), nd)
+
+    if path.endswith("embed/emb") or "lm_head/w" in path:
+        # vocab over model (vocab dim is first for embed, last for head)
+        if path.endswith("embed/emb"):
+            return last2(m if _div(shape[-2], tp) else None, None)
+        return last2(None, m if _div(shape[-1], tp) else None)
+    if "/attn/" in path:
+        name = path.rsplit("/", 1)[-1]
+        if name in ("wq", "wk", "wv", "wq_b", "wkv_b"):
+            return last2(None, m if _div(shape[-1], tp) else None)
+        if name == "wo":
+            return last2(m if _div(shape[-2], tp) else None, None)
+        return _pad((), nd)  # wq_a / wkv_a / norms: replicated
+    if "/ffn/" in path or "/mtp/" in path and path.endswith(("w_gu", "w_d")):
+        if path.endswith("w_gu"):       # (d, 2, f)
+            return _pad((None, None, m if _div(shape[-1], tp) else None), nd)
+        if path.endswith("w_d"):        # (f, d)
+            return last2(m if _div(shape[-2], tp) else None, None)
+    if "/moe/" in path:
+        name = path.rsplit("/", 1)[-1]
+        if name in ("w_gu", "w_d"):     # (E, d, f*) — experts over model
+            return _pad(
+                (m if _div(shape[-3], tp) else None, None, None), nd)
+        if name == "sh_gu":             # (d, 2, fs)
+            return _pad((None, None, m if _div(shape[-1], tp) else None), nd)
+        if name == "sh_d":              # (fs, d)
+            return last2(m if _div(shape[-2], tp) else None, None)
+        return _pad((), nd)             # router replicated
+    return _pad((), nd)                 # norms, scalars
+
+
+# --------------------------------------------------------------------------
+# Generic MLP-family rules (GNN / recsys)
+# --------------------------------------------------------------------------
+
+def mlp_param_spec(path: str, shape: Tuple[int, ...], axes: MeshAxes,
+                   tp: int) -> P:
+    nd = len(shape)
+    m = axes.model
+    name = path.rsplit("/", 1)[-1]
+    if name == "emb" and nd >= 2:
+        # embedding tables row-sharded (the recsys layout)
+        return _pad((m if _div(shape[-2], tp) else None, None), nd)
+    if name == "w" and nd >= 2:
+        # Megatron pairing inside MLPs: first layer col-shard, last row-shard
+        if "/l0/" in path:
+            return _pad((None, m if _div(shape[-1], tp) else None), nd)
+        # find the layer index: .../l{k}/w — row-shard the final projection
+        import re
+
+        mt = re.search(r"/l(\d+)/w$", path)
+        if mt is not None and _div(shape[-2], tp):
+            return _pad((m, None), nd)
+        return _pad((), nd)
+    if name in ("bilin",):
+        return _pad((), nd)
+    if name.startswith("so2_") or name in ("w_gu", "w_d"):
+        return _pad((), nd)
+    return _pad((), nd)
+
+
+# --------------------------------------------------------------------------
+# Application helpers
+# --------------------------------------------------------------------------
+
+def param_specs(
+    params: Any, rule: Callable[[str, Tuple[int, ...], MeshAxes, int], P],
+    axes: MeshAxes, mesh: Mesh,
+) -> Any:
+    tp = axes.model_size(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: rule(_path_str(path), x.shape, axes, tp), params
+    )
+
+
+def zero1_specs(params: Any, pspecs: Any, axes: MeshAxes, mesh: Mesh) -> Any:
+    """ZeRO-1: optimizer moments additionally sharded over the data axes
+    on the first dim that is still replicated and divisible."""
+    dsize = axes.data_size(mesh)
+
+    def one(x, spec: P):
+        parts = list(spec) + [None] * (x.ndim - len(spec))
+        for i, (dim, s) in enumerate(zip(x.shape, parts)):
+            if s is None and _div(dim, dsize) and dim >= dsize:
+                parts[i] = axes.data
+                break
+        return P(*parts)
+
+    return jax.tree.map(one, params, pspecs)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def batch_spec(axes: MeshAxes) -> P:
+    """Leading-dim data-parallel spec for host batches."""
+    return P(axes.data)
+
+
+def opt_state_specs(opt_state, params, pspecs, axes: MeshAxes, mesh: Mesh,
+                    zero1: bool = True):
+    """Specs for AdamWState(step, m, v)."""
+    from ..train.optim import AdamWState
+
+    mspec = zero1_specs(params, pspecs, axes, mesh) if zero1 else pspecs
+    return AdamWState(step=P(), m=mspec, v=jax.tree.map(lambda s: s, mspec))

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+range_query/  — batched AABB range probe over packed R-tree leaves
+                (the RangeReach online hot path).
+bitset_mm/    — packed uint32 boolean OR-AND matmul (the Alg. 1 closure
+                build step as a semiring matmul; + MXU variant in ops).
+segment_bag/  — fused EmbeddingBag gather+segment-sum (recsys/GNN
+                substrate; JAX has no native EmbeddingBag).
+
+Each: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
+wrapper), ref.py (pure-jnp oracle). Validated vs ref in interpret mode;
+see tests/test_kernels_*.py for the shape/dtype sweeps.
+"""

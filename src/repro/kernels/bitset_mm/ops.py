@@ -1,0 +1,97 @@
+"""jit'd wrappers for the packed boolean closure.
+
+* ``bitset_mm``        — one OR-AND matmul step (Pallas kernel, padded).
+* ``bitset_mm_mxu``    — the MXU alternative: unpack to bf16, real matmul,
+                          re-threshold, re-pack.  Trades 32x VMEM expansion
+                          of the operands for systolic-array throughput;
+                          wins for large d (see EXPERIMENTS.md §Perf).
+* ``closure_fixpoint`` — R <- OWN | A.R iterated ``n_iters`` (>= DAG
+                          depth) times: the TPU build path of paper Alg. 1.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import TI, TW, bitset_mm_pallas
+from .ref import bitset_mm_ref, pack_bits_jnp, unpack_bits_jnp
+
+
+def _pad_to(x: np.ndarray, rows: int, cols: int) -> np.ndarray:
+    out = np.zeros((rows, cols), dtype=x.dtype)
+    out[: x.shape[0], : x.shape[1]] = x
+    return out
+
+
+def bitset_mm(
+    a_bits: np.ndarray,
+    r_bits: np.ndarray,
+    *,
+    interpret: bool = True,
+    use_ref: bool = False,
+) -> np.ndarray:
+    """out[i, w] = OR_j (A[i, j] & R[j, w]); handles padding."""
+    d, Wd = a_bits.shape
+    dj, W = r_bits.shape
+    assert dj <= Wd * 32
+    dp = ((d + TI - 1) // TI) * TI
+    Wp = ((W + TW - 1) // TW) * TW
+    a = _pad_to(np.asarray(a_bits, np.uint32), dp, Wd)
+    r = _pad_to(np.asarray(r_bits, np.uint32), Wd * 32, Wp)
+    if use_ref:
+        out = bitset_mm_ref(jnp.asarray(a), jnp.asarray(r))
+    else:
+        out = bitset_mm_pallas(
+            jnp.asarray(a), jnp.asarray(r), interpret=interpret
+        )
+    return np.asarray(out)[:d, :W]
+
+
+@jax.jit
+def _mxu_step(a_bits, r_bits):
+    d, Wd = a_bits.shape
+    dj, W = r_bits.shape
+    a = unpack_bits_jnp(a_bits, dj).astype(jnp.bfloat16)
+    r = unpack_bits_jnp(r_bits, W * 32).astype(jnp.bfloat16)
+    prod = jax.lax.dot_general(
+        a, r, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    return pack_bits_jnp(prod > 0)
+
+
+def bitset_mm_mxu(a_bits: np.ndarray, r_bits: np.ndarray) -> np.ndarray:
+    """MXU path: bf16 matmul of unpacked bits, repacked.  Correct whenever
+    the per-output-dot true-count < 256 is NOT required: counts saturate
+    bf16 accumulation into f32, and we only test > 0, so any count works."""
+    return np.asarray(
+        _mxu_step(jnp.asarray(a_bits, jnp.uint32), jnp.asarray(r_bits, jnp.uint32))
+    )
+
+
+def closure_fixpoint(
+    own_bits: np.ndarray,   # (d, W) uint32 — own spatial columns per comp
+    a_bits: np.ndarray,     # (d, ceil(d/32)) uint32 — DAG adjacency, packed
+    n_iters: int,
+    *,
+    interpret: bool = True,
+    use_mxu: bool = False,
+) -> np.ndarray:
+    """R <- OWN | A.R iterated; returns the reachable-set bitset matrix.
+
+    ``n_iters`` must be >= the condensation's level count (longest path).
+    """
+    r = np.asarray(own_bits, np.uint32)
+    for _ in range(int(n_iters)):
+        step = (
+            bitset_mm_mxu(a_bits, r)
+            if use_mxu
+            else bitset_mm(a_bits, r, interpret=interpret)
+        )
+        nxt = np.bitwise_or(np.asarray(own_bits, np.uint32), step)
+        if np.array_equal(nxt, r):
+            break
+        r = nxt
+    return r

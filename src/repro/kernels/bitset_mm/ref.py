@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the bitset_mm kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def unpack_bits_jnp(bits: jnp.ndarray, n_cols: int) -> jnp.ndarray:
+    """(r, W) uint32 -> (r, n_cols) bool, LSB-first per word."""
+    r, W = bits.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    b = (bits[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return b.reshape(r, W * 32)[:, :n_cols] > 0
+
+
+def pack_bits_jnp(rows: jnp.ndarray) -> jnp.ndarray:
+    """(r, p) bool -> (r, ceil(p/32)) uint32, LSB-first per word."""
+    r, p = rows.shape
+    W = (p + 31) // 32
+    pad = jnp.zeros((r, W * 32), dtype=jnp.uint32)
+    pad = pad.at[:, :p].set(rows.astype(jnp.uint32))
+    lanes = pad.reshape(r, W, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(lanes << shifts[None, None, :], axis=-1).astype(jnp.uint32)
+
+
+def bitset_mm_ref(a_bits: jnp.ndarray, r_bits: jnp.ndarray) -> jnp.ndarray:
+    """out[i, w] = OR_j (A[i,j] & R[j, w]) — dense boolean semiring."""
+    d, Wd = a_bits.shape
+    dj, W = r_bits.shape
+    a = unpack_bits_jnp(a_bits, dj)              # (d, dj) bool
+    # boolean matmul per output bit: out_bool[i, c] = any_j a[i,j] & r[j,c]
+    r_bool = unpack_bits_jnp(r_bits, W * 32)     # (dj, W*32) bool
+    out_bool = (a.astype(jnp.float32) @ r_bool.astype(jnp.float32)) > 0
+    return pack_bits_jnp(out_bool)

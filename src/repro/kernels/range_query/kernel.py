@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: batched AABB range probe over packed R-tree leaves.
+
+The RangeReach hot path after 2DReach reduces a query to "does any leaf
+entry of tree t intersect rect R".  On TPU the winning layout is not a
+pointer descent but a **tiled scan with an OR-reduce**: queries are the
+sublane axis (TB=8), leaf entries the lane axis (TP=128), and each grid
+step tests a (TB x TP) tile of (query, entry) pairs on the VPU.  Each
+query carries its tree's ``[start, end)`` slice of the global entry
+arena; tiles outside the slice are masked.  The output is revisited
+across the entry-tile grid dimension (constant index map) so the OR
+accumulates in VMEM without touching HBM per tile.
+
+Layout notes (structure-of-arrays): entries and rects are passed as
+``(2*dim, N)`` — coordinate planes on the sublane axis, N on the lane
+axis — so a single tile holds 128 entries x all coordinates and the
+containment test is pure element-wise VPU work with no transposes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+TB = 8     # query tile (sublanes)
+TP = 128   # entry tile (lanes)
+
+
+def _range_query_kernel(e_ref, q_ref, qs_ref, qe_ref, o_ref, *, dim: int,
+                        tp: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    e = e_ref[...]                     # (2*dim, TP)  [mins..., maxs...]
+    q = q_ref[...]                     # (2*dim, TB)
+    gidx = j * tp + jax.lax.broadcasted_iota(jnp.int32, (1, tp), 1)
+    qs = qs_ref[...][:, None]          # (TB, 1)
+    qe = qe_ref[...][:, None]
+    valid = (gidx >= qs) & (gidx < qe)  # (TB, TP)
+
+    ok = valid
+    for a in range(dim):
+        # entry_min <= rect_max  and  entry_max >= rect_min
+        ok = ok & (e[a][None, :] <= q[dim + a][:, None])
+        ok = ok & (e[dim + a][None, :] >= q[a][:, None])
+    hit = jnp.any(ok, axis=1).astype(jnp.int32)   # (TB,)
+    o_ref[...] = o_ref[...] | hit
+
+
+@functools.partial(
+    jax.jit, static_argnames=("dim", "interpret", "tb", "tp")
+)
+def range_query_pallas(
+    entries_soa: jax.Array,   # (2*dim, P) float32, P % tp == 0
+    rects_soa: jax.Array,     # (2*dim, B) float32, B % tb == 0
+    qstart: jax.Array,        # (B,) int32 — entry-arena slice per query
+    qend: jax.Array,          # (B,) int32
+    *,
+    dim: int = 2,
+    interpret: bool = False,
+    tb: int = TB,
+    tp: int = TP,
+) -> jax.Array:
+    """Returns (B,) int32 (0/1) — any entry in [qstart, qend) intersecting."""
+    two_dim, P = entries_soa.shape
+    _, B = rects_soa.shape
+    assert two_dim == 2 * dim
+    assert P % tp == 0 and B % tb == 0, (P, B)
+    grid = (B // tb, P // tp)
+    return pl.pallas_call(
+        functools.partial(_range_query_kernel, dim=dim, tp=tp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((two_dim, tp), lambda i, j: (0, j)),
+            pl.BlockSpec((two_dim, tb), lambda i, j: (0, i)),
+            pl.BlockSpec((tb,), lambda i, j: (i,)),
+            pl.BlockSpec((tb,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tb,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        interpret=interpret,
+    )(entries_soa, rects_soa, qstart, qend)

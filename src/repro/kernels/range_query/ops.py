@@ -1,0 +1,83 @@
+"""jit'd public wrapper: RangeReach leaf probe on a packed R-tree forest.
+
+Bridges the host ``RTreeForest`` layout to the kernel's SoA layout:
+entries are transposed once at index-load time (offline), queries are
+padded to tile multiples per batch.  ``interpret=True`` on CPU; on TPU
+the same call compiles to the real kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import TB, TP, range_query_pallas
+from .ref import range_query_ref
+
+
+def forest_to_soa(forest) -> Tuple[np.ndarray, np.ndarray]:
+    """(2*dim, P_padded) SoA entry planes + (T+1,) offsets.
+
+    Padding entries are impossible boxes (min > max) so they never hit.
+    """
+    dim = forest.dim
+    P = len(forest.entries)
+    Pp = max(TP, ((P + TP - 1) // TP) * TP)
+    soa = np.empty((2 * dim, Pp), dtype=np.float32)
+    soa[:dim, :] = 1.0
+    soa[dim:, :] = 0.0
+    if P:
+        soa[:, :P] = forest.entries.T
+    return soa, forest.entry_off.astype(np.int32)
+
+
+def rects_to_soa(rects: np.ndarray, dim: int) -> np.ndarray:
+    """(B, 2*dim) -> (2*dim, B_padded); padding rects are empty boxes."""
+    B = len(rects)
+    Bp = max(TB, ((B + TB - 1) // TB) * TB)
+    soa = np.empty((2 * dim, Bp), dtype=np.float32)
+    soa[:dim, :] = 1.0
+    soa[dim:, :] = 0.0
+    if B:
+        soa[:, :B] = np.asarray(rects, dtype=np.float32).T
+    return soa
+
+
+def range_query_forest(
+    forest,
+    tree_ids: np.ndarray,
+    rects: np.ndarray,
+    *,
+    interpret: bool = True,
+    use_ref: bool = False,
+) -> np.ndarray:
+    """Batched leaf-scan probe of a forest (the Pallas query engine).
+
+    Equivalent to ``core.rtree.query_host`` — asserted in tests.
+    """
+    dim = forest.dim
+    B = len(tree_ids)
+    entries_soa, off = forest_to_soa(forest)
+    rsoa = rects_to_soa(rects, dim)
+    Bp = rsoa.shape[1]
+    tid = np.asarray(tree_ids, dtype=np.int64)
+    qs = np.zeros(Bp, dtype=np.int32)
+    qe = np.zeros(Bp, dtype=np.int32)
+    ok = tid >= 0
+    qs[:B][ok] = off[tid[ok]]
+    qe[:B][ok] = off[tid[ok] + 1]
+    fn = range_query_ref if use_ref else range_query_pallas
+    kw = {} if use_ref else {"interpret": interpret}
+    out = fn(
+        jnp.asarray(entries_soa),
+        jnp.asarray(rsoa),
+        jnp.asarray(qs),
+        jnp.asarray(qe),
+        dim=dim,
+        **kw,
+    )
+    return np.asarray(out)[:B].astype(bool)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the range_query kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def range_query_ref(entries_soa, rects_soa, qstart, qend, *, dim: int = 2):
+    """Same contract as range_query_pallas, computed densely.
+
+    entries_soa (2*dim, P), rects_soa (2*dim, B) -> (B,) int32 0/1.
+    """
+    P = entries_soa.shape[1]
+    gidx = jnp.arange(P, dtype=jnp.int32)[None, :]          # (1, P)
+    valid = (gidx >= qstart[:, None]) & (gidx < qend[:, None])
+    ok = valid
+    for a in range(dim):
+        ok = ok & (entries_soa[a][None, :] <= rects_soa[dim + a][:, None])
+        ok = ok & (entries_soa[dim + a][None, :] >= rects_soa[a][:, None])
+    return jnp.any(ok, axis=1).astype(jnp.int32)

@@ -1,0 +1,67 @@
+"""Public EmbeddingBag op built on the segment_bag kernel.
+
+``embedding_bag(table, indices, offsets)`` mirrors torch.nn.EmbeddingBag
+(mode 'sum' / 'mean'): bag b consumes ``indices[offsets[b]:offsets[b+1]]``.
+The host packs (indices, segments, weights) into tile-aligned arrays; the
+device path is the Pallas kernel (interpret on CPU) or the jnp ref — both
+asserted identical in tests.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .kernel import TL, segment_bag_pallas
+from .ref import segment_bag_ref
+
+
+def pack_bags(indices: np.ndarray, offsets: np.ndarray, tl: int = TL):
+    """-> (idx, seg, w) tile-aligned arrays for the kernel."""
+    indices = np.asarray(indices, dtype=np.int32)
+    offsets = np.asarray(offsets, dtype=np.int64)
+    B = len(offsets) - 1
+    L = len(indices)
+    seg = np.repeat(
+        np.arange(B, dtype=np.int32), np.diff(offsets).astype(np.int64)
+    )
+    Lp = max(tl, ((L + tl - 1) // tl) * tl)
+    idx_p = np.zeros(Lp, dtype=np.int32)
+    seg_p = np.full(Lp, B, dtype=np.int32)
+    w_p = np.zeros(Lp, dtype=np.float32)
+    idx_p[:L] = indices
+    seg_p[:L] = seg
+    w_p[:L] = 1.0
+    return idx_p, seg_p, w_p
+
+
+def embedding_bag(
+    table,
+    indices: np.ndarray,
+    offsets: np.ndarray,
+    mode: str = "sum",
+    *,
+    use_ref: bool = False,
+    interpret: bool = True,
+):
+    """EmbeddingBag over a (V, D) table; returns (B, D)."""
+    assert mode in ("sum", "mean")
+    B = len(offsets) - 1
+    idx, seg, w = pack_bags(indices, offsets)
+    if use_ref:
+        out = segment_bag_ref(
+            jnp.asarray(table), jnp.asarray(idx), jnp.asarray(seg),
+            jnp.asarray(w), n_segments=B,
+        )
+    else:
+        out = segment_bag_pallas(
+            jnp.asarray(table), jnp.asarray(idx), jnp.asarray(seg),
+            jnp.asarray(w), n_segments=B, interpret=interpret,
+        )
+    if mode == "mean":
+        cnt = np.maximum(np.diff(np.asarray(offsets)), 1).astype(np.float32)
+        out = out / jnp.asarray(cnt)[:, None]
+    return out

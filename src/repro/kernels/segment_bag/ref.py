@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for segment_bag — also the sharded production path."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_bag_ref(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    segments: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    n_segments: int,
+) -> jnp.ndarray:
+    rows = jnp.take(table, indices, axis=0) * weights[:, None]
+    out = jax.ops.segment_sum(rows, segments, num_segments=n_segments + 1)
+    return out[:n_segments]

@@ -1,0 +1,193 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json; the roofline
+reader (benchmarks/roofline.py) consumes them.  The XLA_FLAGS line above
+MUST precede any jax import — jax locks the device count at first init.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict
+
+import jax
+
+from ..configs import all_cells, get_arch
+from .mesh import make_production_mesh, mesh_axes
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))),
+    "results", "dryrun",
+)
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in the HLO."""
+    out: Dict[str, float] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        total = 0
+        for sm in SHAPE_RE.finditer(shapes):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * DTYPE_BYTES.get(dt, 4)
+        out[kind] = out.get(kind, 0) + total
+        out["total"] = out.get("total", 0) + total
+    return out
+
+
+def arg_bytes_per_device(args, n_devices: int) -> int:
+    """Honest bytes/device of the lowered inputs given their shardings."""
+    total = 0
+    for leaf in jax.tree.leaves(args):
+        nbytes = 1
+        for d in leaf.shape:
+            nbytes *= d
+        nbytes *= leaf.dtype.itemsize
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None:
+            try:
+                shard_shape = sh.shard_shape(leaf.shape)
+                nb = leaf.dtype.itemsize
+                for d in shard_shape:
+                    nb *= d
+                total += nb
+                continue
+            except Exception:
+                pass
+        total += nbytes
+    return total
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             save: bool = True) -> Dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = mesh_axes(multi_pod)
+    cell = get_arch(arch).cells[shape]
+    meshname = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: Dict = {
+        "arch": arch, "shape": shape, "mesh": meshname,
+        "n_devices": mesh.size, "kind": cell.kind,
+    }
+    t0 = time.perf_counter()
+    try:
+        fn, args = cell.build(mesh, axes)
+        with mesh:
+            lowered = jax.jit(fn).lower(*args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            }
+        except Exception as e:  # CPU backend may not implement it
+            rec["memory_analysis_error"] = str(e)
+        try:
+            cost = compiled.cost_analysis()
+            rec["cost_analysis"] = {
+                k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" not in k
+                )
+            }
+            rec["flops"] = float(cost.get("flops", 0.0))
+            rec["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+        except Exception as e:
+            rec["cost_analysis_error"] = str(e)
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)
+        from ..analysis import analyze_hlo
+
+        # scan-aware totals (cost_analysis counts while bodies once)
+        rec["hlo_stats"] = analyze_hlo(hlo)
+        rec["hlo_bytes"] = len(hlo)
+        rec["arg_bytes_per_device"] = arg_bytes_per_device(args, mesh.size)
+        rec["t_lower_s"] = round(t_lower, 2)
+        rec["t_compile_s"] = round(t_compile, 2)
+        rec["ok"] = True
+        print(f"[dryrun] {arch} x {shape} x {meshname}: OK "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s, "
+              f"flops {rec.get('flops', 0):.3e}, "
+              f"coll {rec['collectives'].get('total', 0):.3e} B)")
+        if "memory_analysis" in rec:
+            print(f"  memory_analysis: {rec['memory_analysis']}")
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[dryrun] {arch} x {shape} x {meshname}: FAIL {rec['error']}")
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        fname = f"{arch}__{shape}__{meshname}.json"
+        with open(os.path.join(RESULTS_DIR, fname), "w") as f:
+            json.dump(
+                {k: v for k, v in rec.items() if k != "traceback"}, f,
+                indent=1,
+            )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    if args.all:
+        ok = fail = 0
+        for arch, shape, _ in all_cells():
+            meshname = "pod2x16x16" if args.multi_pod else "pod16x16"
+            path = os.path.join(
+                RESULTS_DIR, f"{arch}__{shape}__{meshname}.json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("ok"):
+                        ok += 1
+                        continue
+            rec = run_cell(arch, shape, args.multi_pod)
+            ok += rec["ok"]
+            fail += not rec["ok"]
+        print(f"[dryrun] done: {ok} ok, {fail} failed")
+        raise SystemExit(1 if fail else 0)
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    rec = run_cell(args.arch, args.shape, args.multi_pod)
+    raise SystemExit(0 if rec["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh definition.
+
+v5e-256 pods: a (16, 16) = 256-chip single-pod mesh with (data, model)
+axes, and the 2-pod production mesh (2, 16, 16) = 512 chips adding the
+"pod" data-parallel axis (DCN between pods, ICI within).
+
+Functions, not module-level constants — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from ..distributed.sharding import MeshAxes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(multi_pod: bool = False) -> MeshAxes:
+    return MeshAxes(
+        data=("pod", "data") if multi_pod else ("data",), model="model"
+    )
+
+
+def make_host_mesh():
+    """Whatever devices exist locally (tests / examples): (1, n) mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,130 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf variant lowering: re-compile one LM cell with config overrides
+and report the roofline-term deltas vs the recorded baseline.
+
+    PYTHONPATH=src python -m repro.launch.perf_lm --arch gemma3-12b \
+        --shape train_4k --set attn_block_skip=true --set loss_chunk=256 \
+        --tag blockskip
+
+Nested overrides use dots: --set moe.balance_factor=1.0
+Results: results/perf/<arch>__<shape>__<tag>.json
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from ..analysis import analyze_hlo
+from ..configs import get_arch
+from ..configs.base import (
+    LM_SHAPES,
+    _lm_decode_builder,
+    _lm_prefill_builder,
+    _lm_train_builder,
+)
+from .mesh import make_production_mesh, mesh_axes
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))),
+    "results", "perf",
+)
+
+
+def parse_val(v: str):
+    if v.lower() in ("true", "false"):
+        return v.lower() == "true"
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def apply_overrides(cfg, overrides):
+    nested = {}
+    flat = {}
+    for k, v in overrides.items():
+        if "." in k:
+            a, b = k.split(".", 1)
+            nested.setdefault(a, {})[b] = v
+        else:
+            flat[k] = v
+    for a, sub in nested.items():
+        flat[a] = dataclasses.replace(getattr(cfg, a), **sub)
+    return dataclasses.replace(cfg, **flat)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--tag", default="variant")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in getattr(args, "set"):
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_val(v)
+
+    spec = get_arch(args.arch)
+    base_cfg = spec.make_config()
+    cfg_fn = lambda: apply_overrides(base_cfg, overrides)  # noqa: E731
+    s = LM_SHAPES[args.shape]
+    if s["kind"] == "train":
+        builder = _lm_train_builder(cfg_fn, s["seq"], s["batch"])
+    elif s["kind"] == "prefill":
+        builder = _lm_prefill_builder(cfg_fn, s["seq"], s["batch"])
+    else:
+        builder = _lm_decode_builder(cfg_fn, s["seq"], s["batch"])
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    axes = mesh_axes(args.multi_pod)
+    t0 = time.perf_counter()
+    fn, cell_args = builder(mesh, axes)
+    with mesh:
+        compiled = jax.jit(fn).lower(*cell_args).compile()
+    stats = analyze_hlo(compiled.as_text())
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_size_in_bytes": int(ma.argument_size_in_bytes),
+            "output_size_in_bytes": int(ma.output_size_in_bytes),
+            "temp_size_in_bytes": int(ma.temp_size_in_bytes),
+        }
+    except Exception:
+        mem = {}
+    rec = {
+        "arch": args.arch, "shape": args.shape, "tag": args.tag,
+        "overrides": overrides, "hlo_stats": stats,
+        "memory_analysis": mem, "n_devices": mesh.size,
+        "mesh": "pod2x16x16" if args.multi_pod else "pod16x16",
+        "t_total_s": round(time.perf_counter() - t0, 1),
+        "ok": True,
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(
+        RESULTS_DIR, f"{args.arch}__{args.shape}__{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps({
+        "tag": args.tag,
+        "flops": stats["flops"],
+        "hbm_floor": stats.get("hbm_floor_bytes"),
+        "coll": stats["collective_bytes"],
+        "temp_GB": round(mem.get("temp_size_in_bytes", 0) / 1e9, 1),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Architecture zoo: LM transformers, GNN family, recsys DIN."""

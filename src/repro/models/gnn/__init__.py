@@ -1,0 +1,5 @@
+from . import dimenet, equiformer_v2, graphcast, schnet
+from .dimenet import DimeNetConfig
+from .equiformer_v2 import EquiformerV2Config
+from .graphcast import GraphCastConfig
+from .schnet import SchNetConfig

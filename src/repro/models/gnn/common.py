@@ -1,0 +1,84 @@
+"""Shared GNN substrate: segment message passing, bases, batch format.
+
+JAX sparse is BCOO-only, so message passing here is built directly on
+``jax.ops.segment_sum`` over edge-index arrays — the same scatter/segment
+machinery the reachability core uses (see DESIGN.md §Arch-applicability).
+
+Unified single-graph batch format (batched molecules vmap over this):
+
+    pos       (N, 3) float32 | feat (N, F) float32 | species (N,) int32
+    edge_src  (E,) int32
+    edge_dst  (E,) int32
+    edge_mask (E,) bool       padding edges contribute zero
+    node_mask (N,) bool
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..nn import Params
+
+
+def seg_sum(x: jnp.ndarray, idx: jnp.ndarray, n: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(x, idx, num_segments=n)
+
+
+def seg_mean(x: jnp.ndarray, idx: jnp.ndarray, n: int) -> jnp.ndarray:
+    s = seg_sum(x, idx, n)
+    c = seg_sum(jnp.ones((x.shape[0], 1), x.dtype), idx, n)
+    return s / jnp.maximum(c, 1.0)
+
+
+def seg_max(x: jnp.ndarray, idx: jnp.ndarray, n: int) -> jnp.ndarray:
+    return jax.ops.segment_max(x, idx, num_segments=n)
+
+
+def seg_softmax(scores: jnp.ndarray, idx: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Edge-softmax (GAT-style): normalise scores within each dst segment."""
+    m = jax.ops.segment_max(scores, idx, num_segments=n)
+    e = jnp.exp(scores - m[idx])
+    z = seg_sum(e, idx, n)
+    return e / jnp.maximum(z[idx], 1e-9)
+
+
+def edge_vectors(pos: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray):
+    """(vec (E,3), dist (E,)) from dst to src convention: r_ji = x_j - x_i
+    for edge j->i (message direction src -> dst)."""
+    vec = pos[src] - pos[dst]
+    dist = jnp.sqrt(jnp.maximum(jnp.sum(vec * vec, -1), 1e-12))
+    return vec, dist
+
+
+def gaussian_rbf(dist: jnp.ndarray, n: int, cutoff: float) -> jnp.ndarray:
+    """(E, n) Gaussian radial basis on [0, cutoff] (SchNet-style)."""
+    mu = jnp.linspace(0.0, cutoff, n)
+    gamma = n / cutoff
+    return jnp.exp(-gamma * (dist[:, None] - mu[None, :]) ** 2)
+
+
+def bessel_rbf(dist: jnp.ndarray, n: int, cutoff: float) -> jnp.ndarray:
+    """(E, n) spherical Bessel basis (DimeNet-style) with envelope."""
+    d = jnp.maximum(dist, 1e-6)
+    freq = jnp.arange(1, n + 1, dtype=jnp.float32) * jnp.pi
+    rb = jnp.sqrt(2.0 / cutoff) * jnp.sin(freq[None] * d[:, None] / cutoff) \
+        / d[:, None]
+    return rb * smooth_cutoff(dist, cutoff)[:, None]
+
+
+def smooth_cutoff(dist: jnp.ndarray, cutoff: float, p: int = 6) -> jnp.ndarray:
+    """DimeNet polynomial envelope u(d) -> 0 smoothly at d = cutoff."""
+    x = jnp.clip(dist / cutoff, 0.0, 1.0)
+    a = -(p + 1) * (p + 2) / 2.0
+    b = p * (p + 2.0)
+    c = -p * (p + 1) / 2.0
+    return 1.0 + a * x**p + b * x ** (p + 1) + c * x ** (p + 2)
+
+
+def masked_graph_readout(node_out: jnp.ndarray, node_mask) -> jnp.ndarray:
+    if node_mask is None:
+        return node_out.sum(0)
+    return (node_out * node_mask[:, None].astype(node_out.dtype)).sum(0)

@@ -1,0 +1,168 @@
+"""DimeNet (Klicpera et al., 2020) — directional message passing.
+
+Assigned config: 6 blocks, d_hidden=128, n_bilinear=8, n_spherical=7,
+n_radial=6.  The defining kernel regime is the **triplet gather**: for
+each pair of incident edges (k->j, j->i) the angle ∠(kji) feeds a
+spherical basis that modulates message m_kj before it is aggregated into
+m_ji.  Triplet index lists (id_kj, id_ji) are built host-side
+(``build_triplets``) with a static padded budget — the same
+static-shape discipline the rest of the framework uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..nn import ACT, Params, dense, dense_init, embed_init, mlp, mlp_init
+from .common import bessel_rbf, edge_vectors, seg_sum, smooth_cutoff
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 10.0
+    n_species: int = 100
+    d_feat: int | None = None
+
+
+def build_triplets(
+    src: np.ndarray, dst: np.ndarray, n_nodes: int, budget: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side triplet enumeration: pairs (edge kj, edge ji) with
+    kj.dst == ji.src and kj.src != ji.dst.  Returns (id_kj, id_ji, mask)
+    padded/truncated to ``budget``."""
+    E = len(src)
+    kj, ji = [], []
+    # edge e is src->dst; for triplet (k->j->i): e_kj has dst == j,
+    # e_ji has src == j
+    by_dst = {}
+    for e in range(E):
+        by_dst.setdefault(int(dst[e]), []).append(e)
+    for e_ji in range(E):
+        j = int(src[e_ji])
+        i = int(dst[e_ji])
+        for e_kj in by_dst.get(j, ()):
+            if int(src[e_kj]) != i:
+                kj.append(e_kj)
+                ji.append(e_ji)
+    kj = np.asarray(kj[:budget], dtype=np.int32)
+    ji = np.asarray(ji[:budget], dtype=np.int32)
+    mask = np.zeros(budget, dtype=bool)
+    mask[: len(kj)] = True
+    out_kj = np.zeros(budget, dtype=np.int32)
+    out_ji = np.zeros(budget, dtype=np.int32)
+    out_kj[: len(kj)] = kj
+    out_ji[: len(ji)] = ji
+    return out_kj, out_ji, mask
+
+
+def _angular_basis(cos_angle: jnp.ndarray, dist_kj: jnp.ndarray,
+                   cfg: DimeNetConfig) -> jnp.ndarray:
+    """(T, n_spherical * n_radial) joint basis: Chebyshev in the angle x
+    Bessel in the radius (a faithful-rank stand-in for the exact spherical
+    Bessel * Legendre product of the paper)."""
+    t = jnp.clip(cos_angle, -1.0, 1.0)
+    cheb = [jnp.ones_like(t), t]
+    for _ in range(cfg.n_spherical - 2):
+        cheb.append(2 * t * cheb[-1] - cheb[-2])
+    ang = jnp.stack(cheb[: cfg.n_spherical], axis=-1)          # (T, S)
+    rad = bessel_rbf(dist_kj, cfg.n_radial, cfg.cutoff)        # (T, R)
+    return (ang[:, :, None] * rad[:, None, :]).reshape(
+        -1, cfg.n_spherical * cfg.n_radial)
+
+
+def init_params(key, cfg: DimeNetConfig) -> Params:
+    d = cfg.d_hidden
+    nsr = cfg.n_spherical * cfg.n_radial
+    ks = jax.random.split(key, 5 + cfg.n_blocks)
+    p: Params = {
+        "embed": embed_init(ks[0], cfg.n_species, d),
+        "rbf_proj": dense_init(ks[1], cfg.n_radial, d, bias=False),
+        "msg_init": mlp_init(ks[2], (3 * d, d)),
+        "out_final": mlp_init(ks[3], (d, d // 2, 1)),
+    }
+    if cfg.d_feat is not None:
+        p["enc"] = dense_init(ks[4], cfg.d_feat, d)
+    for b in range(cfg.n_blocks):
+        k1, k2, k3, k4, k5 = jax.random.split(ks[5 + b], 5)
+        p[f"blk{b}"] = {
+            "sbf_proj": dense_init(k1, nsr, cfg.n_bilinear, bias=False),
+            "down": dense_init(k2, d, cfg.n_bilinear, bias=False),
+            "bilin": jax.random.normal(
+                k3, (cfg.n_bilinear, cfg.n_bilinear, d), jnp.float32
+            ) * (1.0 / cfg.n_bilinear),
+            "msg_mlp": mlp_init(k4, (d, d, d)),
+            "out": mlp_init(k5, (d, d)),
+        }
+    return p
+
+
+def apply(params: Params, batch: Dict, cfg: DimeNetConfig) -> jnp.ndarray:
+    pos = batch["pos"]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    emask = batch.get("edge_mask")
+    id_kj, id_ji = batch["id_kj"], batch["id_ji"]
+    tmask = batch["triplet_mask"]
+    N = pos.shape[0]
+
+    vec, dist = edge_vectors(pos, src, dst)     # vec = x_src - x_dst
+    rbf = bessel_rbf(dist, cfg.n_radial, cfg.cutoff)
+    if emask is not None:
+        rbf = rbf * emask[:, None].astype(rbf.dtype)
+    rbf_h = dense(params["rbf_proj"], rbf)      # (E, d)
+
+    if cfg.d_feat is not None:
+        hnode = dense(params["enc"], batch["feat"])
+    else:
+        hnode = jnp.take(params["embed"]["emb"], batch["species"], axis=0)
+    m = mlp(
+        params["msg_init"],
+        jnp.concatenate([hnode[src], hnode[dst], rbf_h], -1),
+        act="silu", final_act="silu",
+    )                                            # (E, d)
+
+    # triplet geometry: angle between edge ji (j->i) and kj (k->j)
+    v_ji = vec[id_ji]
+    v_kj = -vec[id_kj]                          # orient k->j at node j
+    cosang = jnp.sum(v_ji * v_kj, -1) / jnp.maximum(
+        jnp.linalg.norm(v_ji, axis=-1) * jnp.linalg.norm(v_kj, axis=-1),
+        1e-9,
+    )
+    sbf = _angular_basis(cosang, dist[id_kj], cfg)
+    sbf = sbf * tmask[:, None].astype(sbf.dtype)
+
+    E = m.shape[0]
+    out_acc = jnp.zeros((N, cfg.d_hidden), m.dtype)
+    for b in range(cfg.n_blocks):
+        bp = params[f"blk{b}"]
+        sb = dense(bp["sbf_proj"], sbf)                   # (T, nb)
+        mk = dense(bp["down"], m)[id_kj]                  # (T, nb)
+        tr = jnp.einsum("tb,tc,bcd->td", sb, mk, bp["bilin"])
+        agg = seg_sum(tr, id_ji, E)                       # (E, d)
+        m = m + mlp(bp["msg_mlp"], m * rbf_h + agg, act="silu")
+        out_acc = out_acc + seg_sum(dense0(bp["out"], m), dst, N)
+    out = mlp(params["out_final"], out_acc, act="silu")   # (N, 1)
+    nmask = batch.get("node_mask")
+    if nmask is not None:
+        out = out * nmask[:, None].astype(out.dtype)
+    return out.sum()
+
+
+def dense0(p, x):
+    return mlp(p, x, act="silu", final_act="silu")
+
+
+def loss_fn(params: Params, batch: Dict, cfg: DimeNetConfig) -> jnp.ndarray:
+    pred = jax.vmap(lambda b: apply(params, b, cfg))(batch)
+    return jnp.mean((pred - batch["energy"]) ** 2)

@@ -1,0 +1,164 @@
+"""Real SO(3) representation machinery for eSCN-style equivariant models.
+
+``wigner_d_stack`` computes the real Wigner rotation matrices D^l(R) for
+l = 0..l_max from batched 3x3 rotation matrices via the Ivanic-Ruedenberg
+recursion (J. Phys. Chem. 1996 + errata) — pure arithmetic, jnp-traceable,
+unrolled over the (static) l, m, m' grid.  Convention: real spherical
+harmonics ordered m = -l..l with the l=1 basis ordered (y, z, x), so that
+
+    Y_l(R n) = D^l(R) Y_l(n)
+
+— the property the unit tests assert against scipy spherical harmonics
+for random rotations up to l_max=6.
+
+``rot_to_z`` builds the rotation aligning an edge direction with +z; in
+that frame the edge's own SH embedding collapses onto m=0, which is what
+makes the eSCN SO(2) convolution O(L^3) instead of O(L^6).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import List
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def rot_to_z(d: jnp.ndarray) -> jnp.ndarray:
+    """(E, 3) unit vectors -> (E, 3, 3) rotations R with R d = +z."""
+    x, y, z = d[:, 0], d[:, 1], d[:, 2]
+    alpha = jnp.arctan2(y, x)
+    beta = jnp.arctan2(jnp.sqrt(x * x + y * y), z)
+    ca, sa = jnp.cos(alpha), jnp.sin(alpha)
+    cb, sb = jnp.cos(beta), jnp.sin(beta)
+    # R = Ry(-beta) @ Rz(-alpha)
+    rz = jnp.stack([
+        jnp.stack([ca, sa, jnp.zeros_like(ca)], -1),
+        jnp.stack([-sa, ca, jnp.zeros_like(ca)], -1),
+        jnp.stack([jnp.zeros_like(ca), jnp.zeros_like(ca),
+                   jnp.ones_like(ca)], -1),
+    ], -2)
+    ry = jnp.stack([
+        jnp.stack([cb, jnp.zeros_like(ca), -sb], -1),
+        jnp.stack([jnp.zeros_like(ca), jnp.ones_like(ca),
+                   jnp.zeros_like(ca)], -1),
+        jnp.stack([sb, jnp.zeros_like(ca), cb], -1),
+    ], -2)
+    return ry @ rz
+
+
+def _r1_from_rot(rot: jnp.ndarray) -> jnp.ndarray:
+    """Cartesian (x,y,z) rotation -> l=1 real-SH basis (y,z,x) rotation."""
+    P = jnp.asarray(
+        [[0.0, 1.0, 0.0], [0.0, 0.0, 1.0], [1.0, 0.0, 0.0]], rot.dtype
+    )
+    return P @ rot @ P.T
+
+
+def wigner_d_stack(rot: jnp.ndarray, l_max: int) -> List[jnp.ndarray]:
+    """(..., 3, 3) rotations -> [D^0 (...,1,1), D^1 (...,3,3), ...].
+
+    Unrolled Ivanic-Ruedenberg recursion; all index arithmetic is static.
+    """
+    batch = rot.shape[:-2]
+    d0 = jnp.ones(batch + (1, 1), rot.dtype)
+    out = [d0]
+    if l_max == 0:
+        return out
+    r1 = _r1_from_rot(rot)
+    out.append(r1)
+
+    def R1(i, j):
+        # i, j in {-1, 0, 1}
+        return r1[..., i + 1, j + 1]
+
+    prev = r1
+    for l in range(2, l_max + 1):
+        def Rp(mu, m_):  # previous-level entry with m indices
+            return prev[..., mu + (l - 1), m_ + (l - 1)]
+
+        def Pfn(i, mu, m_):
+            if m_ == l:
+                return R1(i, 1) * Rp(mu, l - 1) - R1(i, -1) * Rp(mu, -(l - 1))
+            if m_ == -l:
+                return R1(i, 1) * Rp(mu, -(l - 1)) + R1(i, -1) * Rp(mu, l - 1)
+            return R1(i, 0) * Rp(mu, m_)
+
+        rows = []
+        for m in range(-l, l + 1):
+            cols = []
+            for mp in range(-l, l + 1):
+                denom = (
+                    (l + mp) * (l - mp) if abs(mp) < l else (2 * l) * (2 * l - 1)
+                )
+                u2 = (l + m) * (l - m) / denom
+                d_m0 = 1.0 if m == 0 else 0.0
+                v2 = (1.0 + d_m0) * (l + abs(m) - 1) * (l + abs(m)) / denom
+                w2 = (l - abs(m) - 1) * (l - abs(m)) / denom
+                u = np.sqrt(u2)
+                v = 0.5 * np.sqrt(v2) * (1.0 - 2.0 * d_m0)
+                w = -0.5 * np.sqrt(w2) * (1.0 - d_m0)
+                term = 0.0
+                if u != 0.0:
+                    if m == 0:
+                        U = Pfn(0, 0, mp)
+                    else:
+                        U = Pfn(0, m, mp)
+                    term = term + u * U
+                if v != 0.0:
+                    if m == 0:
+                        V = Pfn(1, 1, mp) + Pfn(-1, -1, mp)
+                    elif m > 0:
+                        V = Pfn(1, m - 1, mp) * np.sqrt(1.0 + (1.0 if m == 1 else 0.0)) \
+                            - Pfn(-1, -m + 1, mp) * (0.0 if m == 1 else 1.0)
+                    else:
+                        V = Pfn(1, m + 1, mp) * (0.0 if m == -1 else 1.0) \
+                            + Pfn(-1, -m - 1, mp) * np.sqrt(1.0 + (1.0 if m == -1 else 0.0))
+                    term = term + v * V
+                if w != 0.0:
+                    if m > 0:
+                        W = Pfn(1, m + 1, mp) + Pfn(-1, -m - 1, mp)
+                    elif m < 0:
+                        W = Pfn(1, m - 1, mp) - Pfn(-1, -m + 1, mp)
+                    else:
+                        W = None
+                    if W is not None:
+                        term = term + w * W
+                cols.append(term)
+            rows.append(jnp.stack(cols, axis=-1))
+        cur = jnp.stack(rows, axis=-2)
+        out.append(cur)
+        prev = cur
+    return out
+
+
+# --------------------------------------------------------------------------
+# real spherical harmonics (host/test oracle)
+# --------------------------------------------------------------------------
+
+def real_sph_harm_np(l_max: int, dirs: np.ndarray) -> List[np.ndarray]:
+    """Orthonormal real SH evaluated at unit vectors (host oracle for the
+    Wigner tests); returns [(N, 2l+1)] ordered m=-l..l."""
+    from scipy.special import sph_harm_y  # (l, m, theta, phi)
+
+    dirs = np.asarray(dirs, dtype=np.float64)
+    theta = np.arccos(np.clip(dirs[:, 2], -1, 1))       # polar
+    phi = np.arctan2(dirs[:, 1], dirs[:, 0])            # azimuth
+    out = []
+    for l in range(l_max + 1):
+        cols = []
+        for m in range(-l, l + 1):
+            am = abs(m)
+            ylm = sph_harm_y(l, am, theta, phi)         # complex
+            if m > 0:
+                v = np.sqrt(2.0) * (-1.0) ** m * ylm.real
+            elif m < 0:
+                v = np.sqrt(2.0) * (-1.0) ** m * ylm.imag
+            else:
+                v = ylm.real
+            cols.append(v)
+        out.append(np.stack(cols, axis=1))
+    return out

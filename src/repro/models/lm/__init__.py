@@ -1,0 +1,9 @@
+from .config import LMConfig, MLASpec, MoESpec
+from .model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    lm_loss,
+    prefill,
+)

@@ -1,0 +1,215 @@
+"""Attention: flash-scan (blockwise online-softmax), banded SWA, GQA, MLA.
+
+Memory discipline is what matters at 32k/500k sequence lengths: a naive
+(S x S) score matrix is 4 GB/head at 32k, so *all* attention here is
+blockwise with f32 online-softmax accumulators:
+
+* ``flash_attention``  — lax.scan over KV blocks per Q block; causal
+  masking; optional score softcap (gemma2).  The masked upper-triangle
+  blocks still cost FLOPs (recorded honestly in §Roofline — a splash-style
+  Pallas kernel is the real-TPU answer; the §Perf log quantifies it).
+* ``banded_attention`` — sliding-window layers only *gather the KV blocks
+  inside the band* (ceil(w/blk)+1 per Q block) so local layers cost
+  O(S*w) not O(S^2) — this is what makes the 500k cells feasible.
+* ``decode_attention`` — single-token step against a KV cache (ring
+  buffer for SWA layers, linear for global).
+
+All functions take (B, S, H, dh) q and (B, S, KV, dh) k/v and handle GQA
+by reshaping q to (KV, H/KV) groups.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+NEG_INF = -1e30
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding; x (..., S, H, dh), positions (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def _softcap(x, cap):
+    return jnp.tanh(x / cap) * cap if cap is not None else x
+
+
+def _block_attn(q, k, v, mask, scale, softcap):
+    """One (Bq, Bk) tile: returns (scores_exp, row_max, out_partial) in f32.
+
+    q (B, G, Hg, Bq, dh), k (B, G, Bk, dh), v (B, G, Bk, dh), mask
+    broadcastable (B, 1, 1, Bq, Bk)."""
+    s = jnp.einsum(
+        "bghqd,bgkd->bghqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    s = _softcap(s, softcap)
+    s = jnp.where(mask, s, NEG_INF)
+    return s
+
+
+def flash_attention(
+    q: jnp.ndarray,          # (B, S, H, dh)
+    k: jnp.ndarray,          # (B, Sk, KV, dh)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,       # absolute position of q[0] (prefill chunks)
+    softcap: Optional[float] = None,
+    blk_q: int = 512,
+    blk_k: int = 512,
+    scale: Optional[float] = None,
+    block_skip: bool = False,
+) -> jnp.ndarray:
+    B, S, H, dh = q.shape
+    _, Sk, KV, _ = k.shape
+    dv = v.shape[-1]          # MLA: v head dim differs from qk head dim
+    G = KV
+    Hg = H // KV
+    scale = dh ** -0.5 if scale is None else scale
+    blk_q = min(blk_q, S)
+    blk_k = min(blk_k, Sk)
+    assert S % blk_q == 0 and Sk % blk_k == 0, (S, Sk, blk_q, blk_k)
+    nq, nk = S // blk_q, Sk // blk_k
+
+    qr = q.reshape(B, nq, blk_q, G, Hg, dh).transpose(1, 0, 3, 4, 2, 5)
+    kr = k.reshape(B, nk, blk_k, G, dh).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(B, nk, blk_k, G, dv).transpose(1, 0, 3, 2, 4)
+
+    q_pos = q_offset + jnp.arange(S).reshape(nq, blk_q)
+    k_pos = jnp.arange(Sk).reshape(nk, blk_k)
+
+    def per_q_block(qb, qp, n_kv: Optional[int] = None):
+        # qb (B, G, Hg, blk_q, dh); scan over kv blocks (first n_kv)
+        def step(carry, inp):
+            m, l, acc = carry
+            kb, vb, kp = inp
+            mask = jnp.ones((1, 1, 1, blk_q, blk_k), bool)
+            if causal:
+                mask = (qp[None, None, None, :, None]
+                        >= kp[None, None, None, None, :])
+            s = _block_attn(qb, kb, vb, mask, scale, softcap)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bghqk,bgkd->bghqd", p, vb.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, G, Hg, blk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, G, Hg, blk_q), jnp.float32)
+        a0 = jnp.zeros((B, G, Hg, blk_q, dv), jnp.float32)
+        xs = ((kr, vr, k_pos) if n_kv is None
+              else (kr[:n_kv], vr[:n_kv], k_pos[:n_kv]))
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), xs)
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return out  # (B, G, Hg, blk_q, dv)
+
+    if block_skip and causal and q_offset == 0 and nq <= 64:
+        # causal block skipping: q block i only scans kv blocks [0..i] —
+        # halves attention FLOPs vs the masked full scan at the cost of
+        # nq unrolled scan bodies in the HLO (see EXPERIMENTS.md §Perf)
+        outs = [per_q_block(qr[i], q_pos[i], n_kv=i + 1)
+                for i in range(nq)]
+        out = jnp.stack(outs)
+    else:
+        out = jax.lax.map(lambda x: per_q_block(*x), (qr, q_pos))
+    # (nq, B, G, Hg, blk_q, dv) -> (B, S, H, dv)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, dv)
+    return out.astype(q.dtype)
+
+
+def banded_attention(
+    q: jnp.ndarray,          # (B, S, H, dh)
+    k: jnp.ndarray,          # (B, S, KV, dh)
+    v: jnp.ndarray,
+    *,
+    window: int,
+    softcap: Optional[float] = None,
+    blk: int = 512,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Causal sliding-window attention touching only in-band KV blocks.
+
+    Query at position i attends to j in (i - window, i]."""
+    B, S, H, dh = q.shape
+    _, _, KV, _ = k.shape
+    G, Hg = KV, H // KV
+    scale = dh ** -0.5 if scale is None else scale
+    blk = min(blk, S)
+    assert S % blk == 0
+    nq = S // blk
+    nw = min(-(-window // blk) + 1, nq)  # kv blocks per band
+
+    qr = q.reshape(B, nq, blk, G, Hg, dh).transpose(1, 0, 3, 4, 2, 5)
+
+    def per_q_block(i, qb):
+        # gather nw kv blocks ending at block i (clamped at 0)
+        start_blk = jnp.maximum(i - (nw - 1), 0)
+        start = start_blk * blk
+        kb = jax.lax.dynamic_slice_in_dim(k, start, nw * blk, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, nw * blk, axis=1)
+        kb = kb.transpose(0, 2, 1, 3)    # (B, G, nw*blk, dh)
+        vb = vb.transpose(0, 2, 1, 3)
+        qp = i * blk + jnp.arange(blk)
+        kp = start + jnp.arange(nw * blk)
+        mask = (
+            (qp[:, None] >= kp[None, :])
+            & (qp[:, None] - kp[None, :] < window)
+        )[None, None, None]
+        s = _block_attn(qb, kb, vb, mask, scale, softcap)
+        m = s.max(-1, keepdims=True)
+        p = jnp.exp(s - m)
+        out = jnp.einsum("bghqk,bgkd->bghqd", p, vb.astype(jnp.float32))
+        out = out / jnp.maximum(p.sum(-1, keepdims=True), 1e-20)
+        return out
+
+    out = jax.lax.map(
+        lambda x: per_q_block(*x), (jnp.arange(nq), qr)
+    )
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, dh)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,          # (B, 1, H, dh)
+    k_cache: jnp.ndarray,    # (B, Sc, KV, dh)
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,  # () int32 — number of valid cache rows
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    ring: bool = False,      # SWA ring buffer: all Sc rows valid once full
+) -> jnp.ndarray:
+    B, _, H, dh = q.shape
+    _, Sc, KV, _ = k_cache.shape
+    G, Hg = KV, H // KV
+    scale = dh ** -0.5 if scale is None else scale
+    qr = q.reshape(B, G, Hg, dh)
+    s = jnp.einsum(
+        "bghd,bsgd->bghs", qr.astype(jnp.float32),
+        k_cache.astype(jnp.float32),
+    ) * scale
+    s = _softcap(s, softcap)
+    pos = jnp.arange(Sc)
+    valid = (pos < cache_len) if not ring else (
+        pos < jnp.minimum(cache_len, Sc)
+    )
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bghs,bsgd->bghd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, dh).astype(q.dtype)

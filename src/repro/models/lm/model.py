@@ -1,0 +1,617 @@
+"""Decoder-only transformer covering the five assigned LM architectures.
+
+Structure:
+
+* Layers are grouped into **scan segments** (config.scan_segments): each
+  segment is a ``lax.scan`` over stacked params of one repeating unit
+  (e.g. gemma3's [L,L,L,L,L,G], llama4's [dense, MoE]), keeping compiled
+  HLO size flat in depth — essential for 61-layer dry-runs on one CPU.
+* Attention: GQA or MLA; global layers use blockwise flash-scan, 'L'
+  layers use banded SWA (O(S*w)); gemma2 softcaps supported.
+* FFN: GLU dense or the EP MoE of moe.py.
+* Loss: chunked cross-entropy (the (B, S, V) logits tensor is never
+  materialised — V=262k at S=4k would dominate HBM otherwise).
+* Decode: per-layer KV caches (ring buffers for SWA layers, compact
+  (c_kv, k_pe) for MLA with the weight-absorption trick), ``prefill`` +
+  ``decode_step``.
+
+Sharding: the model annotates activations with PartitionSpecs when a mesh
+is ambient (see distributed/sharding.py for the parameter rules); all
+annotations no-op on a bare CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..nn import Params, dense, dense_init, embed_init, norm_init, rmsnorm, ACT
+from ..nn import softcap as _softcap
+from .attention import (
+    banded_attention,
+    decode_attention,
+    flash_attention,
+    rope,
+)
+from .config import LMConfig, MLASpec, MoESpec
+from .moe import moe_ffn, moe_init
+
+
+def _dtype(cfg: LMConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def shard(x, spec: Optional[P]):
+    """Best-effort sharding annotation (no-op without an ambient mesh)."""
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _attn_init(key, cfg: LMConfig) -> Params:
+    dt = _dtype(cfg)
+    d, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    s = (1.0 / d) ** 0.5
+    if cfg.attn == "mla":
+        m = cfg.mla
+        qk = m.qk_nope + m.qk_rope
+        return {
+            "wq_a": jax.random.normal(ks[0], (d, m.q_lora), dt) * s,
+            "q_norm": norm_init(m.q_lora, dt),
+            "wq_b": jax.random.normal(ks[1], (m.q_lora, H * qk), dt)
+            * (1.0 / m.q_lora) ** 0.5,
+            "wkv_a": jax.random.normal(
+                ks[2], (d, m.kv_lora + m.qk_rope), dt) * s,
+            "kv_norm": norm_init(m.kv_lora, dt),
+            "wkv_b": jax.random.normal(
+                ks[3], (m.kv_lora, H * (m.qk_nope + m.v_head)), dt)
+            * (1.0 / m.kv_lora) ** 0.5,
+            "wo": jax.random.normal(ks[4], (H * m.v_head, d), dt)
+            * (1.0 / (H * m.v_head)) ** 0.5,
+        }
+    return {
+        "wq": jax.random.normal(ks[0], (d, H * dh), dt) * s,
+        "wk": jax.random.normal(ks[1], (d, KV * dh), dt) * s,
+        "wv": jax.random.normal(ks[2], (d, KV * dh), dt) * s,
+        "wo": jax.random.normal(ks[3], (H * dh, d), dt)
+        * (1.0 / (H * dh)) ** 0.5,
+    }
+
+
+def _ffn_init(key, cfg: LMConfig) -> Params:
+    dt = _dtype(cfg)
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_gu": jax.random.normal(k1, (d, 2, f), dt) * (1.0 / d) ** 0.5,
+        "w_d": jax.random.normal(k2, (f, d), dt) * (1.0 / f) ** 0.5,
+    }
+
+
+def _block_init(key, cfg: LMConfig, is_moe: bool) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln_attn": norm_init(cfg.d_model, _dtype(cfg)),
+        "attn": _attn_init(ks[0], cfg),
+        "ln_ffn": norm_init(cfg.d_model, _dtype(cfg)),
+    }
+    if is_moe:
+        p["moe"] = moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.moe, _dtype(cfg))
+    else:
+        p["ffn"] = _ffn_init(ks[1], cfg)
+    return p
+
+
+def init_params(key, cfg: LMConfig) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    params: Params = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dt),
+        "ln_f": norm_init(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": jax.random.normal(ks[1], (cfg.d_model, cfg.vocab), dt)
+            * (1.0 / cfg.d_model) ** 0.5
+        }
+    segs = cfg.scan_segments()
+    seg_keys = jax.random.split(ks[2], len(segs))
+    for si, (unit, n_rep) in enumerate(segs):
+        def unit_init(k, unit=unit):
+            uks = jax.random.split(k, len(unit))
+            return {
+                f"u{j}": _block_init(uks[j], cfg, unit[j][1])
+                for j in range(len(unit))
+            }
+        if n_rep == 1:
+            params[f"seg{si}"] = unit_init(seg_keys[si])
+        else:
+            params[f"seg{si}"] = jax.vmap(unit_init)(
+                jax.random.split(seg_keys[si], n_rep)
+            )
+    if cfg.mtp_depth > 0:
+        k1, k2 = jax.random.split(ks[3])
+        params["mtp"] = {
+            "proj": dense_init(k1, 2 * cfg.d_model, cfg.d_model, dt,
+                               bias=False),
+            "block": _block_init(k2, cfg, False),
+            "ln": norm_init(cfg.d_model, dt),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def _dense_ffn(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    gu = jnp.einsum("bsd,dgf->bsgf", x, p["w_gu"])
+    h = ACT[act](gu[..., 0, :]) * gu[..., 1, :]
+    return h @ p["w_d"]
+
+
+def _attn_train(p, x, cfg: LMConfig, is_local: bool, positions,
+                act_spec: Optional[P]):
+    B, S, d = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.attn == "mla":
+        m = cfg.mla
+        qk = m.qk_nope + m.qk_rope
+        q = rmsnorm(p["q_norm"], x @ p["wq_a"], cfg.norm_eps) @ p["wq_b"]
+        q = q.reshape(B, S, H, qk)
+        kv_a = x @ p["wkv_a"]
+        ckv = rmsnorm(p["kv_norm"], kv_a[..., : m.kv_lora], cfg.norm_eps)
+        kpe = kv_a[..., m.kv_lora:]
+        kv = (ckv @ p["wkv_b"]).reshape(B, S, H, m.qk_nope + m.v_head)
+        k_nope, v = kv[..., : m.qk_nope], kv[..., m.qk_nope:]
+        q_pe = rope(q[..., m.qk_nope:], positions, cfg.rope_theta)
+        k_pe = rope(kpe[:, :, None, :], positions, cfg.rope_theta)
+        q = jnp.concatenate([q[..., : m.qk_nope], q_pe], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe, (B, S, H, m.qk_rope))], axis=-1
+        )
+        scale = (m.qk_nope + m.qk_rope) ** -0.5
+        o = flash_attention(
+            q, k, v, causal=True, softcap=cfg.attn_softcap,
+            blk_q=cfg.blk_q, blk_k=cfg.blk_k, scale=scale,
+            block_skip=cfg.attn_block_skip,
+        )
+        return o.reshape(B, S, H * m.v_head) @ p["wo"]
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (x @ p["wk"]).reshape(B, S, KV, dh)
+    v = (x @ p["wv"]).reshape(B, S, KV, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if is_local and cfg.window is not None and cfg.window < S:
+        o = banded_attention(
+            q, k, v, window=cfg.window, softcap=cfg.attn_softcap,
+            blk=min(cfg.blk_q, S),
+        )
+    else:
+        o = flash_attention(
+            q, k, v, causal=True, softcap=cfg.attn_softcap,
+            blk_q=cfg.blk_q, blk_k=cfg.blk_k,
+            block_skip=cfg.attn_block_skip,
+        )
+    return o.reshape(B, S, H * dh) @ p["wo"]
+
+
+def _block_train(p, x, aux, cfg: LMConfig, flags, positions, mesh,
+                 act_spec: Optional[P]):
+    is_local, is_moe = flags
+    h = rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    x = x + _attn_train(p["attn"], h, cfg, is_local, positions, act_spec)
+    x = shard(x, act_spec)
+    h = rmsnorm(p["ln_ffn"], x, cfg.norm_eps)
+    if is_moe:
+        B, S, d = h.shape
+        data_spec = (
+            P(act_spec[0]) if act_spec is not None else P()
+        )
+        out, a = moe_ffn(
+            p["moe"], h.reshape(B * S, d), cfg.moe, act=cfg.act,
+            mesh=mesh, data_spec=data_spec,
+        )
+        x = x + out.reshape(B, S, d)
+        aux = aux + a
+    else:
+        x = x + _dense_ffn(p["ffn"], h, cfg.act)
+    x = shard(x, act_spec)
+    return x, aux
+
+
+# --------------------------------------------------------------------------
+# forward / loss
+# --------------------------------------------------------------------------
+
+def forward(
+    params: Params,
+    tokens: jnp.ndarray,            # (B, S) int32
+    cfg: LMConfig,
+    *,
+    mesh=None,
+    act_spec: Optional[P] = None,   # e.g. P(('pod','data'), None, None)
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (hidden (B, S, d), aux_loss). Call ``logits``/``loss`` next."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"]["emb"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = shard(x, act_spec)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    aux = jnp.float32(0.0)
+
+    segs = cfg.scan_segments()
+    for si, (unit, n_rep) in enumerate(segs):
+        seg_p = params[f"seg{si}"]
+
+        def unit_body(carry, up, unit=unit):
+            x, aux = carry
+            for j, flags in enumerate(unit):
+                x, aux = _block_train(
+                    up[f"u{j}"], x, aux, cfg, flags, positions, mesh,
+                    act_spec,
+                )
+            return (x, aux), None
+
+        body = jax.checkpoint(unit_body) if remat else unit_body
+        if n_rep == 1:
+            (x, aux), _ = body((x, aux), seg_p)
+        else:
+            (x, aux), _ = jax.lax.scan(body, (x, aux), seg_p)
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return x, aux
+
+
+def _head_weight(params, cfg: LMConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["emb"].T
+    return params["lm_head"]["w"]
+
+
+def chunked_ce_loss(
+    params: Params,
+    hidden: jnp.ndarray,      # (B, S, d)
+    labels: jnp.ndarray,      # (B, S) int32
+    cfg: LMConfig,
+    chunk: int = 512,
+    label_mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Cross-entropy without materialising (B, S, V)."""
+    B, S, d = hidden.shape
+    w = _head_weight(params, cfg)
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n = S // chunk
+    h = hidden.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    y = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+    if label_mask is None:
+        m = jnp.ones((n, B, chunk), jnp.float32)
+    else:
+        m = label_mask.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def step(acc, inp):
+        hc, yc, mc = inp
+        logits = (hc @ w).astype(jnp.float32)
+        logits = _softcap(logits, cfg.final_softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, yc[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        nll = (logz - gold) * mc
+        return (acc[0] + nll.sum(), acc[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0), jnp.float32(0)),
+                                 (h, y, m))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(
+    params: Params,
+    batch: Dict[str, jnp.ndarray],
+    cfg: LMConfig,
+    *,
+    mesh=None,
+    act_spec: Optional[P] = None,
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    hidden, aux = forward(
+        params, batch["tokens"], cfg, mesh=mesh, act_spec=act_spec,
+        remat=remat,
+    )
+    loss = chunked_ce_loss(params, hidden, batch["labels"], cfg,
+                           chunk=cfg.loss_chunk)
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.mtp_depth > 0:
+        # MTP(1): predict t+2 from [h_t ; emb(label_t)] through one block
+        mp = params["mtp"]
+        emb_next = jnp.take(params["embed"]["emb"], batch["labels"], axis=0)
+        h2 = dense(mp["proj"], jnp.concatenate([hidden, emb_next], -1))
+        pos = jnp.broadcast_to(
+            jnp.arange(h2.shape[1])[None], h2.shape[:2]
+        )
+        h2, _ = _block_train(
+            mp["block"], h2, jnp.float32(0), cfg, (False, False), pos,
+            mesh, act_spec,
+        )
+        h2 = rmsnorm(mp["ln"], h2, cfg.norm_eps)
+        # labels shifted one more step; mask the last column
+        mtp_labels = jnp.concatenate(
+            [batch["labels"][:, 1:], batch["labels"][:, -1:]], axis=1
+        )
+        mask = jnp.ones_like(mtp_labels, jnp.float32).at[:, -1].set(0.0)
+        mtp = chunked_ce_loss(params, h2, mtp_labels, cfg, label_mask=mask)
+        metrics["mtp"] = mtp
+        loss = loss + 0.3 * mtp
+    loss = loss + aux
+    return loss, metrics
+
+
+# --------------------------------------------------------------------------
+# decode (serve path)
+# --------------------------------------------------------------------------
+
+def _cache_len_for(cfg: LMConfig, is_local: bool, max_len: int) -> int:
+    if is_local and cfg.window is not None:
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Nested cache pytree aligned with scan segments."""
+    dt = _dtype(cfg)
+    cache: Dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+    for si, (unit, n_rep) in enumerate(cfg.scan_segments()):
+        seg = {}
+        # unscanned segments (n_rep == 1) carry NO leading rep dim, matching
+        # the unstacked param layout consumed by decode_step's direct call
+        lead = () if n_rep == 1 else (n_rep,)
+        for j, (is_local, _) in enumerate(unit):
+            L = _cache_len_for(cfg, is_local, max_len)
+            if cfg.attn == "mla":
+                m = cfg.mla
+                c = {
+                    "ckv": jnp.zeros((*lead, batch, L, m.kv_lora), dt),
+                    "kpe": jnp.zeros((*lead, batch, L, m.qk_rope), dt),
+                }
+            else:
+                c = {
+                    "k": jnp.zeros(
+                        (*lead, batch, L, cfg.n_kv_heads, cfg.head_dim), dt),
+                    "v": jnp.zeros(
+                        (*lead, batch, L, cfg.n_kv_heads, cfg.head_dim), dt),
+                }
+            seg[f"u{j}"] = c
+        cache[f"seg{si}"] = seg
+    return cache
+
+
+def _attn_decode(p, x, cfg: LMConfig, is_local: bool, lc, pos):
+    """Single-token attention against a cache slice lc (no leading rep dim).
+
+    Returns (attn_out (B, 1, d), updated lc)."""
+    B = x.shape[0]
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.attn == "mla":
+        m = cfg.mla
+        qk = m.qk_nope + m.qk_rope
+        q = rmsnorm(p["q_norm"], x @ p["wq_a"], cfg.norm_eps) @ p["wq_b"]
+        q = q.reshape(B, 1, H, qk)
+        q_pe = rope(q[..., m.qk_nope:], positions, cfg.rope_theta)
+        q_nope = q[..., : m.qk_nope]
+        kv_a = x @ p["wkv_a"]
+        ckv_t = rmsnorm(p["kv_norm"], kv_a[..., : m.kv_lora], cfg.norm_eps)
+        kpe_t = rope(
+            kv_a[:, :, None, m.kv_lora:], positions, cfg.rope_theta
+        )[:, :, 0, :]
+        L = lc["ckv"].shape[1]
+        slot = pos % L
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            lc["ckv"], ckv_t, slot, axis=1
+        )
+        kpe = jax.lax.dynamic_update_slice_in_dim(
+            lc["kpe"], kpe_t, slot, axis=1
+        )
+        # weight absorption: score = q_nope . (W_uk^T) . ckv
+        wkv_b = p["wkv_b"].reshape(m.kv_lora, H, m.qk_nope + m.v_head)
+        w_uk = wkv_b[..., : m.qk_nope]          # (kv_lora, H, qk_nope)
+        w_uv = wkv_b[..., m.qk_nope:]           # (kv_lora, H, v_head)
+        q_abs = jnp.einsum("bthn,lhn->bthl", q_nope, w_uk)  # (B,1,H,kvl)
+        s = jnp.einsum("bthl,bsl->bhs", q_abs, ckv)
+        s = s + jnp.einsum("bthr,bsr->bhs", q_pe, kpe)
+        s = s * ((m.qk_nope + m.qk_rope) ** -0.5)
+        valid = jnp.arange(ckv.shape[1]) <= pos
+        s = jnp.where(valid[None, None, :], s, -1e30)
+        pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+        ctx = jnp.einsum("bhs,bsl->bhl", pr, ckv.astype(jnp.float32))
+        o = jnp.einsum("bhl,lhv->bhv", ctx, w_uv.astype(jnp.float32))
+        o = o.reshape(B, 1, H * m.v_head).astype(x.dtype)
+        return o @ p["wo"], {"ckv": ckv, "kpe": kpe}
+    q = (x @ p["wq"]).reshape(B, 1, H, dh)
+    k_t = (x @ p["wk"]).reshape(B, 1, KV, dh)
+    v_t = (x @ p["wv"]).reshape(B, 1, KV, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k_t = rope(k_t, positions, cfg.rope_theta)
+    L = lc["k"].shape[1]
+    slot = pos % L if (is_local and cfg.window is not None) else pos
+    slot = jnp.minimum(slot, L - 1)
+    k = jax.lax.dynamic_update_slice_in_dim(lc["k"], k_t, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(lc["v"], v_t, slot, axis=1)
+    ring = is_local and cfg.window is not None
+    o = decode_attention(
+        q, k, v, cache_len=pos + 1, softcap=cfg.attn_softcap, ring=ring,
+    )
+    return o.reshape(B, 1, H * dh) @ p["wo"], {"k": k, "v": v}
+
+
+def _block_decode(p, x, cfg, flags, lc, pos, mesh):
+    is_local, is_moe = flags
+    h = rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    o, lc = _attn_decode(p["attn"], h, cfg, is_local, lc, pos)
+    x = x + o
+    h = rmsnorm(p["ln_ffn"], x, cfg.norm_eps)
+    if is_moe:
+        B, S, d = h.shape
+        out, _ = moe_ffn(
+            p["moe"], h.reshape(B * S, d), cfg.moe, act=cfg.act, mesh=mesh,
+        )
+        x = x + out.reshape(B, S, d)
+    else:
+        x = x + _dense_ffn(p["ffn"], h, cfg.act)
+    return x, lc
+
+
+def decode_step(
+    params: Params,
+    cache: Dict[str, Any],
+    token: jnp.ndarray,       # (B,) int32
+    cfg: LMConfig,
+    *,
+    mesh=None,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One autoregressive step: returns (logits (B, V), new cache)."""
+    B = token.shape[0]
+    pos = cache["len"]
+    x = jnp.take(params["embed"]["emb"], token[:, None], axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    new_cache: Dict[str, Any] = {"len": pos + 1}
+    for si, (unit, n_rep) in enumerate(cfg.scan_segments()):
+        seg_p = params[f"seg{si}"]
+        seg_c = cache[f"seg{si}"]
+
+        def unit_body(x, up, uc, unit=unit):
+            nc = {}
+            for j, flags in enumerate(unit):
+                x, nc[f"u{j}"] = _block_decode(
+                    up[f"u{j}"], x, cfg, flags, uc[f"u{j}"], pos, mesh
+                )
+            return x, nc
+
+        if n_rep == 1:
+            x, nc = unit_body(x, seg_p, seg_c)
+        else:
+            def scan_body(carry, inp):
+                up, uc = inp
+                y, nc = unit_body(carry, up, uc)
+                return y, nc
+
+            x, nc = jax.lax.scan(scan_body, x, (seg_p, seg_c))
+        new_cache[f"seg{si}"] = nc
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = (x[:, 0] @ _head_weight(params, cfg)).astype(jnp.float32)
+    logits = _softcap(logits, cfg.final_softcap)
+    return logits, new_cache
+
+
+def prefill(
+    params: Params,
+    tokens: jnp.ndarray,      # (B, S)
+    cfg: LMConfig,
+    max_len: int,
+    *,
+    mesh=None,
+    act_spec: Optional[P] = None,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Process a prompt, building the cache; returns (last-token logits,
+    cache).  Implemented as the train-path forward plus cache extraction
+    — one pass, no per-token loop."""
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len)
+    x = jnp.take(params["embed"]["emb"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = shard(x, act_spec)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    for si, (unit, n_rep) in enumerate(cfg.scan_segments()):
+        seg_p = params[f"seg{si}"]
+
+        def unit_body(x, up, unit=unit):
+            caches = {}
+            for j, flags in enumerate(unit):
+                is_local, is_moe = flags
+                p = up[f"u{j}"]
+                h = rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+                x = x + _attn_train(
+                    p["attn"], h, cfg, is_local, positions, act_spec)
+                caches[f"u{j}"] = _extract_cache(
+                    p["attn"], h, cfg, is_local, positions, max_len)
+                h = rmsnorm(p["ln_ffn"], x, cfg.norm_eps)
+                if is_moe:
+                    Bx, Sx, dx = h.shape
+                    out, _ = moe_ffn(
+                        p["moe"], h.reshape(Bx * Sx, dx), cfg.moe,
+                        act=cfg.act, mesh=mesh,
+                        data_spec=(P(act_spec[0]) if act_spec is not None
+                                   else P()),
+                    )
+                    x = x + out.reshape(Bx, Sx, dx)
+                else:
+                    x = x + _dense_ffn(p["ffn"], h, cfg.act)
+                x = shard(x, act_spec)
+            return x, caches
+
+        if n_rep == 1:
+            x, nc = unit_body(x, seg_p)
+        else:
+            def scan_body(carry, up):
+                y, nc = unit_body(carry, up)
+                return y, nc
+
+            x, nc = jax.lax.scan(scan_body, x, seg_p)
+        cache[f"seg{si}"] = nc
+    cache["len"] = jnp.asarray(S, jnp.int32)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = (x[:, -1] @ _head_weight(params, cfg)).astype(jnp.float32)
+    return _softcap(logits, cfg.final_softcap), cache
+
+
+def _extract_cache(p, h, cfg: LMConfig, is_local: bool, positions, max_len):
+    """Recompute the (cheap) KV projections of a prompt into cache layout."""
+    B, S, _ = h.shape
+    L = _cache_len_for(cfg, is_local, max_len)
+    if cfg.attn == "mla":
+        m = cfg.mla
+        kv_a = h @ p["wkv_a"]
+        ckv = rmsnorm(p["kv_norm"], kv_a[..., : m.kv_lora], cfg.norm_eps)
+        kpe = rope(
+            kv_a[:, :, None, m.kv_lora:], positions, cfg.rope_theta
+        )[:, :, 0, :]
+        out_ckv = jnp.zeros((B, L, m.kv_lora), ckv.dtype)
+        out_kpe = jnp.zeros((B, L, m.qk_rope), kpe.dtype)
+        n = min(S, L)
+        out_ckv = out_ckv.at[:, :n].set(ckv[:, S - n:])
+        out_kpe = out_kpe.at[:, :n].set(kpe[:, S - n:])
+        return {"ckv": out_ckv, "kpe": out_kpe}
+    KV, dh = cfg.n_kv_heads, cfg.head_dim
+    k = rope((h @ p["wk"]).reshape(B, S, KV, dh), positions, cfg.rope_theta)
+    v = (h @ p["wv"]).reshape(B, S, KV, dh)
+    ck = jnp.zeros((B, L, KV, dh), k.dtype)
+    cv = jnp.zeros((B, L, KV, dh), v.dtype)
+    n = min(S, L)
+    if is_local and cfg.window is not None:
+        # ring layout: absolute position p lives in slot p % L
+        src = jnp.arange(S - n, S)
+        ck = ck.at[:, src % L].set(k[:, S - n:])
+        cv = cv.at[:, src % L].set(v[:, S - n:])
+    else:
+        ck = ck.at[:, :n].set(k[:, S - n:])
+        cv = cv.at[:, :n].set(v[:, S - n:])
+    return {"k": ck, "v": cv}

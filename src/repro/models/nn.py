@@ -1,0 +1,144 @@
+"""Minimal NN substrate — parameter pytrees + pure-function layers.
+
+No flax/optax exist in this environment, so the framework carries its own
+layer toolkit: params are nested dicts of jnp arrays, layers are pure
+functions, initialisers take explicit PRNG keys.  Everything is
+pjit/shard_map friendly (pure pytrees, no global state).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# initialisers
+# --------------------------------------------------------------------------
+
+def dense_init(
+    key, d_in: int, d_out: int, dtype=jnp.float32, scale: Optional[float] = None,
+    bias: bool = True,
+) -> Params:
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def embed_init(key, n: int, d: int, dtype=jnp.float32, scale: float = 0.02
+               ) -> Params:
+    return {"emb": jax.random.normal(key, (n, d), dtype) * scale}
+
+
+def norm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+# --------------------------------------------------------------------------
+# layers
+# --------------------------------------------------------------------------
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embed(p: Params, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["emb"], ids, axis=0)
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * p["scale"]
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    y = y * p["scale"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y
+
+
+ACT: Dict[str, Callable] = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+    "ssp": lambda x: jax.nn.softplus(x) - jnp.log(2.0),  # shifted softplus
+    "sigmoid": jax.nn.sigmoid,
+    "identity": lambda x: x,
+}
+
+
+def mlp_init(key, dims: Sequence[int], dtype=jnp.float32, bias: bool = True
+             ) -> Params:
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"l{i}": dense_init(keys[i], dims[i], dims[i + 1], dtype, bias=bias)
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray, act: str = "silu",
+        final_act: str = "identity") -> jnp.ndarray:
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"l{i}"], x)
+        x = ACT[act](x) if i < n - 1 else ACT[final_act](x)
+    return x
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    """Gemma-2 style logit soft-capping."""
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# --------------------------------------------------------------------------
+# stacked (scan-able) parameter helpers
+# --------------------------------------------------------------------------
+
+def stack_init(init_fn: Callable[[jax.Array], Params], key, n: int) -> Params:
+    """Initialise ``n`` copies of a block's params, stacked on axis 0 —
+    the layout ``jax.lax.scan`` consumes (keeps the HLO flat in depth)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def scan_blocks(body: Callable, params: Params, x, *, unroll: int = 1):
+    """Run ``body(layer_params, x) -> x`` over stacked params via scan."""
+
+    def step(carry, lp):
+        return body(lp, carry), None
+
+    out, _ = jax.lax.scan(step, x, params, unroll=unroll)
+    return out
+
+
+def count_params(params: Params) -> int:
+    return sum(
+        int(x.size) for x in jax.tree_util.tree_leaves(params)
+        if hasattr(x, "size")
+    )
+
+
+def param_bytes(params: Params) -> int:
+    return sum(
+        int(x.size * x.dtype.itemsize)
+        for x in jax.tree_util.tree_leaves(params)
+        if hasattr(x, "size")
+    )

@@ -1,0 +1,2 @@
+from .din import DINConfig
+from . import din

@@ -1,0 +1,2 @@
+from .optim import AdamWConfig, AdamWState, adamw_init, adamw_update, schedule_lr
+from .steps import make_eval_step, make_train_step

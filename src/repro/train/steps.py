@@ -1,0 +1,88 @@
+"""train_step / eval_step factories: grads -> clip -> AdamW, with optional
+gradient accumulation (microbatching) and remat plumbed through the model
+loss functions.
+
+The returned step is a pure function ``(params, opt_state, batch) ->
+(params, opt_state, metrics)`` ready for ``jax.jit`` with in/out
+shardings from distributed/sharding.py.  Gradient accumulation scans over
+microbatch slices so peak activation memory is one microbatch.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optim import AdamWConfig, AdamWState, adamw_update
+
+
+LossFn = Callable[[Any, Dict[str, jnp.ndarray]], Any]
+
+
+def make_train_step(
+    loss_fn: LossFn,
+    opt_cfg: AdamWConfig,
+    *,
+    grad_accum: int = 1,
+    has_metrics: bool = True,
+) -> Callable:
+    """loss_fn(params, batch) -> scalar | (scalar, metrics dict)."""
+
+    def full_loss(params, batch):
+        out = loss_fn(params, batch)
+        if has_metrics:
+            loss, metrics = out
+        else:
+            loss, metrics = out, {}
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(full_loss, has_aux=True)
+
+    def step(params, opt_state: AdamWState, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            # split the leading batch dim into microbatches and scan
+            def micro(carry, mb):
+                acc_g, acc_l = carry
+                (l, _), g = grad_fn(params, mb)
+                return (
+                    jax.tree.map(jnp.add, acc_g, g),
+                    acc_l + l,
+                ), None
+
+            def reshape_mb(x):
+                b = x.shape[0]
+                assert b % grad_accum == 0, (b, grad_accum)
+                return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+
+            mbs = jax.tree.map(reshape_mb, batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss_sum), _ = jax.lax.scan(
+                micro, (zero_g, jnp.float32(0.0)), mbs
+            )
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss_sum / grad_accum
+            metrics = {}
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, grads, opt_state, params
+        )
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics.update(opt_metrics)
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def make_eval_step(loss_fn: LossFn, has_metrics: bool = True) -> Callable:
+    def step(params, batch):
+        out = loss_fn(params, batch)
+        return out[0] if has_metrics else out
+
+    return step

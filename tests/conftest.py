@@ -1,0 +1,38 @@
+import numpy as np
+import pytest
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro",
+    deadline=None,
+    max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("repro")
+
+
+def random_geosocial(rng: np.random.Generator, n: int, m: int,
+                     spatial_frac: float = 0.35, sink_bias: float = 0.8):
+    """Random geosocial graph; most spatial vertices become sinks (the
+    LBSN data model) but not all (general model paths get exercised)."""
+    from repro.core import make_graph
+
+    edges = rng.integers(0, n, size=(m, 2))
+    spatial = rng.random(n) < spatial_frac
+    drop = spatial[edges[:, 0]] & (rng.random(m) < sink_bias)
+    coords = (rng.random((n, 2)) * 100).astype(np.float32)
+    return make_graph(n, edges[~drop], coords, spatial)
+
+
+def random_queries(rng, g, n_q: int):
+    ext = g.spatial_extent()
+    w = max(ext[2] - ext[0], 1e-3)
+    h = max(ext[3] - ext[1], 1e-3)
+    us = rng.integers(0, g.n_nodes, size=n_q)
+    cx = rng.random(n_q) * w + ext[0]
+    cy = rng.random(n_q) * h + ext[1]
+    hw = rng.random(n_q) * w * 0.3
+    hh = rng.random(n_q) * h * 0.3
+    rects = np.stack([cx - hw, cy - hh, cx + hw, cy + hh], axis=1)
+    return us, rects.astype(np.float32)

@@ -1,0 +1,170 @@
+"""Every index method vs the BFS oracle — the paper's correctness core."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    METHODS,
+    batch_query,
+    build_index,
+    index_nbytes,
+    rangereach_oracle_batch,
+)
+from repro.data import get_dataset
+from conftest import random_geosocial, random_queries
+
+
+@given(st.integers(0, 10_000))
+def test_all_methods_match_oracle(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 60))
+    g = random_geosocial(rng, n, int(rng.integers(2, 4 * n)))
+    us, rects = random_queries(rng, g, 30)
+    want = rangereach_oracle_batch(g, us, rects)
+    for method in METHODS:
+        got = batch_query(build_index(g, method), us, rects)
+        assert (got == want).all(), method
+
+
+@given(st.integers(0, 10_000))
+def test_methods_on_spatial_nonsinks(seed):
+    """General data model: spatial vertices WITH out-edges (the paper's
+    §4.1 caveat — compression must only exclude spatial sinks)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 50))
+    g = random_geosocial(rng, n, int(rng.integers(4, 4 * n)),
+                         spatial_frac=0.5, sink_bias=0.2)
+    us, rects = random_queries(rng, g, 25)
+    want = rangereach_oracle_batch(g, us, rects)
+    for method in METHODS:
+        got = batch_query(build_index(g, method), us, rects)
+        assert (got == want).all(), method
+
+
+def test_figure1_running_example():
+    g = get_dataset("tiny")
+    a, h = 0, 7
+    # R containing h only (6,2)
+    rect = np.array([5.5, 1.5, 6.5, 2.5], np.float32)
+    for method in METHODS:
+        idx = build_index(g, method)
+        assert idx.query(a, rect), method           # a ~> d ~> h in R
+        # region with no venues
+        assert not idx.query(a, np.array([90, 90, 95, 95], np.float32))
+    # 2DReach builds trees for C1 = {f,g,h,i} and C2 = {h,i}
+    idx = build_index(g, "2dreach-comp")
+    assert idx.stats["distinct_rtrees"] == 2
+    sizes = sorted(idx.forest.tree_n_entries().tolist())
+    assert sizes == [2, 4]
+
+
+def test_spatial_sink_query_vertex():
+    """Alg. 2 line 1: a spatial sink query vertex answers via delta(q)."""
+    g = get_dataset("tiny")
+    f = 5  # spatial sink at (1, 1)
+    for method in METHODS:
+        idx = build_index(g, method)
+        assert idx.query(f, np.array([0.5, 0.5, 1.5, 1.5], np.float32))
+        assert not idx.query(f, np.array([5, 1, 8, 6], np.float32))
+
+
+def test_sharing_and_sizes():
+    rng = np.random.default_rng(7)
+    g = random_geosocial(rng, 200, 700)
+    base = build_index(g, "2dreach")
+    comp = build_index(g, "2dreach-comp")
+    ptr = build_index(g, "2dreach-pointer")
+    # compressed variants never build MORE trees than base
+    assert comp.stats["distinct_rtrees"] <= base.stats["distinct_rtrees"]
+    # pointer variant: smallest aux storage
+    assert ptr.nbytes_pointers() < comp.nbytes_pointers()
+    for idx in (base, comp, ptr):
+        nb = index_nbytes(idx)
+        assert nb["total"] == nb["rtree"] + nb["aux"]
+
+
+def test_global_dedup_beyond_paper():
+    rng = np.random.default_rng(9)
+    g = random_geosocial(rng, 150, 500)
+    from repro.core import build_2dreach
+
+    paper = build_2dreach(g, variant="comp", dedup="paper")
+    glob = build_2dreach(g, variant="comp", dedup="global")
+    assert glob.stats["distinct_rtrees"] <= paper.stats["distinct_rtrees"]
+    us, rects = random_queries(rng, g, 40)
+    assert (
+        paper.query_batch(us, rects) == glob.query_batch(us, rects)
+    ).all()
+
+
+def test_3dreach_interval_counts():
+    rng = np.random.default_rng(11)
+    g = random_geosocial(rng, 120, 500)
+    idx = build_index(g, "3dreach")
+    assert idx.labels.total_intervals >= idx.cond.n_comps  # >= 1 each
+    # every comp's own post is covered by its own label
+    from repro.core.interval_labels import labels_reachable
+
+    for c in range(0, idx.cond.n_comps, 7):
+        assert labels_reachable(idx.labels, c, c)
+
+
+def test_bitrank_property():
+    """BitRank rank/member vs a numpy popcount oracle."""
+    from repro.core import BitRank
+
+    rng = np.random.default_rng(123)
+    for n in (1, 31, 32, 33, 300, 1000):
+        mask = rng.random(n) < 0.3
+        br = BitRank.from_mask(mask)
+        ids = np.arange(n)
+        member, rank = br.test_rank(ids)
+        assert (member == mask).all()
+        want_rank = np.concatenate([[0], np.cumsum(mask)[:-1]])
+        assert (rank == want_rank).all()
+
+
+def test_duplicate_points_and_degenerate_rects():
+    """All spatial vertices at one location; zero-area query rects."""
+    from repro.core import make_graph
+
+    n = 30
+    rng = np.random.default_rng(5)
+    edges = rng.integers(0, n, size=(60, 2))
+    sm = np.zeros(n, bool)
+    sm[:10] = True
+    coords = np.zeros((n, 2), np.float32)
+    coords[:10] = 3.25  # all venues identical
+    g = make_graph(n, edges, coords, sm)
+    us = np.arange(n)
+    exact = np.array([[3.25, 3.25, 3.25, 3.25]] * n, np.float32)
+    miss = exact + 1.0
+    want_exact = rangereach_oracle_batch(g, us, exact)
+    for method in METHODS:
+        idx = build_index(g, method)
+        assert (batch_query(idx, us, exact) == want_exact).all(), method
+        assert not batch_query(idx, us, miss).any(), method
+
+
+def test_polygon_queries_vs_oracle():
+    """Footnote-2 extension: convex polygon regions (bbox prefilter +
+    exact half-plane test) vs a BFS + point-in-polygon oracle."""
+    from repro.core.polygon import polygon_oracle, polygon_query
+    from repro.core import build_2dreach
+
+    rng = np.random.default_rng(21)
+    g = random_geosocial(rng, 120, 400)
+    for variant in ("base", "comp", "pointer"):
+        idx = build_2dreach(g, variant=variant)
+        for q in range(40):
+            u = int(rng.integers(0, g.n_nodes))
+            # random convex polygon: hull of 5 points around a center
+            c = rng.random(2) * 100
+            pts = c + rng.standard_normal((8, 2)) * 15
+            from scipy.spatial import ConvexHull
+
+            hull = pts[ConvexHull(pts).vertices]
+            got = polygon_query(idx, u, hull)
+            want = polygon_oracle(g, u, hull)
+            assert got == want, (variant, u)

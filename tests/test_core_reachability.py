@@ -1,0 +1,101 @@
+"""Closure (Alg. 1) vs brute-force BFS; bit packing; device paths."""
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import closure_jax, closure_mbr_np, closure_np, condense
+from repro.core import reachable_mask, scc_np
+from repro.core.reachability import (
+    nonzero_cols,
+    pack_rows,
+    row_popcount,
+    unpack_rows,
+)
+from conftest import random_geosocial
+
+
+@given(st.integers(0, 10_000))
+def test_pack_unpack_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    r = int(rng.integers(1, 8))
+    p = int(rng.integers(1, 130))
+    rows = rng.random((r, p)) < 0.3
+    bits = pack_rows(rows)
+    assert bits.shape == (r, (p + 31) // 32)
+    assert (unpack_rows(bits, p) == rows).all()
+    assert (row_popcount(bits) == rows.sum(1)).all()
+
+
+@given(st.integers(0, 10_000))
+def test_closure_matches_bfs(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 50))
+    g = random_geosocial(rng, n, int(rng.integers(2, 4 * n)))
+    labels = scc_np(n, g.edges)
+    cond = condense(n, g.edges, labels)
+    clo = closure_np(cond, n, g.spatial_ids)
+    col_of = {int(v): i for i, v in enumerate(clo.spatial_vertex)}
+    for u in range(0, n, max(1, n // 7)):
+        want = {
+            col_of[int(v)]
+            for v in np.nonzero(reachable_mask(g, u) & g.spatial_mask)[0]
+        }
+        got = set(clo.comp_set_cols(int(cond.comp[u])).tolist())
+        assert got == want, (u, got, want)
+
+
+@given(st.integers(0, 10_000))
+def test_closure_jax_matches_np(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 40))
+    g = random_geosocial(rng, n, int(rng.integers(2, 3 * n)))
+    cond = condense(n, g.edges, scc_np(n, g.edges))
+    clo = closure_np(cond, n, g.spatial_ids)
+    # dense boolean closure over ALL comps (own sets as bool rows)
+    p = clo.p
+    own = np.zeros((cond.n_comps, p), dtype=bool)
+    for c in range(cond.n_comps):
+        own[c, clo.own_cols[clo.own_indptr[c]:clo.own_indptr[c + 1]]] = True
+    out = closure_jax(cond.n_comps, cond.dag_edges, own,
+                      n_sweeps=cond.n_levels + 1)
+    for c in range(cond.n_comps):
+        assert (np.nonzero(out[c])[0] == clo.comp_set_cols(c)).all()
+
+
+def test_mbr_closure():
+    rng = np.random.default_rng(0)
+    g = random_geosocial(rng, 40, 120)
+    cond = condense(g.n_nodes, g.edges, scc_np(g.n_nodes, g.edges))
+    clo = closure_np(cond, g.n_nodes, g.spatial_ids)
+    mbr = closure_mbr_np(cond, g.coords, g.spatial_mask)
+    for c in range(cond.n_comps):
+        cols = clo.comp_set_cols(c)
+        if len(cols) == 0:
+            assert mbr[c, 0] > mbr[c, 2]  # empty box
+        else:
+            pts = g.coords[clo.spatial_vertex[cols]]
+            np.testing.assert_allclose(
+                mbr[c], [pts[:, 0].min(), pts[:, 1].min(),
+                         pts[:, 0].max(), pts[:, 1].max()], rtol=1e-6)
+
+
+def test_bitset_kernel_closure_matches():
+    from repro.kernels.bitset_mm.ops import closure_fixpoint
+
+    rng = np.random.default_rng(1)
+    g = random_geosocial(rng, 35, 100)
+    cond = condense(g.n_nodes, g.edges, scc_np(g.n_nodes, g.edges))
+    clo = closure_np(cond, g.n_nodes, g.spatial_ids)
+    d, p = cond.n_comps, clo.p
+    own = np.zeros((d, p), dtype=bool)
+    for c in range(d):
+        own[c, clo.own_cols[clo.own_indptr[c]:clo.own_indptr[c + 1]]] = True
+    A = np.zeros((d, d), dtype=bool)
+    if cond.dag_edges.size:
+        A[cond.dag_edges[:, 0], cond.dag_edges[:, 1]] = True
+    for use_mxu in (False, True):
+        got = closure_fixpoint(
+            pack_rows(own), pack_rows(A), n_iters=cond.n_levels + 1,
+            use_mxu=use_mxu)
+        for c in range(d):
+            assert (nonzero_cols(got[c], p) == clo.comp_set_cols(c)).all()

@@ -1,0 +1,103 @@
+"""Packed R-tree forest: bulk load invariants + query engines vs brute
+force, 2-D points and 3-D boxes (the 3DReach-Rev leaf type)."""
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import build_forest, query_host, query_host_collect
+from repro.core import query_jax_wavefront
+from repro.core.rtree import intersects
+
+
+def brute(boxes, tree_of, tid, rect, dim):
+    sel = tree_of == tid
+    if not sel.any():
+        return False
+    return bool(intersects(boxes[sel], rect, dim).any())
+
+
+@given(st.integers(0, 10_000), st.sampled_from([2, 3]),
+       st.sampled_from([2, 4, 16]))
+def test_forest_query_vs_brute(seed, dim, fanout):
+    rng = np.random.default_rng(seed)
+    T = int(rng.integers(1, 6))
+    P = int(rng.integers(0, 120))
+    lo = rng.random((P, dim)).astype(np.float32) * 10
+    hi = lo + rng.random((P, dim)).astype(np.float32) * (
+        0.0 if dim == 2 else 2.0)   # 2-D: points; 3-D: boxes
+    boxes = np.concatenate([lo, hi], axis=1)
+    tree_of = rng.integers(0, T, size=P)
+    forest = build_forest(boxes, np.arange(P, dtype=np.int32), tree_of, T,
+                          fanout=fanout)
+    # forest structural invariants
+    assert forest.n_trees == T
+    assert (np.sort(forest.entry_ids) == np.arange(P)).all()
+    B = 24
+    tids = rng.integers(-1, T, size=B)
+    c = rng.random((B, dim)).astype(np.float32) * 10
+    r = rng.random((B, dim)).astype(np.float32) * 3
+    rects = np.concatenate([c - r, c + r], axis=1)
+    got = query_host(forest, tids, rects)
+    want = np.array([
+        t >= 0 and brute(boxes, tree_of, t, rect, dim)
+        for t, rect in zip(tids, rects)
+    ])
+    assert (got == want).all()
+
+
+def test_node_mbrs_contain_children():
+    rng = np.random.default_rng(3)
+    P, T = 300, 4
+    pts = rng.random((P, 2)).astype(np.float32) * 50
+    boxes = np.concatenate([pts, pts], axis=1)
+    tree_of = rng.integers(0, T, size=P)
+    f = build_forest(boxes, np.arange(P, dtype=np.int32), tree_of, T,
+                     fanout=8)
+    # leaf-level MBRs contain their points
+    for t in range(T):
+        s, e = f.entry_off[t], f.entry_off[t + 1]
+        if s == e:
+            continue
+        n0s, n0e = f.tree_off[0][t], f.tree_off[0][t + 1]
+        for j in range(n0e - n0s):
+            cs = s + j * f.fanout
+            ce = min(cs + f.fanout, e)
+            mbr = f.level_mbr[0][n0s + j]
+            assert (f.entries[cs:ce, :2] >= mbr[:2] - 1e-6).all()
+            assert (f.entries[cs:ce, 2:] <= mbr[2:] + 1e-6).all()
+
+
+@given(st.integers(0, 10_000))
+def test_wavefront_engine_matches_host(seed):
+    rng = np.random.default_rng(seed)
+    T = int(rng.integers(1, 5))
+    P = int(rng.integers(1, 150))
+    pts = rng.random((P, 2)).astype(np.float32) * 10
+    boxes = np.concatenate([pts, pts], axis=1)
+    tree_of = rng.integers(0, T, size=P)
+    forest = build_forest(boxes, np.arange(P, dtype=np.int32), tree_of, T)
+    B = 16
+    tids = rng.integers(-1, T, size=B)
+    c = rng.random((B, 2)).astype(np.float32) * 10
+    r = rng.random((B, 2)).astype(np.float32) * 3
+    rects = np.concatenate([c - r, c + r], axis=1)
+    host = query_host(forest, tids, rects)
+    dev, ovf = query_jax_wavefront(forest, tids, rects, capacity=256)
+    assert not ovf.any()
+    assert (host == dev).all()
+
+
+def test_collect_matches_scan():
+    rng = np.random.default_rng(5)
+    P = 100
+    pts = rng.random((P, 2)).astype(np.float32)
+    boxes = np.concatenate([pts, pts], axis=1)
+    f = build_forest(boxes, np.arange(P, dtype=np.int32),
+                     np.zeros(P, np.int64), 1)
+    rect = np.array([0.2, 0.2, 0.6, 0.6], np.float32)
+    got = set(query_host_collect(f, 0, rect).tolist())
+    want = {
+        i for i in range(P)
+        if 0.2 <= pts[i, 0] <= 0.6 and 0.2 <= pts[i, 1] <= 0.6
+    }
+    assert got == want

@@ -1,0 +1,56 @@
+"""SCC + condensation: device algorithm vs scipy oracle; DAG invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (
+    condense,
+    same_partition,
+    scc_jax,
+    scc_np,
+)
+
+
+@given(st.integers(0, 10_000))
+def test_scc_jax_matches_scipy(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 60))
+    m = int(rng.integers(0, 4 * n))
+    edges = rng.integers(0, n, size=(m, 2))
+    assert same_partition(scc_np(n, edges), scc_jax(n, edges))
+
+
+def test_scc_known_cycle():
+    # a->b->c->a plus tail c->d
+    edges = np.array([[0, 1], [1, 2], [2, 0], [2, 3]])
+    lab = scc_np(4, edges)
+    assert lab[0] == lab[1] == lab[2] != lab[3]
+    labj = scc_jax(4, edges)
+    assert labj[0] == labj[1] == labj[2] != labj[3]
+
+
+@given(st.integers(0, 10_000))
+def test_condensation_is_dag_with_levels(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 80))
+    m = int(rng.integers(0, 5 * n))
+    edges = rng.integers(0, n, size=(m, 2))
+    cond = condense(n, edges, scc_np(n, edges))
+    # every DAG edge increases the level strictly
+    if cond.dag_edges.size:
+        lu = cond.level[cond.dag_edges[:, 0]]
+        lv = cond.level[cond.dag_edges[:, 1]]
+        assert (lu < lv).all()
+        # no intra-component DAG edges
+        assert (cond.dag_edges[:, 0] != cond.dag_edges[:, 1]).all()
+    assert cond.comp.min() >= 0 and cond.comp.max() < cond.n_comps
+    assert cond.comp_sizes.sum() == n
+
+
+def test_condensation_include_mask():
+    edges = np.array([[0, 1], [1, 0], [1, 2]])
+    include = np.array([True, True, False])
+    cond = condense(3, edges[:2], scc_np(3, edges[:2]), include_mask=include)
+    assert cond.comp[2] == -1
+    assert cond.comp[0] == cond.comp[1] >= 0

@@ -1,0 +1,125 @@
+"""Sharding rules, ZeRO-1, small-mesh jit execution, elastic reshard."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.distributed import (
+    MeshAxes,
+    lm_param_spec,
+    opt_state_specs,
+    param_specs,
+    reshard,
+    zero1_specs,
+)
+from repro.models.lm import init_params
+from repro.train import adamw_init
+
+
+def _axes():
+    return MeshAxes(data=("data",), model="model")
+
+
+def test_lm_rules_shard_the_big_things():
+    axes = _axes()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_arch("gemma3-12b").make_config()  # full-size shapes
+    sds = jax.eval_shape(lambda k: init_params(k, cfg),
+                         jax.random.PRNGKey(0))
+    # pretend model axis is 16 for divisibility checks
+    specs = jax.tree_util.tree_map_with_path(
+        lambda path, x: lm_param_spec(
+            "/".join(str(getattr(k, 'key', k)) for k in path),
+            x.shape, axes, 16),
+        sds)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    d = {"/".join(str(getattr(k, "key", k)) for k in p): s
+         for p, s in flat}
+    emb = [v for k, v in d.items() if k.endswith("embed/emb")][0]
+    assert "model" in str(emb)
+    wq = [v for k, v in d.items() if k.endswith("attn/wq")][0]
+    assert "model" in str(wq)  # 16 heads * 256 = 4096 divisible
+    norm = [v for k, v in d.items() if "ln_f" in k][0]
+    assert "model" not in str(norm)
+
+
+def test_rules_fall_back_on_indivisible():
+    axes = _axes()
+    # gemma2: 8 heads * 256 = 2048 % 16 == 0 -> attention shards;
+    # but a fake 17-way model axis must fall back everywhere
+    cfg = get_arch("gemma2-2b").make_config()
+    sds = jax.eval_shape(lambda k: init_params(k, cfg),
+                         jax.random.PRNGKey(0))
+    specs = jax.tree_util.tree_map_with_path(
+        lambda path, x: lm_param_spec(
+            "/".join(str(getattr(k, 'key', k)) for k in path),
+            x.shape, axes, 17),
+        sds)
+    for s in jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)):
+        assert "model" not in str(s)
+
+
+def test_zero1_adds_data_axis():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    axes = _axes()
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((3,))}
+    pspecs = {"w": P(None, "model"), "b": P()}
+    # pretend data axis is 16
+    import repro.distributed.sharding as sh
+
+    out = sh.zero1_specs.__wrapped__ if hasattr(sh.zero1_specs, "__wrapped__") else None
+    specs = sh.zero1_specs(params, pspecs, axes, mesh)
+    # with data size 1 nothing changes
+    assert str(specs["w"]) == str(P(("data",), "model")) or \
+        str(specs["w"]) == str(P(None, "model"))
+
+
+def test_small_mesh_train_step_runs():
+    """Actually execute a sharded train step on a (1,1) mesh — exercises
+    with_sharding_constraint, shard_map MoE, and zero1 spec plumbing."""
+    from repro.models.lm import lm_loss
+    from repro.train import AdamWConfig, make_train_step
+
+    cfg = get_arch("llama4-maverick-400b-a17b").make_config(reduced=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    axes = _axes()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    step = make_train_step(
+        lambda p, b: lm_loss(p, b, cfg, mesh=mesh,
+                             act_spec=P(("data",), None, None), remat=True),
+        AdamWConfig(lr=1e-3))
+    with mesh:
+        p2, o2, m = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_reshard_roundtrip():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = {"w": jnp.ones((8, 4)), "b": jnp.zeros(3)}
+    specs = {"w": P(None, "model"), "b": P()}
+    out = reshard(tree, mesh, specs)
+    assert np.array_equal(np.asarray(out["w"]), np.ones((8, 4)))
+
+
+def test_run_with_recovery_retries():
+    from repro.distributed import run_with_recovery
+
+    calls = []
+
+    def segment(step):
+        calls.append(step)
+        if len(calls) < 3:
+            raise RuntimeError("transient")
+        return 99
+
+    out = run_with_recovery(segment, start_step=5, max_failures=5,
+                            backoff_s=0.0)
+    assert out == 99 and len(calls) == 3

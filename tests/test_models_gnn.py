@@ -1,0 +1,123 @@
+"""GNN internals: SO(3) machinery, equivariance, triplets, samplers."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import equiformer_v2
+from repro.models.gnn.dimenet import build_triplets
+from repro.models.gnn.so3 import real_sph_harm_np, rot_to_z, wigner_d_stack
+
+
+def _rand_rot(rng):
+    A = rng.standard_normal((3, 3))
+    Q, _ = np.linalg.qr(A)
+    if np.linalg.det(Q) < 0:
+        Q[:, 0] *= -1
+    return Q
+
+
+@pytest.mark.parametrize("l_max", [1, 3, 6])
+def test_wigner_rotates_sph_harm(l_max):
+    rng = np.random.default_rng(0)
+    Q = _rand_rot(rng)
+    n = rng.standard_normal((30, 3))
+    n /= np.linalg.norm(n, axis=1, keepdims=True)
+    D = wigner_d_stack(jnp.asarray(np.broadcast_to(Q, (30, 3, 3))), l_max)
+    Y = real_sph_harm_np(l_max, n)
+    Yr = real_sph_harm_np(l_max, n @ Q.T)
+    for l in range(l_max + 1):
+        got = np.einsum("eab,eb->ea", np.asarray(D[l]), Y[l])
+        np.testing.assert_allclose(got, Yr[l], atol=1e-5)
+
+
+def test_wigner_homomorphism_and_orthogonality():
+    rng = np.random.default_rng(1)
+    A, B = _rand_rot(rng), _rand_rot(rng)
+    L = 4
+    DA = wigner_d_stack(jnp.asarray(A)[None], L)
+    DB = wigner_d_stack(jnp.asarray(B)[None], L)
+    DAB = wigner_d_stack(jnp.asarray(A @ B)[None], L)
+    for l in range(L + 1):
+        np.testing.assert_allclose(
+            np.asarray(DA[l][0] @ DB[l][0]), np.asarray(DAB[l][0]),
+            atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(DA[l][0] @ DA[l][0].T), np.eye(2 * l + 1),
+            atol=1e-5)
+
+
+def test_rot_to_z():
+    rng = np.random.default_rng(2)
+    d = rng.standard_normal((50, 3))
+    d /= np.linalg.norm(d, axis=1, keepdims=True)
+    R = np.asarray(rot_to_z(jnp.asarray(d, jnp.float32)))
+    np.testing.assert_allclose(
+        np.einsum("eij,ej->ei", R, d), np.broadcast_to([0, 0, 1], (50, 3)),
+        atol=1e-5)
+
+
+def test_equiformer_invariance():
+    """Scalar (energy) output is exactly invariant under global rotation."""
+    rng = np.random.default_rng(3)
+    N, E = 14, 40
+    pos = jnp.asarray(rng.standard_normal((N, 3)), jnp.float32)
+    src = rng.integers(0, N, E)
+    dst = (src + 1 + rng.integers(0, N - 1, E)) % N
+    base = dict(pos=pos, edge_src=jnp.asarray(src, jnp.int32),
+                edge_dst=jnp.asarray(dst, jnp.int32),
+                species=jnp.asarray(rng.integers(0, 5, N), jnp.int32))
+    cfg = equiformer_v2.EquiformerV2Config(
+        n_layers=2, d_hidden=16, l_max=3, m_max=2, n_heads=4, n_rbf=8)
+    p = equiformer_v2.init_params(jax.random.PRNGKey(0), cfg)
+    e0 = float(equiformer_v2.apply(p, base, cfg))
+    for seed in range(3):
+        Q = _rand_rot(np.random.default_rng(10 + seed))
+        e1 = float(equiformer_v2.apply(
+            p, dict(base, pos=pos @ jnp.asarray(Q.T, jnp.float32)), cfg))
+        assert abs(e0 - e1) < 1e-3 * max(1.0, abs(e0)), (e0, e1)
+
+
+def test_build_triplets_oracle():
+    rng = np.random.default_rng(4)
+    N, E = 8, 20
+    src = rng.integers(0, N, E)
+    dst = (src + 1 + rng.integers(0, N - 1, E)) % N
+    kj, ji, mask = build_triplets(src, dst, N, 4096)
+    got = {(int(a), int(b)) for a, b, m in zip(kj, ji, mask) if m}
+    want = set()
+    for e1 in range(E):           # k -> j
+        for e2 in range(E):       # j -> i
+            if dst[e1] == src[e2] and src[e1] != dst[e2]:
+                want.add((e1, e2))
+    assert got == want
+
+
+def test_neighbor_sampler():
+    from repro.core.graph import build_csr
+    from repro.data import sample_blocks
+
+    rng = np.random.default_rng(5)
+    n = 300
+    edges = rng.integers(0, n, size=(3000, 2))
+    csr = build_csr(n, edges)
+    blk = sample_blocks(csr, np.arange(16), (5, 3),
+                        np.random.default_rng(0))
+    assert blk.n_seeds == 16
+    # fanout bounds per layer
+    s1, d1 = blk.layers[0]
+    assert len(s1) <= 16 * 5
+    # every sampled edge exists in the graph
+    eset = {(int(a), int(b)) for a, b in edges}
+    for src_l, dst_l in blk.layers:
+        for s, d in zip(src_l, dst_l):
+            u = int(blk.node_ids[d])
+            v = int(blk.node_ids[s])
+            assert (u, v) in eset
+    padded = sample_blocks(csr, np.arange(16), (5, 3),
+                           np.random.default_rng(0), pad_to=512)
+    assert padded.n_nodes == 512
+    for src_l, dst_l in padded.layers:
+        assert len(src_l) & (len(src_l) - 1) == 0  # power of two

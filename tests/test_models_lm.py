@@ -1,0 +1,180 @@
+"""LM internals: attention equivalences, decode==train consistency, MoE."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import (
+    LMConfig, MLASpec, MoESpec, decode_step, forward, init_params, prefill,
+)
+from repro.models.lm.attention import banded_attention, flash_attention
+from repro.models.lm.moe import _expert_ffn_local, _routing, moe_ffn
+
+
+def naive_attn(q, k, v, window=None, softcap=None):
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G, Hg = KV, H // KV
+    qr = q.reshape(B, S, G, Hg, dh)
+    s = jnp.einsum("bsghd,btgd->bghst", qr, k) * dh ** -0.5
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = i >= j
+    if window is not None:
+        mask = mask & (i - j < window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bghst,btgd->bsghd", p, v).reshape(B, S, H, dh)
+
+
+@pytest.mark.parametrize("blk", [16, 32])
+@pytest.mark.parametrize("softcap", [None, 20.0])
+def test_flash_matches_naive(blk, softcap):
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, dh = 2, 64, 4, 2, 16
+    q, k, v = (
+        jax.random.normal(jax.random.PRNGKey(i), s)
+        for i, s in enumerate(
+            [(B, S, H, dh), (B, S, KV, dh), (B, S, KV, dh)])
+    )
+    got = flash_attention(q, k, v, causal=True, blk_q=blk, blk_k=blk,
+                          softcap=softcap)
+    want = naive_attn(q, k, v, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [4, 12, 64, 200])
+def test_banded_matches_naive(window):
+    B, S, H, KV, dh = 2, 64, 4, 2, 16
+    q, k, v = (
+        jax.random.normal(jax.random.PRNGKey(i + 5), s)
+        for i, s in enumerate(
+            [(B, S, H, dh), (B, S, KV, dh), (B, S, KV, dh)])
+    )
+    got = banded_attention(q, k, v, window=window, blk=16)
+    want = naive_attn(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("flavor", ["gqa", "mla", "swa", "softcap"])
+def test_prefill_decode_matches_forward(flavor):
+    """Serving path: prefill(S) + decode == forward(S+1) last logits."""
+    kw = dict(name="t", n_layers=3, d_model=48, n_heads=4, n_kv_heads=2,
+              head_dim=12, d_ff=96, vocab=128)
+    if flavor == "mla":
+        kw.update(attn="mla", n_kv_heads=4,
+                  mla=MLASpec(q_lora=24, kv_lora=16, qk_nope=12, qk_rope=8,
+                              v_head=12))
+    if flavor == "swa":
+        kw.update(window=8, layer_schedule="L")
+    if flavor == "softcap":
+        kw.update(attn_softcap=30.0, final_softcap=20.0, window=8,
+                  layer_schedule="LG")
+    cfg = LMConfig(**kw)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 17
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab)
+    # reference: full forward over S+1 tokens
+    hidden, _ = forward(params, toks, cfg)
+    from repro.models.lm.model import _head_weight, _softcap
+
+    ref_logits = _softcap(
+        (hidden[:, -1] @ _head_weight(params, cfg)).astype(jnp.float32),
+        cfg.final_softcap)
+    # serve: prefill S tokens, decode token S
+    _, cache = prefill(params, toks[:, :S], cfg, max_len=S + 4)
+    got_logits, _ = decode_step(params, cache, toks[:, S], cfg)
+    np.testing.assert_allclose(
+        np.asarray(got_logits), np.asarray(ref_logits), atol=2e-3,
+        rtol=2e-3)
+
+
+def test_moe_capacity_matches_dense_dispatch():
+    """With generous capacity the packed path equals explicit per-expert
+    computation."""
+    E, k, d, f, T = 4, 2, 16, 32, 24
+    cfg = MoESpec(n_experts=E, top_k=k, d_expert=f, balance_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    from repro.models.lm.moe import moe_init
+
+    p = moe_init(key, d, f, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, d))
+    w, e, _ = _routing(x, p["router"], cfg)
+    got = _expert_ffn_local(x, w, e, p["w_gu"], p["w_d"], cfg, 0, E,
+                            cap=T * k, act="silu")
+    # dense reference
+    want = jnp.zeros_like(x)
+    for t in range(T):
+        for j in range(k):
+            ei = int(e[t, j])
+            gu = x[t] @ p["w_gu"][ei]
+            h = jax.nn.silu(gu[:f]) * gu[f:]
+            want = want.at[t].add(w[t, j] * (h @ p["w_d"][ei]))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4)
+
+
+def test_moe_shard_map_matches_local():
+    """EP shard_map path (1-device mesh) == direct local path."""
+    E, k, d, f, T = 8, 2, 16, 24, 32
+    cfg = MoESpec(n_experts=E, top_k=k, d_expert=f, n_shared=1, d_shared=32,
+                  balance_factor=8.0)
+    from repro.models.lm.moe import moe_init
+
+    p = moe_init(jax.random.PRNGKey(0), d, 32, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, d))
+    out_local, aux_local = moe_ffn(p, x, cfg, mesh=None)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with mesh:
+        out_sm, aux_sm = jax.jit(
+            lambda p, x: moe_ffn(p, x, cfg, mesh=mesh))(p, x)
+    np.testing.assert_allclose(
+        np.asarray(out_local), np.asarray(out_sm), atol=1e-5)
+    np.testing.assert_allclose(float(aux_local), float(aux_sm), atol=1e-5)
+
+
+def test_scan_segments_cover_all_layers():
+    for nl, sched, moe in [
+        (48, "G", MoESpec(n_experts=4, top_k=1, d_expert=8, interleave=2)),
+        (61, "G", MoESpec(n_experts=4, top_k=1, d_expert=8, first_dense=3)),
+        (48, "LLLLLG", None),
+        (26, "LG", None),
+        (24, "L", None),
+    ]:
+        cfg = LMConfig(name="x", n_layers=nl, d_model=8, n_heads=2,
+                       n_kv_heads=2, head_dim=4, d_ff=16, vocab=32,
+                       layer_schedule=sched, moe=moe)
+        segs = cfg.scan_segments()
+        total = sum(len(unit) * n for unit, n in segs)
+        assert total == nl, (sched, segs)
+
+
+def test_param_counts_sane():
+    from repro.configs import get_arch
+
+    # deepseek-v3 ~671B total / ~37B active
+    cfg = get_arch("deepseek-v3-671b").make_config()
+    c = cfg.param_counts()
+    assert 6.0e11 < c["total"] < 7.5e11, c
+    assert 3.0e10 < c["active"] < 4.5e10, c
+    # llama4 maverick ~400B total / ~17B active
+    cfg = get_arch("llama4-maverick-400b-a17b").make_config()
+    c = cfg.param_counts()
+    assert 3.0e11 < c["total"] < 4.8e11, c
+    assert 1.2e10 < c["active"] < 2.4e10, c
+
+
+def test_flash_block_skip_exact():
+    B, S, H, KV, dh = 2, 128, 4, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(7), (B, S, H, dh))
+    k = jax.random.normal(jax.random.PRNGKey(8), (B, S, KV, dh))
+    v = jax.random.normal(jax.random.PRNGKey(9), (B, S, KV, dh))
+    a = flash_attention(q, k, v, causal=True, blk_q=32, blk_k=32)
+    b = flash_attention(q, k, v, causal=True, blk_q=32, blk_k=32,
+                        block_skip=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
