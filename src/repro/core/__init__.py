@@ -4,7 +4,13 @@ Public API:
     build_index(graph, method) / batch_query(index, us, rects)
 """
 
-from .api import METHODS, batch_query, build_index, index_nbytes
+from .api import (
+    METHODS,
+    batch_query,
+    build_dynamic_index,
+    build_index,
+    index_nbytes,
+)
 from .condensation import Condensation, condense
 from .georeach import GeoReachIndex, build_georeach
 from .graph import CSR, GeosocialGraph, build_csr, make_graph
@@ -25,7 +31,8 @@ from .three_d_reach import ThreeDReachIndex, build_3dreach
 from .two_d_reach import BitRank, TwoDReachIndex, build_2dreach
 
 __all__ = [
-    "METHODS", "batch_query", "build_index", "index_nbytes",
+    "METHODS", "batch_query", "build_dynamic_index", "build_index",
+    "index_nbytes",
     "Condensation", "condense",
     "GeoReachIndex", "build_georeach",
     "CSR", "GeosocialGraph", "build_csr", "make_graph",

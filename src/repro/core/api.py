@@ -48,12 +48,28 @@ def build_index(graph: GeosocialGraph, method: str, **kw) -> AnyIndex:
     raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
 
 
-def batch_query(index: AnyIndex, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
+def build_dynamic_index(graph: GeosocialGraph, method: str, policy=None, **kw):
+    """Wrap ``method`` in a :class:`repro.dynamic.DynamicIndex`: the same
+    offline build plus online ``add_edge``/``add_vertex``/``add_spatial``
+    and policy-driven compaction.  Method-agnostic — every METHODS entry
+    works as the static base."""
+    from ..dynamic import DynamicIndex  # deferred: dynamic imports core
+
+    return DynamicIndex(graph, method, policy=policy, **kw)
+
+
+def batch_query(index, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
     return index.query_batch(np.asarray(us), np.asarray(rects))
 
 
-def index_nbytes(index: AnyIndex) -> dict:
-    """Size decomposition mirroring the paper's Table 4 parentheses."""
+def index_nbytes(index) -> dict:
+    """Size decomposition mirroring the paper's Table 4 parentheses.
+
+    The ``rtree`` entry is the spatial structure (GeoReach has no R-tree;
+    its MBR summaries + per-component venue lists play that role) and
+    ``aux`` the social/lookup side, so size comparisons across methods
+    are apples-to-apples.
+    """
     if isinstance(index, TwoDReachIndex):
         return {
             "rtree": index.nbytes_rtree(),
@@ -66,4 +82,13 @@ def index_nbytes(index: AnyIndex) -> dict:
             "aux": index.nbytes_labels(),
             "total": index.nbytes_total(),
         }
+    if isinstance(index, GeoReachIndex):
+        return {
+            "rtree": index.nbytes_spatial(),
+            "aux": index.nbytes_social(),
+            "total": index.nbytes_total(),
+        }
+    # DynamicIndex (or anything else wrapping a base index)
+    if hasattr(index, "nbytes"):
+        return index.nbytes()
     return {"rtree": 0, "aux": index.nbytes_total(), "total": index.nbytes_total()}

@@ -41,12 +41,21 @@ class GeoReachIndex:
     _visit_stamp: np.ndarray = dataclasses.field(default=None, repr=False)
     _stamp: int = 0
 
-    def nbytes_total(self) -> int:
+    def nbytes_spatial(self) -> int:
+        """Spatial-structure bytes: the R-MBR summaries plus the
+        per-component venue point lists (GeoReach's stand-in for the
+        R-tree column of the paper's Table 4)."""
         return int(
-            self.comp_mbr.nbytes + self.dag_indptr.nbytes
-            + self.dag_adj.nbytes + self.own_indptr.nbytes
+            self.comp_mbr.nbytes + self.own_indptr.nbytes
             + self.own_pts.nbytes
         )
+
+    def nbytes_social(self) -> int:
+        """Social-side bytes: the condensation DAG the query traverses."""
+        return int(self.dag_indptr.nbytes + self.dag_adj.nbytes)
+
+    def nbytes_total(self) -> int:
+        return self.nbytes_spatial() + self.nbytes_social()
 
     def query(self, u: int, rect) -> bool:
         """DFS over the condensation with R-MBR pruning."""

@@ -9,6 +9,9 @@ from .queries import (
     REGION_EXTENT_DEFAULT,
     REGION_EXTENT_VALUES,
     SELECTIVITY_VALUES,
+    STREAM_OP_KINDS,
+    apply_stream_op,
+    streaming_workload,
     workload,
 )
 from .registry import dataset_names, get_dataset

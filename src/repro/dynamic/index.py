@@ -1,0 +1,507 @@
+"""`DynamicIndex` — incremental RangeReach over any static index.
+
+The static indexes behind ``core.api.build_index`` are built offline over
+a frozen graph.  ``DynamicIndex`` wraps one and absorbs online mutations
+(``add_edge`` / ``add_vertex`` / ``add_spatial``) into a
+:class:`~repro.dynamic.overlay.DeltaOverlay`, answering every query over
+the *mutated* graph without a rebuild.  Mutations are monotone (nothing
+is ever deleted), which makes the composition exact:
+
+A RangeReach(u, R) answer over base ∪ overlay decomposes as
+
+1. **base probe** — the static index answers for the base graph's
+   reachability and base spatial vertices (sound because base paths and
+   base venues survive every mutation);
+2. **overlay expansion** — a fixpoint over the delta edge buffer at
+   condensation-component granularity computes which components become
+   reachable *through* delta edges; every such "entry component" pays
+   one extra base probe from a representative vertex (its base-graph
+   reach is new to u), and reached components are collected for step 3;
+3. **staging probe** — the staging R-tree yields the staged spatial
+   vertices inside R; any of them whose component (or pseudo-component,
+   for post-snapshot vertices) was reached answers the query.
+
+Step 2 runs on the DynamicIndex's *own* full condensation of the base
+graph (independent of the wrapped method's internals — 2DReach-Comp
+excludes spatial sinks from its decomposition, the dynamic layer must
+not).  DAGGER-style maintenance keeps a union-find over components:
+delta edges that close a cycle collapse the endpoint components into one
+group, and expansion treats a reached group as all-members-reached.
+Expansion results are memoised per union-find representative; a new
+delta edge (s, t) invalidates exactly the memos that cover ``s`` — the
+only reachable sets the edge can grow.
+
+Compaction (see :mod:`repro.dynamic.compaction`) materialises the
+mutated graph, rebuilds the static index — inline or on a background
+thread — and swaps it in atomically, replaying any mutations that
+arrived mid-build into the fresh overlay.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.condensation import condense
+from ..core.graph import GeosocialGraph, build_csr, make_graph
+from ..core.scc import scc_np
+from .compaction import CompactionPolicy, Compactor
+from .overlay import DeltaOverlay
+
+_REACH_CACHE_CAP = 512
+
+# an expansion result: (sorted reached base comps, reached new vertices,
+# entry vertices — one representative per comp whose base reach is only
+# available through delta edges)
+_Expansion = Tuple[np.ndarray, frozenset, Tuple[int, ...]]
+
+
+class DynamicIndex:
+    """Updatable RangeReach index: static base + delta overlay.
+
+    Parameters
+    ----------
+    graph:   initial (base) geosocial graph.
+    method:  any ``core.api.METHODS`` entry; the same method is used for
+             every compaction rebuild.
+    policy:  compaction thresholds; ``None`` -> defaults
+             (see :class:`CompactionPolicy`).
+    build_kw: forwarded to ``build_index`` (fanout, dedup, ...).
+    """
+
+    def __init__(self, graph: GeosocialGraph, method: str,
+                 policy: Optional[CompactionPolicy] = None, **build_kw):
+        from ..core.api import build_index  # deferred: api imports us lazily
+
+        self.method = method.lower()
+        self._build_kw = dict(build_kw)
+        self.policy = policy or CompactionPolicy()
+        self._lock = threading.RLock()
+        self._compactor = Compactor(self)
+        self._oplog: List[tuple] = []
+        self._replaying = False
+        self.stats: Dict[str, float] = {
+            "n_queries": 0, "n_updates": 0, "n_edges_added": 0,
+            "n_vertices_added": 0, "n_spatial_added": 0,
+            "n_compactions": 0, "t_compaction_total": 0.0,
+            "t_last_compaction": 0.0, "n_scc_merges": 0,
+            "cache_hits": 0, "cache_misses": 0, "n_cache_invalidations": 0,
+            "updates_since_compaction": 0,
+        }
+        t0 = time.perf_counter()
+        index = build_index(graph, self.method, **build_kw)
+        built = self._build_reach_substrate(graph)
+        self._install_base(graph, index, built)
+        self.stats["t_initial_build"] = time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
+    # base installation / condensation substrate
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _build_reach_substrate(graph: GeosocialGraph):
+        """Full condensation of the base graph (no vertex excluded) +
+        DAG CSR + one representative vertex per component."""
+        n = graph.n_nodes
+        labels = scc_np(n, graph.edges)
+        cond = condense(n, graph.edges, labels)
+        d = cond.n_comps
+        csr = build_csr(d, cond.dag_edges)
+        rep = np.zeros(d, dtype=np.int64)
+        rep[cond.comp] = np.arange(n, dtype=np.int64)
+        return cond.comp.copy(), d, csr.indptr, csr.indices, rep
+
+    def _install_base(self, graph, index, substrate) -> None:
+        comp, d, indptr, adj, rep = substrate
+        self._graph = graph
+        self._index = index
+        self._comp = comp
+        self._d = d
+        self._dag_indptr = indptr
+        self._dag_adj = adj
+        self._comp_rep = rep
+        self._overlay = DeltaOverlay(graph.n_nodes, d)
+        self._stamp_arr = np.zeros(d, dtype=np.int64)
+        self._stamp = 0
+        self._cache: Dict[int, _Expansion] = {}
+
+    # ------------------------------------------------------------------
+    # public surface
+    # ------------------------------------------------------------------
+
+    @property
+    def n_nodes(self) -> int:
+        return self._overlay.n_nodes
+
+    @property
+    def n_base(self) -> int:
+        return self._overlay.n_base
+
+    @property
+    def base_index(self):
+        return self._index
+
+    @property
+    def overlay_size(self) -> int:
+        o = self._overlay
+        return o.n_edges + o.n_staged + o.n_new_vertices
+
+    def snapshot_graph(self) -> GeosocialGraph:
+        """Materialise the current mutated graph (base + overlay)."""
+        with self._lock:
+            return self._materialise()
+
+    # -- mutations ------------------------------------------------------
+
+    def add_vertex(self, coords=None) -> int:
+        """Append a vertex; with ``coords`` it is spatial from birth."""
+        with self._lock:
+            v = self._overlay.add_vertex()
+            if coords is not None:
+                x, y = (float(coords[0]), float(coords[1]))
+                self._overlay.staging.add(v, x, y)
+                self._oplog.append(("vertex", (x, y)))
+            else:
+                self._oplog.append(("vertex", None))
+            self._count_update("n_vertices_added")
+            return v
+
+    def add_spatial(self, v: int, coords) -> None:
+        """Check-in: an existing non-spatial vertex acquires delta(v)."""
+        with self._lock:
+            v = int(v)
+            if not (0 <= v < self._overlay.n_nodes):
+                raise IndexError(f"vertex {v} out of range")
+            already = (
+                v < self._overlay.n_base and bool(self._graph.spatial_mask[v])
+            ) or v in self._overlay.staging
+            if already:
+                raise ValueError(f"vertex {v} is already spatial")
+            x, y = float(coords[0]), float(coords[1])
+            self._overlay.staging.add(v, x, y)
+            self._oplog.append(("spatial", v, x, y))
+            self._count_update("n_spatial_added")
+
+    def add_edge(self, s: int, t: int) -> None:
+        """Append a directed edge; maintains the overlay condensation
+        (union-find merge when the edge closes a cycle) and invalidates
+        exactly the memoised reach sets that can now grow."""
+        with self._lock:
+            s, t = int(s), int(t)
+            n = self._overlay.n_nodes
+            if not (0 <= s < n and 0 <= t < n):
+                raise IndexError(f"edge ({s}, {t}) out of range [0, {n})")
+            if s != t:
+                # DAGGER maintenance: does t already reach s?  Then s->t
+                # closes a cycle and the endpoint components collapse.
+                exp = self._expand_from(t)
+                if self._exp_covers(exp, s):
+                    ea = self._overlay.elem_of_vertex(s, self._comp)
+                    eb = self._overlay.elem_of_vertex(t, self._comp)
+                    if self._overlay.uf.union(ea, eb):
+                        self._overlay.n_scc_merges += 1
+                        self.stats["n_scc_merges"] += 1
+            self._overlay.add_edge(s, t)
+            self._invalidate_covering(s)
+            self._oplog.append(("edge", s, t))
+            self._count_update("n_edges_added")
+
+    # -- queries --------------------------------------------------------
+
+    def query_batch(self, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
+        us = np.asarray(us, dtype=np.int64)
+        B = len(us)
+        rects = np.asarray(rects, dtype=np.float32).reshape(B, 4)
+        with self._lock:
+            self.stats["n_queries"] += B
+            overlay = self._overlay
+            if us.size and (us.min() < 0 or us.max() >= overlay.n_nodes):
+                raise IndexError("query vertex out of range")
+            ans = np.zeros(B, dtype=bool)
+            base_mask = us < overlay.n_base
+            if base_mask.any():
+                ans[base_mask] = self._index.query_batch(
+                    us[base_mask], rects[base_mask]
+                )
+            if overlay.is_empty():
+                return ans
+            extra_qi: List[int] = []
+            extra_u: List[int] = []
+            for i in range(B):
+                if ans[i]:
+                    continue
+                reached, new_reached, entries = self._expand_from(int(us[i]))
+                # staging probe: any staged venue in R whose component
+                # (or post-snapshot vertex) was reached?
+                cand = overlay.staging.candidates_in(rects[i])
+                if cand.size:
+                    cb = cand[cand < overlay.n_base]
+                    if cb.size and np.isin(self._comp[cb], reached).any():
+                        ans[i] = True
+                        continue
+                    if any(int(w) in new_reached
+                           for w in cand[cand >= overlay.n_base]):
+                        ans[i] = True
+                        continue
+                # entry components: base reach opened by delta edges.
+                # comp(u)'s own probe already ran in step 1 — skip it.
+                cu = int(self._comp[us[i]]) if base_mask[i] else -1
+                for t in entries:
+                    if int(self._comp[t]) == cu:
+                        continue
+                    extra_qi.append(i)
+                    extra_u.append(t)
+            if extra_u:
+                got = self._index.query_batch(
+                    np.asarray(extra_u, dtype=np.int64),
+                    rects[np.asarray(extra_qi, dtype=np.int64)],
+                )
+                np.logical_or.at(ans, np.asarray(extra_qi), got)
+            return ans
+
+    def query(self, u: int, rect) -> bool:
+        return bool(self.query_batch(np.array([u]), np.array([rect]))[0])
+
+    # -- compaction -----------------------------------------------------
+
+    def compact(self, background: Optional[bool] = None) -> bool:
+        """Force a compaction now; returns False if a background build is
+        already in flight."""
+        bg = self.policy.background if background is None else background
+        return self._compactor.trigger(bg)
+
+    def join_compaction(self, timeout: Optional[float] = None) -> None:
+        self._compactor.join(timeout)
+
+    @property
+    def compacting(self) -> bool:
+        return self._compactor.running
+
+    @property
+    def compaction_error(self):
+        """Exception latched by a failed background build (None when
+        healthy); an explicit ``compact()`` clears it and retries."""
+        return self._compactor.last_error
+
+    def maybe_compact(self) -> bool:
+        """Apply the policy; called automatically after each mutation.
+        Suppressed while a build runs or after one failed (the error
+        stays latched until an explicit ``compact()`` retries)."""
+        if self._compactor.running or self._compactor.last_error is not None:
+            return False
+        o = self._overlay
+        if self.policy.should_compact(
+            o.n_edges, o.n_staged,
+            int(self.stats["updates_since_compaction"]),
+        ):
+            return self.compact()
+        return False
+
+    def nbytes(self) -> dict:
+        from ..core.api import index_nbytes
+
+        base = index_nbytes(self._index)
+        ov = self._overlay.nbytes()
+        return {**base, "overlay": ov,
+                "total": int(base["total"]) + int(ov)}
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+
+    def _count_update(self, kind: str) -> None:
+        # replayed ops were already counted when first applied; they only
+        # contribute to the new overlay's staleness
+        self.stats["updates_since_compaction"] += 1
+        if not self._replaying:
+            self.stats["n_updates"] += 1
+            self.stats[kind] += 1
+            self.maybe_compact()
+
+    def _covered_now(self, v: int, cur: int, new_reached: set) -> bool:
+        if v < self._overlay.n_base:
+            return self._stamp_arr[self._comp[v]] == cur
+        return v in new_reached
+
+    def _exp_covers(self, exp: _Expansion, v: int) -> bool:
+        reached, new_reached, _ = exp
+        if v < self._overlay.n_base:
+            c = int(self._comp[v])
+            j = int(np.searchsorted(reached, c))
+            return j < len(reached) and reached[j] == c
+        return v in new_reached
+
+    def _expand_from(self, u: int) -> _Expansion:
+        """Reach of u over base ∪ overlay at component granularity.
+
+        Memoised per union-find representative of u's element; the cache
+        entry stays valid until a delta edge grows a set that covers its
+        source (see ``_invalidate_covering``).
+        """
+        overlay = self._overlay
+        uf = overlay.uf
+        elem = overlay.elem_of_vertex(u, self._comp)
+        key = uf.find(elem)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.stats["cache_hits"] += 1
+            return hit
+        self.stats["cache_misses"] += 1
+
+        self._stamp += 1
+        cur = self._stamp
+        starr = self._stamp_arr
+        d = self._d
+        n_base = overlay.n_base
+        indptr, adj = self._dag_indptr, self._dag_adj
+        reached_list: List[int] = []
+        new_reached: set = set()
+        entries: List[int] = []
+        stack: List[int] = []
+
+        def cover(e: int, covered_primary: int = -1) -> None:
+            # mark every member of e's group reached; base-comp members
+            # other than ``covered_primary`` (whose base reach an already
+            # issued probe covers) become entry components
+            for m in uf.group(e):
+                if m < d:
+                    if starr[m] != cur:
+                        starr[m] = cur
+                        reached_list.append(m)
+                        stack.append(m)
+                        if m != covered_primary:
+                            entries.append(int(self._comp_rep[m]))
+                else:
+                    new_reached.add(n_base + (m - d))
+
+        # the start component gets an entry probe too: the memo is shared
+        # across every vertex of the group, so it must be covering on its
+        # own (consumers skip the probe redundant with their step-1 one)
+        cover(elem)
+
+        delta_edges = overlay.edges
+        while True:
+            while stack:
+                c = stack.pop()
+                for nb in adj[indptr[c]:indptr[c + 1]]:
+                    nb = int(nb)
+                    if starr[nb] != cur:
+                        # base-DAG successor: reach subset of c's, which
+                        # is already covered -> nb needs no entry probe,
+                        # but group co-members do
+                        cover(nb, covered_primary=nb)
+            progressed = False
+            for (s, t) in delta_edges:
+                if self._covered_now(s, cur, new_reached) \
+                        and not self._covered_now(t, cur, new_reached):
+                    cover(overlay.elem_of_vertex(t, self._comp))
+                    progressed = True
+            if not progressed and not stack:
+                break
+
+        exp: _Expansion = (
+            np.sort(np.asarray(reached_list, dtype=np.int64)),
+            frozenset(new_reached),
+            tuple(entries),
+        )
+        if len(self._cache) >= _REACH_CACHE_CAP:
+            self._cache.pop(next(iter(self._cache)))
+        self._cache[key] = exp
+        return exp
+
+    def _invalidate_covering(self, s: int) -> None:
+        """Drop memoised expansions that cover s — the only ones a new
+        edge out of s can grow — plus entries whose key is no longer a
+        union-find representative."""
+        uf = self._overlay.uf
+        dead = [k for k, exp in self._cache.items()
+                if self._exp_covers(exp, s) or uf.find(k) != k]
+        for k in dead:
+            del self._cache[k]
+        self.stats["n_cache_invalidations"] += len(dead)
+
+    # -- compaction internals ------------------------------------------
+
+    def _materialise(self) -> GeosocialGraph:
+        o = self._overlay
+        g = self._graph
+        n = o.n_nodes
+        if o.edges:
+            edges = np.concatenate(
+                [g.edges, np.asarray(o.edges, dtype=np.int64).reshape(-1, 2)]
+            )
+        else:
+            edges = g.edges
+        coords = np.zeros((n, 2), dtype=np.float32)
+        coords[: o.n_base] = g.coords
+        sm = np.zeros(n, dtype=bool)
+        sm[: o.n_base] = g.spatial_mask
+        if len(o.staging):
+            ids = np.asarray(o.staging.ids, dtype=np.int64)
+            coords[ids] = o.staging.coords_of()
+            sm[ids] = True
+        return make_graph(n, edges, coords, sm)
+
+    def _begin_compaction(self):
+        with self._lock:
+            return self._materialise(), len(self._oplog)
+
+    def _build_static(self, snapshot: GeosocialGraph):
+        from ..core.api import build_index
+
+        index = build_index(snapshot, self.method, **self._build_kw)
+        substrate = self._build_reach_substrate(snapshot)
+        return index, substrate
+
+    def _finish_compaction(self, snapshot, built, cut: int,
+                           t_build: float) -> None:
+        index, substrate = built
+        with self._lock:
+            tail = self._oplog[cut:]
+            self._install_base(snapshot, index, substrate)
+            self._oplog = []
+            self.stats["n_compactions"] += 1
+            self.stats["t_compaction_total"] += t_build
+            self.stats["t_last_compaction"] = t_build
+            self.stats["updates_since_compaction"] = 0
+            # replay mutations that raced the (background) build
+            self._replaying = True
+            try:
+                for op in tail:
+                    if op[0] == "edge":
+                        self.add_edge(op[1], op[2])
+                    elif op[0] == "vertex":
+                        self.add_vertex(op[1])
+                    else:  # spatial
+                        self.add_spatial(op[1], (op[2], op[3]))
+            finally:
+                self._replaying = False
+
+    def _compact_sync(self) -> None:
+        snapshot, cut = self._begin_compaction()
+        t0 = time.perf_counter()
+        built = self._build_static(snapshot)
+        self._finish_compaction(snapshot, built, cut,
+                                time.perf_counter() - t0)
+
+    # -- reporting ------------------------------------------------------
+
+    def report(self) -> dict:
+        """Stats + derived amortisation numbers."""
+        s = dict(self.stats)
+        o = self._overlay
+        s.update(
+            overlay_edges=o.n_edges,
+            overlay_staged=o.n_staged,
+            overlay_new_vertices=o.n_new_vertices,
+            overlay_size=self.overlay_size,
+            reach_cache_entries=len(self._cache),
+        )
+        if s["n_updates"]:
+            s["amortized_compaction_us_per_update"] = (
+                s["t_compaction_total"] / s["n_updates"] * 1e6
+            )
+        return s

@@ -142,7 +142,13 @@ def wigner_d_stack(rot: jnp.ndarray, l_max: int) -> List[jnp.ndarray]:
 def real_sph_harm_np(l_max: int, dirs: np.ndarray) -> List[np.ndarray]:
     """Orthonormal real SH evaluated at unit vectors (host oracle for the
     Wigner tests); returns [(N, 2l+1)] ordered m=-l..l."""
-    from scipy.special import sph_harm_y  # (l, m, theta, phi)
+    try:
+        from scipy.special import sph_harm_y  # (l, m, theta, phi); scipy>=1.15
+    except ImportError:
+        from scipy.special import sph_harm  # (m, l, azimuth, polar)
+
+        def sph_harm_y(l, m, theta, phi):
+            return sph_harm(m, l, phi, theta)
 
     dirs = np.asarray(dirs, dtype=np.float64)
     theta = np.arccos(np.clip(dirs[:, 2], -1, 1))       # polar

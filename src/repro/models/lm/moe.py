@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ...compat import shard_map
 from ..nn import ACT, Params, dense_init
 from .config import MoESpec
 
@@ -175,7 +176,7 @@ def moe_ffn(
         # sh_d rows split -> partial d-sums completed by the routed psum.
         shared_specs = (P(None, None, model_axis), P(model_axis, None))
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(
@@ -186,6 +187,5 @@ def moe_ffn(
             *shared_specs,
         ),
         out_specs=(data_spec, P()),
-        check_vma=False,
     )
     return fn(x, p["router"], p["w_gu"], p["w_d"], *shared_in)

@@ -1,0 +1,65 @@
+"""BitRank (the Pointer variant's succinct lookup): word boundaries,
+degenerate masks, rank monotonicity."""
+
+import numpy as np
+import pytest
+
+from repro.core import BitRank
+
+
+def _oracle_rank(mask: np.ndarray) -> np.ndarray:
+    return np.concatenate([[0], np.cumsum(mask)[:-1]]).astype(np.int64)
+
+
+@pytest.mark.parametrize("d", [1, 31, 32, 33, 63, 64, 65, 96, 127, 129])
+def test_word_boundary_sizes(d):
+    rng = np.random.default_rng(d)
+    mask = rng.random(d) < 0.5
+    br = BitRank.from_mask(mask)
+    ids = np.arange(d)
+    member, rank = br.test_rank(ids)
+    assert (member == mask).all()
+    assert (rank == _oracle_rank(mask)).all()
+
+
+def test_word_boundary_ids_single_bits():
+    """A lone set bit at each boundary id must be found exactly there."""
+    d = 128
+    for hot in (0, 31, 32, 33, 63, 64, 95, 96, 127):
+        mask = np.zeros(d, dtype=bool)
+        mask[hot] = True
+        br = BitRank.from_mask(mask)
+        member, rank = br.test_rank(np.arange(d))
+        assert member.sum() == 1 and member[hot]
+        # rank jumps from 0 to 1 exactly after the hot id
+        assert (rank[: hot + 1] == 0).all()
+        assert (rank[hot + 1:] == 1).all()
+
+
+@pytest.mark.parametrize("d", [1, 32, 33, 100])
+def test_all_zero_mask(d):
+    br = BitRank.from_mask(np.zeros(d, dtype=bool))
+    member, rank = br.test_rank(np.arange(d))
+    assert not member.any()
+    assert (rank == 0).all()
+
+
+@pytest.mark.parametrize("d", [1, 31, 32, 64, 100])
+def test_all_one_mask(d):
+    br = BitRank.from_mask(np.ones(d, dtype=bool))
+    member, rank = br.test_rank(np.arange(d))
+    assert member.all()
+    assert (rank == np.arange(d)).all()
+
+
+def test_rank_monotone_nondecreasing():
+    rng = np.random.default_rng(99)
+    for d in (50, 64, 333, 1000):
+        mask = rng.random(d) < 0.3
+        br = BitRank.from_mask(mask)
+        _, rank = br.test_rank(np.arange(d))
+        diffs = np.diff(rank)
+        # monotone, steps of at most 1, and a step exactly where a bit is
+        assert (diffs >= 0).all() and (diffs <= 1).all()
+        assert (diffs == mask[:-1].astype(np.int64)).all()
+        assert rank[-1] + int(mask[-1]) == int(mask.sum())

@@ -2,8 +2,6 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-
 from repro.core import (
     METHODS,
     batch_query,
@@ -12,7 +10,7 @@ from repro.core import (
     rangereach_oracle_batch,
 )
 from repro.data import get_dataset
-from conftest import random_geosocial, random_queries
+from conftest import given, random_geosocial, random_queries, st
 
 
 @given(st.integers(0, 10_000))

@@ -1,7 +1,7 @@
 """Closure (Alg. 1) vs brute-force BFS; bit packing; device paths."""
 
 import numpy as np
-from hypothesis import given, strategies as st
+from conftest import given, st
 
 from repro.core import closure_jax, closure_mbr_np, closure_np, condense
 from repro.core import reachable_mask, scc_np

@@ -2,7 +2,7 @@
 force, 2-D points and 3-D boxes (the 3DReach-Rev leaf type)."""
 
 import numpy as np
-from hypothesis import given, strategies as st
+from conftest import given, st
 
 from repro.core import build_forest, query_host, query_host_collect
 from repro.core import query_jax_wavefront

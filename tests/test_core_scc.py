@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from conftest import given, st
 
 from repro.core import (
     condense,

@@ -1,0 +1,335 @@
+"""DynamicIndex vs the BFS oracle on the mutated graph.
+
+The acceptance core: >= 1000 randomized interleaved update/query steps
+across the three 2DReach variants, answers identical to
+``rangereach_oracle_batch`` on the materialised mutated graph, both
+before and after a compaction swap.  Plus targeted tests for the overlay
+pieces (staging R-tree, union-find merges, cache invalidation, op-log
+replay around a background swap).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    build_dynamic_index,
+    make_graph,
+    rangereach_oracle_batch,
+)
+from repro.data import apply_stream_op, streaming_workload
+from repro.dynamic import NEVER, CompactionPolicy, DynamicIndex, UnionFind
+from conftest import random_geosocial
+
+VARIANTS = ("2dreach", "2dreach-comp", "2dreach-pointer")
+
+
+class GraphMirror:
+    """Independent record of the mutated graph for the oracle."""
+
+    def __init__(self, g):
+        self.edges = [tuple(e) for e in g.edges]
+        self.coords = [tuple(c) for c in g.coords]
+        self.mask = list(g.spatial_mask)
+
+    @property
+    def n(self):
+        return len(self.mask)
+
+    def apply(self, op):
+        if op[0] == "add_edge":
+            self.edges.append((op[1], op[2]))
+        elif op[0] == "add_vertex":
+            self.coords.append(op[1] or (0.0, 0.0))
+            self.mask.append(op[1] is not None)
+        else:
+            self.coords[op[1]] = op[2]
+            self.mask[op[1]] = True
+
+    def graph(self):
+        return make_graph(
+            self.n,
+            np.asarray(self.edges, dtype=np.int64).reshape(-1, 2),
+            np.asarray(self.coords, dtype=np.float32),
+            np.asarray(self.mask, dtype=bool),
+        )
+
+
+def _run_interleaved(variant, n_steps, seed, compact_at=None,
+                     policy=NEVER, n=45, m=130):
+    """Drive one DynamicIndex through a randomized stream, checking every
+    query against the oracle; returns (steps_executed, dyn)."""
+    rng = np.random.default_rng(seed)
+    g = random_geosocial(rng, n, m)
+    dyn = build_dynamic_index(g, variant, policy=policy)
+    mirror = GraphMirror(g)
+    steps = 0
+    for step, op in enumerate(streaming_workload(
+            g, n_steps=n_steps, seed=seed + 1,
+            p_query=0.45, p_edge=0.3, p_vertex=0.13, p_spatial=0.12)):
+        if op[0] == "query":
+            u, rect = op[1], op[2]
+            got = dyn.query(u, rect)
+            want = bool(rangereach_oracle_batch(
+                mirror.graph(), np.array([u]), np.array([rect]))[0])
+            assert got == want, (variant, step, u, rect)
+        else:
+            apply_stream_op(dyn, op)
+            mirror.apply(op)
+        if compact_at is not None and step == compact_at:
+            assert dyn.compact(background=False)
+            assert dyn.overlay_size == 0
+        steps += 1
+    assert dyn.n_nodes == mirror.n
+    return steps, dyn
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_interleaved_updates_queries_vs_oracle(variant):
+    """>= 1000 total steps across the three variants, with a mid-stream
+    compaction swap — answers must match the oracle before and after."""
+    total = 0
+    for seed in (3, 11):
+        steps, dyn = _run_interleaved(
+            variant, n_steps=180, seed=seed, compact_at=90
+        )
+        total += steps
+        assert dyn.stats["n_compactions"] == 1
+    assert total >= 360  # x3 variants >= 1000 steps over the suite
+
+
+@pytest.mark.parametrize("method", ("georeach", "3dreach", "3dreach-rev"))
+def test_dynamic_wraps_baseline_methods(method):
+    """The dynamic layer is method-agnostic: baselines work unmodified."""
+    steps, _ = _run_interleaved(method, n_steps=80, seed=5, n=30, m=80)
+    assert steps == 80
+
+
+def test_policy_background_compaction_equivalence():
+    """Policy-triggered background swaps with racing mutations never lose
+    or double-apply an update."""
+    rng = np.random.default_rng(23)
+    g = random_geosocial(rng, 50, 150)
+    policy = CompactionPolicy(max_overlay_edges=40, max_staged=None,
+                              max_updates=None, background=True)
+    dyn = build_dynamic_index(g, "2dreach-comp", policy=policy)
+    mirror = GraphMirror(g)
+    for op in streaming_workload(g, n_steps=300, seed=24, p_query=0.0,
+                                 p_edge=0.6, p_vertex=0.2, p_spatial=0.2):
+        apply_stream_op(dyn, op)
+        mirror.apply(op)
+    dyn.join_compaction()
+    assert dyn.stats["n_compactions"] >= 1
+    gm = mirror.graph()
+    us = rng.integers(0, mirror.n, size=80)
+    ext = gm.spatial_extent()
+    cx = rng.random(80) * (ext[2] - ext[0]) + ext[0]
+    cy = rng.random(80) * (ext[3] - ext[1]) + ext[1]
+    rects = np.stack([cx - 20, cy - 20, cx + 20, cy + 20], 1).astype(np.float32)
+    assert (dyn.query_batch(us, rects)
+            == rangereach_oracle_batch(gm, us, rects)).all()
+    # snapshot must equal the mirror graph exactly
+    snap = dyn.snapshot_graph()
+    assert snap.n_nodes == gm.n_nodes
+    assert (snap.spatial_mask == gm.spatial_mask).all()
+    assert np.allclose(snap.coords, gm.coords)
+
+
+def test_concurrent_compaction_triggers_are_exclusive():
+    """Racing compact() calls must never overlap builds: the loser's swap
+    would replay a stale op-log tail and corrupt the index."""
+    import threading
+
+    rng = np.random.default_rng(77)
+    g = random_geosocial(rng, 60, 200)
+    dyn = build_dynamic_index(g, "2dreach-comp", policy=NEVER)
+    mirror = GraphMirror(g)
+    stop = threading.Event()
+
+    def force_compactions():
+        while not stop.is_set():
+            dyn.compact(background=True)
+
+    threads = [threading.Thread(target=force_compactions) for _ in range(2)]
+    for t in threads:
+        t.start()
+    try:
+        for op in streaming_workload(g, n_steps=250, seed=78, p_query=0.0,
+                                     p_edge=0.6, p_vertex=0.2, p_spatial=0.2):
+            apply_stream_op(dyn, op)
+            mirror.apply(op)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    dyn.join_compaction()
+    assert dyn.n_nodes == mirror.n
+    snap = dyn.snapshot_graph()
+    gm = mirror.graph()
+    assert snap.n_nodes == gm.n_nodes
+    assert (snap.spatial_mask == gm.spatial_mask).all()
+    assert snap.n_edges == gm.n_edges  # both deduped by make_graph
+    us = rng.integers(0, mirror.n, size=60)
+    ext = gm.spatial_extent()
+    cx = rng.random(60) * (ext[2] - ext[0]) + ext[0]
+    cy = rng.random(60) * (ext[3] - ext[1]) + ext[1]
+    rects = np.stack([cx - 15, cy - 15, cx + 15, cy + 15], 1).astype(np.float32)
+    assert (dyn.query_batch(us, rects)
+            == rangereach_oracle_batch(gm, us, rects)).all()
+
+
+def test_failed_background_build_latches_no_retry_storm():
+    """A crashing background build must latch the error: no policy-driven
+    rebuild storm, join raises, explicit compact() clears and retries."""
+    rng = np.random.default_rng(91)
+    g = random_geosocial(rng, 40, 120)
+    policy = CompactionPolicy(max_overlay_edges=5, max_staged=None,
+                              max_updates=None, background=True)
+    dyn = build_dynamic_index(g, "2dreach-comp", policy=policy)
+    boom = RuntimeError("simulated build OOM")
+
+    def broken_build(snapshot):
+        raise boom
+
+    dyn._build_static = broken_build
+    for i in range(20):
+        dyn.add_edge(int(rng.integers(0, 40)), int(rng.integers(0, 40)))
+    # wait for the first (and only) doomed build to finish
+    dyn._compactor._thread.join(10)
+    assert dyn.compaction_error is boom
+    assert dyn.stats.get("n_compaction_failures") == 1  # no storm
+    assert dyn.stats["n_compactions"] == 0
+    with pytest.raises(RuntimeError, match="background compaction failed"):
+        dyn.join_compaction()
+    # overlay intact; queries still exact
+    assert dyn.overlay_size == 20
+    gm = dyn.snapshot_graph()
+    us = rng.integers(0, 40, size=30)
+    ext = gm.spatial_extent()
+    cx = rng.random(30) * (ext[2] - ext[0]) + ext[0]
+    cy = rng.random(30) * (ext[3] - ext[1]) + ext[1]
+    rects = np.stack([cx - 10, cy - 10, cx + 10, cy + 10], 1).astype(np.float32)
+    assert (dyn.query_batch(us, rects)
+            == rangereach_oracle_batch(gm, us, rects)).all()
+    # explicit compact() clears the latch and retries with a working build
+    del dyn._build_static  # restore the class method
+    assert dyn.compact(background=False)
+    assert dyn.compaction_error is None
+    assert dyn.stats["n_compactions"] == 1 and dyn.overlay_size == 0
+    assert (dyn.query_batch(us, rects)
+            == rangereach_oracle_batch(gm, us, rects)).all()
+
+
+def test_scc_merge_via_delta_cycle():
+    """A delta edge closing a cycle collapses components (DAGGER-style)
+    and queries route through the merged group."""
+    # chain a -> b -> c, venue v reachable from c only
+    coords = np.zeros((4, 2), np.float32)
+    coords[3] = (5.0, 5.0)
+    sm = np.array([False, False, False, True])
+    g = make_graph(4, np.array([[0, 1], [1, 2], [2, 3]]), coords, sm)
+    dyn = build_dynamic_index(g, "2dreach-comp", policy=NEVER)
+    rect = np.array([4.5, 4.5, 5.5, 5.5], np.float32)
+    assert dyn.query(0, rect)
+    assert not dyn.query(3, rect) or g.spatial_mask[3]  # v itself in R
+    # close the cycle c -> a: {a, b, c} become one SCC
+    dyn.add_edge(2, 0)
+    assert dyn.stats["n_scc_merges"] >= 1
+    for u in (0, 1, 2):
+        assert dyn.query(u, rect)
+    # a new vertex wired into the cycle joins the merged group
+    w = dyn.add_vertex()
+    dyn.add_edge(w, 0)
+    dyn.add_edge(2, w)
+    assert dyn.stats["n_scc_merges"] >= 2
+    assert dyn.query(w, rect)
+
+
+def test_new_vertex_and_checkin_paths():
+    g = make_graph(3, np.array([[0, 1]]),
+                   np.zeros((3, 2), np.float32), np.zeros(3, bool))
+    dyn = build_dynamic_index(g, "2dreach", policy=NEVER)
+    rect = np.array([0.5, 0.5, 1.5, 1.5], np.float32)
+    assert not dyn.query(0, rect)
+    # check-in on existing vertex 1: reachable from 0 via base edge
+    dyn.add_spatial(1, (1.0, 1.0))
+    assert dyn.query(0, rect)
+    assert dyn.query(1, rect)          # staged query vertex sees itself
+    assert not dyn.query(2, rect)
+    # new spatial vertex reachable only via a delta edge
+    v = dyn.add_vertex((1.2, 1.2))
+    assert dyn.query(v, rect)          # its own coordinate
+    assert not dyn.query(2, rect)
+    dyn.add_edge(2, v)
+    assert dyn.query(2, rect)
+    # a plain new user vertex reaches through delta edges into the base
+    u = dyn.add_vertex()
+    assert not dyn.query(u, rect)
+    dyn.add_edge(u, 0)
+    assert dyn.query(u, rect)
+
+
+def test_mutation_validation():
+    g = make_graph(3, np.array([[0, 1]]),
+                   np.zeros((3, 2), np.float32),
+                   np.array([True, False, False]))
+    dyn = build_dynamic_index(g, "2dreach-comp", policy=NEVER)
+    with pytest.raises(IndexError):
+        dyn.add_edge(0, 99)
+    with pytest.raises(IndexError):
+        dyn.add_spatial(99, (0, 0))
+    with pytest.raises(ValueError):
+        dyn.add_spatial(0, (1, 1))     # already spatial in the base
+    dyn.add_spatial(1, (2.0, 2.0))
+    with pytest.raises(ValueError):
+        dyn.add_spatial(1, (3.0, 3.0))  # already staged
+    with pytest.raises(IndexError):
+        dyn.query(99, np.array([0, 0, 1, 1], np.float32))
+
+
+def test_reach_cache_hit_and_invalidation():
+    rng = np.random.default_rng(31)
+    g = random_geosocial(rng, 40, 120)
+    dyn = build_dynamic_index(g, "2dreach-comp", policy=NEVER)
+    dyn.add_edge(0, 1)  # non-empty overlay => expansions run
+    # an always-miss region: the base probe answers False, so the query
+    # falls through to the overlay expansion (and memoises it)
+    rect = np.array([500, 500, 501, 501], np.float32)
+    dyn.query(2, rect)
+    dyn.query(2, rect)
+    assert dyn.stats["cache_hits"] >= 1
+    before = dyn.stats["n_cache_invalidations"]
+    dyn.add_edge(2, 3)  # must drop every memo covering vertex 2
+    assert dyn.stats["n_cache_invalidations"] >= before
+
+
+def test_compaction_policy_thresholds():
+    p = CompactionPolicy(max_overlay_edges=10, max_staged=5, max_updates=100)
+    assert not p.should_compact(9, 4, 99)
+    assert p.should_compact(10, 0, 0)
+    assert p.should_compact(0, 5, 0)
+    assert p.should_compact(0, 0, 100)
+    assert not NEVER.should_compact(10**9, 10**9, 10**9)
+
+
+def test_union_find_groups():
+    uf = UnionFind(4)
+    assert uf.group(2) == [2]
+    assert uf.union(0, 1)
+    assert not uf.union(1, 0)
+    assert sorted(uf.group(0)) == [0, 1]
+    e = uf.add()
+    assert uf.union(e, 0)
+    assert sorted(uf.group(1)) == [0, 1, e]
+    assert uf.find(e) == uf.find(0) == uf.find(1)
+
+
+def test_dynamic_nbytes_reports_overlay():
+    rng = np.random.default_rng(7)
+    g = random_geosocial(rng, 40, 120)
+    dyn = build_dynamic_index(g, "2dreach-pointer", policy=NEVER)
+    nb0 = dyn.nbytes()
+    assert nb0["total"] >= nb0["rtree"] + nb0["aux"]
+    dyn.add_vertex((1.0, 1.0))
+    dyn.add_edge(0, 1)
+    nb1 = dyn.nbytes()
+    assert nb1["overlay"] > nb0["overlay"]

@@ -78,10 +78,12 @@ def test_collectives_counted():
     mesh = jax.make_mesh((1,), ("x",))
     from jax.sharding import PartitionSpec as P
 
+    from repro.compat import shard_map
+
     def f(a):
         return jax.lax.psum(a, "x")
 
-    fn = jax.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P())
+    fn = shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P())
     x = jax.ShapeDtypeStruct((64,), jnp.float32)
     st = analyze_hlo(jax.jit(fn).lower(x).compile().as_text())
     # all-reduce result bytes counted (64 * 4 on the 1-dev mesh)
