@@ -5,17 +5,25 @@ workload runs for real on this host, so this hillclimb measures
 wall-clock per query across engine variants and structural parameters:
 
     engine    host wavefront | jit wavefront (capacity c) | pallas leaf
+              | device (compile-once QueryEngine, hierarchical descent)
     fanout    R-tree node width (VMEM tile shape analogue)
     capacity  jit wavefront frontier budget
 
 plus the build-side closure: per-level scatter-OR vs the bitset_mm
 fixpoint (VPU word loop vs MXU unpack-matmul) at growing component
 counts.  Each configuration is correctness-checked against the host
-engine before timing.  Output: results/perf_rangereach.json.
+engine before timing.
+
+Outputs: results/perf_rangereach.json (full sweep) and a root-level
+BENCH_rangereach.json summary tracking the perf trajectory — leaf tiles
+scanned by the hierarchical device engine vs the full leaf scan, and the
+steady-state recompile / forest-re-transposition counts (both must stay
+zero).  ``--smoke`` runs a seconds-scale subset for CI.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -23,14 +31,14 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import build_2dreach, query_host, query_jax_wavefront
+from repro.core import QueryEngine, build_2dreach, query_host, query_jax_wavefront
 from repro.data import get_dataset, workload
+from repro.kernels.range_query import ops as rq_ops
 from repro.kernels.range_query.ops import range_query_forest
 
-OUT = os.path.join(
-    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    "results", "perf_rangereach.json",
-)
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT = os.path.join(ROOT, "results", "perf_rangereach.json")
+BENCH_OUT = os.path.join(ROOT, "BENCH_rangereach.json")
 
 
 def _t(fn, repeats=5):
@@ -43,28 +51,31 @@ def _t(fn, repeats=5):
     return float(np.median(ts))
 
 
-def engine_sweep(dataset="gowalla", scale=0.5, n_q=2000) -> List[Dict]:
+def engine_sweep(dataset="gowalla", scale=0.5, n_q=2000,
+                 fanouts=(8, 16, 32, 64), capacities=(32, 64, 128, 256),
+                 repeats=5) -> List[Dict]:
     g = get_dataset(dataset, scale=scale)
     us, rects = workload(g, n_q, extent_ratio=0.05, seed=5)
     rows = []
-    for fanout in (8, 16, 32, 64):
+    for fanout in fanouts:
         idx = build_2dreach(g, variant="comp", fanout=fanout)
         tid = idx.lookup_tree(us)
         ref = query_host(idx.forest, tid, rects)
+        full = idx.query_batch(us, rects)
         # host engine
-        dt = _t(lambda: query_host(idx.forest, tid, rects))
+        dt = _t(lambda: query_host(idx.forest, tid, rects), repeats=repeats)
         rows.append(dict(engine="host", fanout=fanout, capacity=None,
                          us_per_q=dt / n_q * 1e6,
                          depth=idx.forest.depth))
         # jit wavefront at several capacities
-        for cap in (32, 64, 128, 256):
+        for cap in capacities:
             got, ovf = query_jax_wavefront(idx.forest, tid, rects,
                                            capacity=cap)
             valid = ~np.asarray(ovf)
             assert (np.asarray(got)[valid] == ref[valid]).all()
             ovf_frac = float(np.asarray(ovf).mean())
             dt = _t(lambda: query_jax_wavefront(
-                idx.forest, tid, rects, capacity=cap))
+                idx.forest, tid, rects, capacity=cap), repeats=repeats)
             rows.append(dict(engine="wavefront", fanout=fanout,
                              capacity=cap, us_per_q=dt / n_q * 1e6,
                              overflow_frac=ovf_frac,
@@ -77,17 +88,45 @@ def engine_sweep(dataset="gowalla", scale=0.5, n_q=2000) -> List[Dict]:
         rows.append(dict(engine="pallas_leafscan", fanout=fanout,
                          capacity=None, us_per_q=dt / n_q * 1e6,
                          depth=idx.forest.depth))
+        # device engine: compile-once hierarchical descent
+        eng = QueryEngine(idx)
+        got = eng.query_batch(us, rects)
+        assert (got == full).all(), "device engine disagrees with host"
+        # steady-state gates: repeat queries, then assert no new traces
+        # and no new host-side forest transpositions
+        compiles0 = eng.n_compiles
+        soa0 = rq_ops.SOA_BUILDS
+        tiles0 = eng.stats["tiles_scanned"]
+        grid0 = eng.stats["tiles_grid"]
+        full0 = eng.stats["tiles_full_scan"]
+        dt = _t(lambda: eng.query_batch(us, rects), repeats=repeats)
+        recompiles = eng.n_compiles - compiles0
+        retranspositions = rq_ops.SOA_BUILDS - soa0
+        batches = eng.stats["batches"] - 1  # minus pre-gate warm batch
+        rows.append(dict(
+            engine="device", fanout=fanout, capacity=None,
+            us_per_q=dt / n_q * 1e6, depth=idx.forest.depth,
+            n_leaf_tiles=eng.n_tiles,
+            tiles_scanned_per_batch=(
+                (eng.stats["tiles_scanned"] - tiles0) / max(batches, 1)),
+            tiles_grid_per_batch=(
+                (eng.stats["tiles_grid"] - grid0) / max(batches, 1)),
+            tiles_full_scan_per_batch=(
+                (eng.stats["tiles_full_scan"] - full0) / max(batches, 1)),
+            steady_state_recompiles=recompiles,
+            steady_state_retranspositions=retranspositions,
+        ))
     return rows
 
 
-def closure_sweep() -> List[Dict]:
+def closure_sweep(scales=(0.1, 0.25, 0.5)) -> List[Dict]:
     """Build-side: per-level scatter-OR vs bitset-matmul fixpoint."""
     from repro.core import condense, scc_np
     from repro.core.reachability import closure_np, pack_rows
     from repro.kernels.bitset_mm.ops import closure_fixpoint
 
     rows = []
-    for scale in (0.1, 0.25, 0.5):
+    for scale in scales:
         g = get_dataset("yelp", scale=scale)
         labels = scc_np(g.n_nodes, g.edges)
         cond = condense(g.n_nodes, g.edges, labels)
@@ -100,9 +139,8 @@ def closure_sweep() -> List[Dict]:
         if d <= 12000:
             # dense closure paths only feasible at small d
             own = np.zeros((d, p), dtype=bool)
-            for c in range(d):
-                own[c, clo.own_cols[
-                    clo.own_indptr[c]:clo.own_indptr[c + 1]]] = True
+            own[np.repeat(np.arange(d), np.diff(clo.own_indptr)),
+                clo.own_cols] = True
             A = np.zeros((d, d), dtype=bool)
             if cond.dag_edges.size:
                 A[cond.dag_edges[:, 0], cond.dag_edges[:, 1]] = True
@@ -116,15 +154,66 @@ def closure_sweep() -> List[Dict]:
     return rows
 
 
+def bench_summary(engine_rows: List[Dict]) -> Dict:
+    """Root-level perf-trajectory datapoint (BENCH_rangereach.json)."""
+    device = [r for r in engine_rows if r["engine"] == "device"]
+    best = {}
+    for name in ("host", "wavefront", "pallas_leafscan", "device"):
+        cands = [r for r in engine_rows if r["engine"] == name]
+        if cands:
+            best[name] = min(r["us_per_q"] for r in cands)
+    scanned = sum(r["tiles_scanned_per_batch"] for r in device)
+    grid = sum(r["tiles_grid_per_batch"] for r in device)
+    full = sum(r["tiles_full_scan_per_batch"] for r in device)
+    return {
+        "unit": "us_per_query (best over structural params)",
+        "engines": best,
+        "hierarchical_device_engine": {
+            "leaf_tiles_scanned_per_batch": scanned,
+            "grid_steps_per_batch_incl_bucket_padding": grid,
+            "leaf_tiles_full_scan_per_batch": full,
+            "scan_fraction": scanned / full if full else None,
+            "strictly_fewer_than_full_scan": bool(scanned < full),
+            "steady_state_recompiles": int(sum(
+                r["steady_state_recompiles"] for r in device)),
+            "steady_state_retranspositions": int(sum(
+                r["steady_state_retranspositions"] for r in device)),
+        },
+    }
+
+
 def main():
-    out = {"engine_sweep": engine_sweep(), "closure": closure_sweep()}
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale subset for CI: one fanout/"
+                         "capacity, small dataset, no closure sweep")
+    args = ap.parse_args()
+
+    if args.smoke:
+        engines = engine_sweep(dataset="yelp", scale=0.1, n_q=256,
+                               fanouts=(16,), capacities=(64,), repeats=2)
+        closure = closure_sweep(scales=(0.1,))
+    else:
+        engines = engine_sweep()
+        closure = closure_sweep()
+    out = {"engine_sweep": engines, "closure": closure}
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
         json.dump(out, f, indent=1)
-    for r in out["engine_sweep"]:
+    summary = bench_summary(engines)
+    with open(BENCH_OUT, "w") as f:
+        json.dump(summary, f, indent=1)
+    for r in engines:
         print(r)
-    for r in out["closure"]:
+    for r in closure:
         print(r)
+    print(json.dumps(summary, indent=1))
+    dev = summary["hierarchical_device_engine"]
+    assert dev["strictly_fewer_than_full_scan"], \
+        "hierarchical engine failed to prune any leaf tiles"
+    assert dev["steady_state_recompiles"] == 0, "steady-state recompile"
+    assert dev["steady_state_retranspositions"] == 0, \
+        "steady-state host-side forest re-transposition"
 
 
 if __name__ == "__main__":

@@ -1,11 +1,12 @@
 """End-to-end driver: a RangeReach serving node (the paper's workload).
 
 Phase 1 (static): builds the 2DReach-Comp index over a Yelp-shaped
-graph, verifies the three query engines against each other and the
+graph, verifies the four query engines against each other and the
 oracle, then serves batched request streams and reports
-latency/throughput per engine — host wavefront, jit wavefront, and the
-Pallas leaf-scan kernel (interpret mode on CPU; the same call compiles
-to the real kernel on TPU).
+latency/throughput per engine — host wavefront, jit wavefront, the
+Pallas leaf-scan kernel, and the compile-once device QueryEngine
+(fused pointer lookup + hierarchically-pruned descent; interpret mode
+on CPU, the same calls compile to real kernels on TPU).
 
 Phase 2 (dynamic): wraps the same graph in a DynamicIndex and serves a
 *mutating* stream — new users, follows and check-ins interleaved with
@@ -24,6 +25,7 @@ from repro.core import (
     batch_query,
     build_dynamic_index,
     build_index,
+    engine_for,
     query_host,
     query_jax_wavefront,
     rangereach_oracle_batch,
@@ -42,7 +44,8 @@ print(f"[build] 2dreach-comp in {time.perf_counter() - t0:.2f}s, "
 # ----- request stream ------------------------------------------------------
 BATCHES = 10
 BATCH = 256
-lat = {"host": [], "wavefront": [], "kernel": []}
+engine = engine_for(index)   # one-time device upload (compile-once serving)
+lat = {"host": [], "wavefront": [], "kernel": [], "device": []}
 for b in range(BATCHES):
     us, rects = workload(g, BATCH, extent_ratio=0.05, seed=100 + b)
     tid = index.lookup_tree(us)
@@ -60,13 +63,21 @@ for b in range(BATCHES):
     kr = range_query_forest(index.forest, tid, rects)
     lat["kernel"].append(time.perf_counter() - t0)
 
+    t0 = time.perf_counter()
+    dv = engine.query_batch(us, rects)
+    lat["device"].append(time.perf_counter() - t0)
+
     assert not ovf.any()
     assert (host == wf).all() and (host == kr).all(), "engine mismatch"
+    full = batch_query(index, us, rects)
+    assert (dv == full).all(), "device engine mismatch"  # incl. Alg. 2 case
     if b == 0:  # full-pipeline (Alg. 2) answers vs oracle
-        full = batch_query(index, us, rects)
         want = rangereach_oracle_batch(g, us[:64], rects[:64])
         assert (full[:64] == want).all()
         print("[verify] engines agree; oracle check OK")
+print(f"[serve] device engine: {engine.n_compiles} compiled shapes "
+      f"(steady state), {engine.stats['tiles_scanned']}"
+      f"/{engine.stats['tiles_full_scan']} leaf tiles scanned")
 
 for name, ts in lat.items():
     ts = np.array(ts[1:])  # drop warmup/compile batch
@@ -77,7 +88,7 @@ for name, ts in lat.items():
 # ----- mutating stream (phase 2) -------------------------------------------
 print("\n[dynamic] serving a mutating stream (updates + queries interleaved)")
 dyn = build_dynamic_index(
-    g, "2dreach-comp",
+    g, "2dreach-comp", engine="device",   # device base probe, host overlay
     policy=CompactionPolicy(max_overlay_edges=4096, background=True),
 )
 STEPS = 4000

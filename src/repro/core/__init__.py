@@ -12,6 +12,7 @@ from .api import (
     index_nbytes,
 )
 from .condensation import Condensation, condense
+from .engine import QueryEngine, engine_for
 from .georeach import GeoReachIndex, build_georeach
 from .graph import CSR, GeosocialGraph, build_csr, make_graph
 from .interval_labels import IntervalLabels, build_interval_labels
@@ -34,6 +35,7 @@ __all__ = [
     "METHODS", "batch_query", "build_dynamic_index", "build_index",
     "index_nbytes",
     "Condensation", "condense",
+    "QueryEngine", "engine_for",
     "GeoReachIndex", "build_georeach",
     "CSR", "GeosocialGraph", "build_csr", "make_graph",
     "IntervalLabels", "build_interval_labels",

@@ -58,7 +58,24 @@ def build_dynamic_index(graph: GeosocialGraph, method: str, policy=None, **kw):
     return DynamicIndex(graph, method, policy=policy, **kw)
 
 
-def batch_query(index, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
+def batch_query(index, us: np.ndarray, rects: np.ndarray,
+                engine: str = "host") -> np.ndarray:
+    """Batched RangeReach through ``index``.
+
+    ``engine="host"`` is the NumPy path every index supports.
+    ``engine="device"`` routes 2DReach indexes through the
+    compile-once :class:`~repro.core.engine.QueryEngine` (uploaded and
+    memoised on first use); index types without a device engine fall
+    back to the host path.
+    """
+    if engine == "device":
+        from .engine import engine_for  # deferred: engine imports kernels
+
+        eng = engine_for(index)
+        if eng is not None:
+            return eng.query_batch(np.asarray(us), np.asarray(rects))
+    elif engine != "host":
+        raise ValueError(f"unknown engine {engine!r}; expected host|device")
     return index.query_batch(np.asarray(us), np.asarray(rects))
 
 

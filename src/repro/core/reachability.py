@@ -81,12 +81,20 @@ def set_bits(bits: np.ndarray, row: np.ndarray, col: np.ndarray) -> None:
     )
 
 
+def popcount32(x: np.ndarray) -> np.ndarray:
+    """Element-wise SWAR popcount of uint32 words -> int64."""
+    x = x.astype(np.uint32)
+    x = x - ((x >> np.uint32(1)) & np.uint32(0x55555555))
+    x = (x & np.uint32(0x33333333)) + ((x >> np.uint32(2)) & np.uint32(0x33333333))
+    x = (x + (x >> np.uint32(4))) & np.uint32(0x0F0F0F0F)
+    return ((x * np.uint32(0x01010101)) >> np.uint32(24)).astype(np.int64)
+
+
 def row_popcount(bits: np.ndarray) -> np.ndarray:
-    """(r, W) uint32 -> (r,) int64 number of set bits."""
-    by = np.ascontiguousarray(bits).view(np.uint8)
-    return np.unpackbits(by.reshape(bits.shape[0], -1), axis=1).sum(
-        axis=1, dtype=np.int64
-    )
+    """(r, W) uint32 -> (r,) int64 number of set bits.
+
+    SWAR per word — no 32x bool expansion like ``np.unpackbits``."""
+    return popcount32(bits).sum(axis=1)
 
 
 def nonzero_cols(bits_row: np.ndarray, p: int) -> np.ndarray:

@@ -35,7 +35,14 @@ import numpy as np
 
 from .condensation import Condensation, condense
 from .graph import GeosocialGraph
-from .reachability import ClosureResult, closure_np, nonzero_cols, unpack_rows
+from .reachability import (
+    ClosureResult,
+    _ragged_arange,
+    closure_np,
+    nonzero_cols,
+    popcount32 as _popcount32,
+    unpack_rows,
+)
 from .rtree import DEFAULT_FANOUT, RTreeForest, build_forest, query_host
 from .scc import scc_np
 
@@ -78,14 +85,6 @@ class BitRank:
 
     def nbytes(self) -> int:
         return int(self.bits.nbytes + self.rank.nbytes)
-
-
-def _popcount32(x: np.ndarray) -> np.ndarray:
-    x = x.astype(np.uint32)
-    x = x - ((x >> np.uint32(1)) & np.uint32(0x55555555))
-    x = (x & np.uint32(0x33333333)) + ((x >> np.uint32(2)) & np.uint32(0x33333333))
-    x = (x + (x >> np.uint32(4))) & np.uint32(0x0F0F0F0F)
-    return ((x * np.uint32(0x01010101)) >> np.uint32(24)).astype(np.int64)
 
 
 # --------------------------------------------------------------------------
@@ -276,6 +275,76 @@ def build_2dreach(
     )
 
 
+def _comp_cols_csr(clo: ClosureResult) -> Tuple[np.ndarray, np.ndarray]:
+    """CSR (indptr, cols) of reachable spatial columns for *every*
+    component — the vectorised equivalent of calling ``comp_set_cols``
+    per component (interior rows unpacked chunk-wise, one ``nonzero``
+    per chunk instead of one per component)."""
+    d = len(clo.interior_row)
+    counts = np.diff(clo.own_indptr).astype(np.int64)
+    n_int = clo.bits.shape[0]
+    irow = icol = None
+    int_cnt = None
+    row_comp = None
+    if n_int:
+        ii = np.nonzero(clo.interior_row >= 0)[0]
+        row_comp = np.empty(n_int, dtype=np.int64)
+        row_comp[clo.interior_row[ii]] = ii
+        chunk = max(1, (1 << 25) // max(1, clo.p))
+        rows_l, cols_l = [], []
+        for s in range(0, n_int, chunk):
+            r, c = np.nonzero(unpack_rows(clo.bits[s:s + chunk], clo.p))
+            rows_l.append(r.astype(np.int64) + s)
+            cols_l.append(c.astype(np.int32))
+        irow = np.concatenate(rows_l)
+        icol = np.concatenate(cols_l)
+        int_cnt = np.bincount(irow, minlength=n_int).astype(np.int64)
+        counts[row_comp] = int_cnt
+    indptr = np.zeros(d + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    cols = np.empty(int(indptr[-1]), dtype=np.int32)
+    if n_int and len(irow):
+        grp = np.zeros(n_int + 1, dtype=np.int64)
+        np.cumsum(int_cnt, out=grp[1:])
+        within = np.arange(len(irow), dtype=np.int64) - grp[irow]
+        cols[indptr[row_comp[irow]] + within] = icol
+    leaf = clo.interior_row < 0
+    own_cnt = np.diff(clo.own_indptr)
+    lcomp = np.nonzero(leaf & (own_cnt > 0))[0]
+    if lcomp.size:
+        cnt = own_cnt[lcomp].astype(np.int64)
+        within = _ragged_arange(cnt)
+        dest = np.repeat(indptr[lcomp], cnt) + within
+        src = np.repeat(clo.own_indptr[lcomp], cnt) + within
+        cols[dest] = clo.own_cols[src]
+    return indptr, cols
+
+
+def _hash_sets(indptr: np.ndarray, cols: np.ndarray) -> np.ndarray:
+    """(d,) order-independent 64-bit hash of each CSR column set —
+    mixed per element, combined by modular sum + xor + cardinality.
+    Equal sets always hash equal; callers byte-compare on collision."""
+
+    def mix(x: np.ndarray) -> np.ndarray:
+        x = x + np.uint64(0x9E3779B97F4A7C15)
+        x ^= x >> np.uint64(33)
+        x *= np.uint64(0xFF51AFD7ED558CCD)
+        x ^= x >> np.uint64(33)
+        x *= np.uint64(0xC4CEB9FE1A85EC53)
+        x ^= x >> np.uint64(33)
+        return x
+
+    h = mix(cols.astype(np.uint64))
+    csum = np.zeros(len(h) + 1, dtype=np.uint64)
+    np.cumsum(h, out=csum[1:])
+    cxor = np.zeros(len(h) + 1, dtype=np.uint64)
+    np.bitwise_xor.accumulate(h, out=cxor[1:])
+    s = csum[indptr[1:]] - csum[indptr[:-1]]
+    x = cxor[indptr[1:]] ^ cxor[indptr[:-1]]
+    n = (indptr[1:] - indptr[:-1]).astype(np.uint64)
+    return mix(s * np.uint64(3) ^ x ^ mix(n))
+
+
 def _assign_trees(
     cond: Condensation,
     clo: ClosureResult,
@@ -283,17 +352,23 @@ def _assign_trees(
     dedup: str,
 ) -> Tuple[np.ndarray, List[np.ndarray], int]:
     """Map each component to a tree id; returns (comp_tree, per-tree column
-    lists, #components that share another's tree)."""
+    lists, #components that share another's tree).
+
+    Sharing detection hashes every component's reachable set once
+    (vectorised, see ``_hash_sets``) and bucket-compares by hash +
+    cardinality; actual column bytes are compared only on collision —
+    the per-component ``tobytes()`` dictionary of the original
+    implementation is gone from the hot path."""
     d = cond.n_comps
     comp_tree = np.full(d, -1, dtype=np.int32)
     nonempty = clo.comp_nonempty()
     share = (variant != "base") and (dedup != "none")
 
-    # canonical set keys: sorted column arrays
-    own_cnt = np.diff(clo.own_indptr)
+    indptr, cols_all = _comp_cols_csr(clo)
+    sizes = np.diff(indptr)
 
     def comp_cols(c: int) -> np.ndarray:
-        return clo.comp_set_cols(c)
+        return cols_all[indptr[c]:indptr[c + 1]]
 
     tree_cols: List[np.ndarray] = []
     n_shared = 0
@@ -305,28 +380,24 @@ def _assign_trees(
                 tree_cols.append(comp_cols(c))
         return comp_tree, tree_cols, 0
 
-    # children lists for parent-child sharing
+    hashes = _hash_sets(indptr, cols_all)
+
     if dedup == "paper":
         # process children before parents (descending level)
         order = np.argsort(-cond.level, kind="stable")
-        dag = cond.dag_edges
-        ch_indptr, ch = _csr(d, dag)
-        keys: Dict[int, bytes] = {}
-
-        def key_of(c: int) -> bytes:
-            k = keys.get(c)
-            if k is None:
-                k = np.ascontiguousarray(comp_cols(c)).tobytes()
-                keys[c] = k
-            return k
-
+        ch_indptr, ch = _csr(d, cond.dag_edges)
         for c in order:
             if not nonempty[c]:
                 continue
-            kc = key_of(c)
             shared_t = -1
             for cc in ch[ch_indptr[c]:ch_indptr[c + 1]]:
-                if comp_tree[cc] >= 0 and key_of(int(cc)) == kc:
+                cc = int(cc)
+                if (
+                    comp_tree[cc] >= 0
+                    and hashes[cc] == hashes[c]
+                    and sizes[cc] == sizes[c]
+                    and np.array_equal(comp_cols(cc), comp_cols(c))
+                ):
                     shared_t = comp_tree[cc]
                     break
             if shared_t >= 0:
@@ -338,17 +409,21 @@ def _assign_trees(
         return comp_tree, tree_cols, n_shared
 
     # dedup == "global": one tree per distinct reachable set anywhere
-    seen: Dict[bytes, int] = {}
+    buckets: Dict[int, List[int]] = {}
     for c in range(d):
         if not nonempty[c]:
             continue
-        cc = comp_cols(c)
-        k = np.ascontiguousarray(cc).tobytes()
-        t = seen.get(k)
-        if t is None:
+        cc_cols = comp_cols(c)
+        bucket = buckets.setdefault(int(hashes[c]), [])
+        t = -1
+        for tc in bucket:
+            if np.array_equal(tree_cols[tc], cc_cols):
+                t = tc
+                break
+        if t < 0:
             t = len(tree_cols)
-            seen[k] = t
-            tree_cols.append(cc)
+            tree_cols.append(cc_cols)
+            bucket.append(t)
         else:
             n_shared += 1
         comp_tree[c] = t

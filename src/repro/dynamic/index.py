@@ -69,14 +69,23 @@ class DynamicIndex:
              every compaction rebuild.
     policy:  compaction thresholds; ``None`` -> defaults
              (see :class:`CompactionPolicy`).
+    engine:  ``"host"`` (default) answers base probes through the static
+             index's NumPy path; ``"device"`` uploads the static base to
+             a compile-once :class:`~repro.core.engine.QueryEngine`
+             (rebuilt on every compaction swap) while the overlay —
+             small, mutable, pointer-rich — stays host-side.
     build_kw: forwarded to ``build_index`` (fanout, dedup, ...).
     """
 
     def __init__(self, graph: GeosocialGraph, method: str,
-                 policy: Optional[CompactionPolicy] = None, **build_kw):
+                 policy: Optional[CompactionPolicy] = None,
+                 engine: str = "host", **build_kw):
         from ..core.api import build_index  # deferred: api imports us lazily
 
+        if engine not in ("host", "device"):
+            raise ValueError(f"unknown engine {engine!r}; expected host|device")
         self.method = method.lower()
+        self.engine = engine
         self._build_kw = dict(build_kw)
         self.policy = policy or CompactionPolicy()
         self._lock = threading.RLock()
@@ -127,6 +136,18 @@ class DynamicIndex:
         self._stamp_arr = np.zeros(d, dtype=np.int64)
         self._stamp = 0
         self._cache: Dict[int, _Expansion] = {}
+        self._base_engine = None
+        if self.engine == "device":
+            from ..core.engine import engine_for  # deferred: core is heavy
+
+            self._base_engine = engine_for(index)
+
+    def _base_probe(self, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
+        """Static-base probe — the device engine when enabled (and the
+        wrapped method has one), the host path otherwise."""
+        if self._base_engine is not None:
+            return self._base_engine.query_batch(us, rects)
+        return self._index.query_batch(us, rects)
 
     # ------------------------------------------------------------------
     # public surface
@@ -143,6 +164,11 @@ class DynamicIndex:
     @property
     def base_index(self):
         return self._index
+
+    @property
+    def base_engine(self):
+        """The device engine serving the static base (None on host)."""
+        return self._base_engine
 
     @property
     def overlay_size(self) -> int:
@@ -223,7 +249,7 @@ class DynamicIndex:
             ans = np.zeros(B, dtype=bool)
             base_mask = us < overlay.n_base
             if base_mask.any():
-                ans[base_mask] = self._index.query_batch(
+                ans[base_mask] = self._base_probe(
                     us[base_mask], rects[base_mask]
                 )
             if overlay.is_empty():
@@ -255,7 +281,7 @@ class DynamicIndex:
                     extra_qi.append(i)
                     extra_u.append(t)
             if extra_u:
-                got = self._index.query_batch(
+                got = self._base_probe(
                     np.asarray(extra_u, dtype=np.int64),
                     rects[np.asarray(extra_qi, dtype=np.int64)],
                 )

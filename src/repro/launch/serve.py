@@ -4,11 +4,14 @@
         --method 2dreach-comp --queries 2000 --engine kernel
 
 Builds the chosen index offline, then serves batched RANGEREACH queries
-through one of three engines:
+through one of four engines:
 
     host      — vectorised NumPy ragged wavefront (paper-equivalent)
     wavefront — jit fixed-capacity R-tree descent (device engine)
     kernel    — the range_query Pallas leaf-scan (interpret on CPU)
+    device    — the compile-once QueryEngine: fused on-device pointer
+                lookup + hierarchically-pruned Pallas descent
+                (2DReach variants only)
 
 Every engine's answers are verified against the host engine before
 timing; throughput and per-query latency are reported.  On a mesh the
@@ -34,7 +37,7 @@ def main():
     ap.add_argument("--queries", type=int, default=2000)
     ap.add_argument("--extent", type=float, default=0.05)
     ap.add_argument("--engine", default="host",
-                    choices=("host", "wavefront", "kernel"))
+                    choices=("host", "wavefront", "kernel", "device"))
     ap.add_argument("--verify", type=int, default=64,
                     help="queries to verify against the BFS oracle")
     args = ap.parse_args()
@@ -64,6 +67,24 @@ def main():
         t0 = time.perf_counter()
         ans = batch_query(index, us, rects)
         dt = time.perf_counter() - t0
+    elif args.engine == "device":
+        from ..core import engine_for
+
+        eng = engine_for(index)
+        if eng is None:
+            raise SystemExit(
+                f"--engine device serves the 2DReach variants only, "
+                f"not {args.method}")
+        eng.query_batch(us, rects)  # warm up / compile + upload
+        t0 = time.perf_counter()
+        sub = eng.query_batch(us, rects)
+        dt = time.perf_counter() - t0
+        ans = batch_query(index, us, rects)
+        assert (sub == ans).all(), "device engine mismatch"
+        print(f"[serve] device engine: {eng.n_compiles} compiled shapes, "
+              f"{eng.stats['tiles_scanned']}/"
+              f"{eng.stats['tiles_full_scan']} leaf tiles scanned "
+              f"(vs full leaf scan)")
     else:
         tid = index.lookup_tree(us)
         if args.engine == "wavefront":

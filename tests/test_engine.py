@@ -1,0 +1,225 @@
+"""Device QueryEngine vs the query_host oracle — exactness, edge cases,
+bucket boundaries, and the compile-once contract."""
+
+import numpy as np
+import pytest
+
+from repro.core import QueryEngine, batch_query, build_2dreach, engine_for
+from repro.core.api import build_index
+from repro.core.graph import make_graph
+from repro.data import get_dataset, workload
+from repro.kernels.range_query import ops as rq_ops
+from repro.kernels.range_query.descent import (
+    build_tile_pyramid,
+    prune_tiles_pallas,
+    prune_tiles_ref,
+)
+from repro.kernels.range_query.kernel import TB, TP
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return get_dataset("yelp", scale=0.05)
+
+
+@pytest.fixture(scope="module")
+def indexes(graph):
+    return {v: build_2dreach(graph, variant=v)
+            for v in ("base", "comp", "pointer")}
+
+
+# ---------------------------------------------------------------- exactness
+@pytest.mark.parametrize("variant", ["base", "comp", "pointer"])
+def test_engine_matches_host_oracle(graph, indexes, variant):
+    idx = indexes[variant]
+    eng = QueryEngine(idx)
+    for seed in range(4):
+        us, rects = workload(graph, 200, extent_ratio=0.05, seed=seed)
+        want = idx.query_batch(us, rects)   # host path == query_host oracle
+        got = eng.query_batch(us, rects)
+        assert (want == got).all()
+        assert got.dtype == np.bool_ and got.shape == want.shape
+
+
+@pytest.mark.parametrize("variant", ["comp", "pointer"])
+def test_engine_spatial_query_vertices(graph, indexes, variant):
+    """Alg. 2 special case: excluded (spatial-sink) query vertices answer
+    by their own point — must fuse identically on device."""
+    idx = indexes[variant]
+    eng = QueryEngine(idx)
+    exc = np.nonzero(idx.excluded)[0]
+    assert exc.size, "fixture graph should have spatial sinks"
+    rng = np.random.default_rng(7)
+    us = rng.choice(exc, size=64)
+    # half the rects centred on the vertex itself (hit), half far away
+    pts = idx.coords[us]
+    rects = np.concatenate([pts - 0.01, pts + 0.01], axis=1).astype(np.float32)
+    rects[::2] += 1e3    # guaranteed miss
+    want = idx.query_batch(us, rects)
+    got = eng.query_batch(us, rects)
+    assert (want == got).all()
+    assert want[1::2].all() and not want[::2].any()
+
+
+def test_engine_empty_tree_and_excluded_edge_cases():
+    """Vertices with no reachable venues (tid -1), empty forests, and an
+    all-excluded batch must answer False / point-test without error."""
+    # graph: 0 -> 1 (venue), 2 isolated user, 3 isolated venue
+    edges = np.array([[0, 1]], dtype=np.int64)
+    coords = np.array([[0, 0], [1, 1], [0, 0], [5, 5]], dtype=np.float32)
+    spatial = np.array([False, True, False, True])
+    g = make_graph(4, edges, coords, spatial)
+    for variant in ("base", "comp", "pointer"):
+        idx = build_2dreach(g, variant=variant)
+        eng = QueryEngine(idx)
+        us = np.array([0, 2, 3, 1])
+        rects = np.array([[0.5, 0.5, 1.5, 1.5]] * 4, dtype=np.float32)
+        want = idx.query_batch(us, rects)
+        got = eng.query_batch(us, rects)
+        assert (want == got).all(), variant
+        assert want[0] and not want[1]   # 0 reaches venue 1; 2 reaches none
+
+
+def test_engine_rejects_non_2dreach(graph):
+    idx = build_index(graph, "georeach")
+    assert engine_for(idx) is None
+    with pytest.raises(TypeError):
+        QueryEngine(idx)
+
+
+# ---------------------------------------------------------------- buckets
+@pytest.mark.parametrize("B", [1, TB, TB + 1, 2 * TB, 100])
+def test_engine_bucket_boundaries(graph, indexes, B):
+    idx = indexes["comp"]
+    eng = QueryEngine(idx)
+    us, rects = workload(graph, B, extent_ratio=0.05, seed=B)
+    assert (idx.query_batch(us, rects) == eng.query_batch(us, rects)).all()
+
+
+def test_engine_bucket_padding_is_inert():
+    """Padded batch lanes must activate no tiles even when the data
+    extent spans the padding sentinel (coords straddling [0, 1])."""
+    rng = np.random.default_rng(11)
+    n, nv = 40, 12
+    coords = (rng.random((n, 2)) * 10 - 5).astype(np.float32)  # [-5, 5)
+    spatial = np.zeros(n, dtype=bool)
+    spatial[:nv] = True
+    edges = np.stack([np.arange(nv, n), rng.integers(0, nv, n - nv)], axis=1)
+    g = make_graph(n, edges.astype(np.int64), coords, spatial)
+    idx = build_2dreach(g, variant="comp")
+    eng = QueryEngine(idx)
+    u = np.array([nv])                       # B=1 -> TB-1 padded lanes
+    far = np.array([[50, 50, 51, 51]], np.float32)   # guaranteed miss
+    assert not eng.query_batch(u, far)[0]
+    assert eng.stats["tiles_scanned"] == 0, \
+        "padded lanes (or a missing rect) activated leaf tiles"
+    hit = np.array([[-6, -6, 6, 6]], np.float32)     # covers everything
+    assert eng.query_batch(u, hit)[0] == idx.query_batch(u, hit)[0]
+
+
+def test_engine_empty_batch(indexes):
+    eng = QueryEngine(indexes["comp"])
+    out = eng.query_batch(np.zeros(0, np.int64), np.zeros((0, 4), np.float32))
+    assert out.shape == (0,) and out.dtype == np.bool_
+
+
+# ---------------------------------------------------------- compile-once
+def test_engine_no_steady_state_recompiles(graph, indexes):
+    idx = indexes["pointer"]
+    eng = QueryEngine(idx)
+    # warm the buckets for B in {1..128} and the K buckets they induce
+    for seed, B in [(0, 1), (1, 8), (2, 100), (3, 128)]:
+        us, rects = workload(graph, B, extent_ratio=0.05, seed=seed)
+        eng.query_batch(us, rects)
+    warm = eng.n_compiles
+    soa0 = rq_ops.SOA_BUILDS
+    for seed, B in [(10, 3), (11, 100), (12, 77), (13, 128), (14, 1)]:
+        us, rects = workload(graph, B, extent_ratio=0.05, seed=seed)
+        assert (idx.query_batch(us, rects) == eng.query_batch(us, rects)).all()
+    # jit cache-size introspection: nothing re-traced, nothing re-uploaded
+    assert eng.n_compiles == warm
+    assert rq_ops.SOA_BUILDS == soa0
+    assert eng.stats["uploads"] == 1
+
+
+def test_engine_for_memoised(indexes):
+    idx = indexes["base"]
+    assert engine_for(idx) is engine_for(idx)
+    us = np.array([0]); rects = np.array([[0, 0, 1, 1]], np.float32)
+    assert (batch_query(idx, us, rects, engine="device")
+            == batch_query(idx, us, rects)).all()
+    with pytest.raises(ValueError):
+        batch_query(idx, us, rects, engine="warp")
+
+
+def test_engine_prunes_leaf_tiles(graph, indexes):
+    eng = QueryEngine(indexes["comp"])
+    us, rects = workload(graph, 256, extent_ratio=0.05, seed=3)
+    eng.query_batch(us, rects)
+    assert 0 < eng.stats["tiles_scanned"] < eng.stats["tiles_full_scan"]
+
+
+# ---------------------------------------------------------- dynamic base
+def test_dynamic_device_engine_exact_across_compaction():
+    """DynamicIndex(engine="device"): the device engine serves the static
+    base (rebuilt on every compaction swap), the overlay stays host-side,
+    and answers stay exact vs the BFS oracle through the swap."""
+    from repro.core import build_dynamic_index, rangereach_oracle_batch
+    from repro.data import apply_stream_op, streaming_workload
+    from repro.dynamic import CompactionPolicy
+
+    g = get_dataset("yelp", scale=0.05)
+    dyn = build_dynamic_index(
+        g, "2dreach-comp", engine="device",
+        policy=CompactionPolicy(max_overlay_edges=60, background=False),
+    )
+    eng0 = dyn.base_engine
+    assert eng0 is not None
+    for op in streaming_workload(g, n_steps=300, seed=23, p_query=0.4,
+                                 p_edge=0.4, p_vertex=0.1, p_spatial=0.1):
+        apply_stream_op(dyn, op)
+    assert dyn.stats["n_compactions"] >= 1
+    assert dyn.base_engine is not None and dyn.base_engine is not eng0, \
+        "compaction swap must rebuild the device engine over the new base"
+    gm = dyn.snapshot_graph()
+    vu, vr = workload(gm, 64, extent_ratio=0.05, seed=99)
+    assert (dyn.query_batch(vu, vr)
+            == rangereach_oracle_batch(gm, vu, vr)).all()
+
+
+def test_dynamic_engine_validates_kind():
+    from repro.core import build_dynamic_index
+
+    g = get_dataset("yelp", scale=0.05)
+    with pytest.raises(ValueError):
+        build_dynamic_index(g, "2dreach-comp", engine="warp")
+
+
+# ---------------------------------------------------------- prune kernel
+@pytest.mark.parametrize("P,B", [(1, 8), (130, 16), (700, 8), (2000, 24)])
+def test_prune_kernel_vs_ref(P, B):
+    rng = np.random.default_rng(P + B)
+    pts = (rng.random((P, 2)) * 10).astype(np.float32)
+    Pp = max(TP, -(-P // TP) * TP)
+    esoa = np.empty((4, Pp), np.float32)
+    esoa[:2] = 1.0
+    esoa[2:] = 0.0
+    esoa[:, :P] = np.concatenate([pts, pts], axis=1).T
+    fine, coarse, nt = build_tile_pyramid(esoa, dim=2)
+    assert nt == Pp // TP
+    c = (rng.random((B, 2)) * 10).astype(np.float32)
+    r = (rng.random((B, 2)) * 2).astype(np.float32)
+    rsoa = np.concatenate([c - r, c + r], axis=1).T.astype(np.float32)
+    qs = rng.integers(0, P, size=B).astype(np.int32)
+    qe = np.minimum(qs + rng.integers(0, P + 1, size=B), P).astype(np.int32)
+    got = np.asarray(prune_tiles_pallas(fine, coarse, rsoa, qs, qe,
+                                        interpret=True))
+    want = np.asarray(prune_tiles_ref(fine, coarse, rsoa, qs, qe))
+    assert (got == want).all()
+    # soundness: every entry hit lies in an active tile of its query tile
+    for b in range(B):
+        ok = ((pts[:, 0] >= rsoa[0, b]) & (pts[:, 1] >= rsoa[1, b])
+              & (pts[:, 0] <= rsoa[2, b]) & (pts[:, 1] <= rsoa[3, b]))
+        ok &= (np.arange(P) >= qs[b]) & (np.arange(P) < qe[b])
+        for e in np.nonzero(ok)[0]:
+            assert got[b // TB, e // TP] == 1
