@@ -31,14 +31,18 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.cluster import ShardedEngine
 from repro.core import QueryEngine, build_2dreach, query_host, query_jax_wavefront
 from repro.data import get_dataset, workload
 from repro.kernels.range_query import ops as rq_ops
 from repro.kernels.range_query.ops import range_query_forest
+from repro.launch.serve import serve_chunked
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT = os.path.join(ROOT, "results", "perf_rangereach.json")
 BENCH_OUT = os.path.join(ROOT, "BENCH_rangereach.json")
+
+LAT_BATCH = 256   # chunk size for the per-query latency distribution
 
 
 def _t(fn, repeats=5):
@@ -51,9 +55,21 @@ def _t(fn, repeats=5):
     return float(np.median(ts))
 
 
+def _lat_pct(call, n, batch=LAT_BATCH) -> Dict[str, float]:
+    """p50/p95/p99 per-query latency (us) serving [0, n) in chunks.
+
+    ``call(lo, hi)`` serves that query slice and returns its answers;
+    the chunked warm-and-measure mechanics (incl. warming the ragged
+    tail's jit shape) live in ``repro.launch.serve.serve_chunked``.
+    """
+    _, lats, _ = serve_chunked(call, n, batch)
+    return {f"lat_p{p}_us": float(np.percentile(lats, p) * 1e6)
+            for p in (50, 95, 99)}
+
+
 def engine_sweep(dataset="gowalla", scale=0.5, n_q=2000,
                  fanouts=(8, 16, 32, 64), capacities=(32, 64, 128, 256),
-                 repeats=5) -> List[Dict]:
+                 repeats=5, n_shards=8) -> List[Dict]:
     g = get_dataset(dataset, scale=scale)
     us, rects = workload(g, n_q, extent_ratio=0.05, seed=5)
     rows = []
@@ -66,7 +82,9 @@ def engine_sweep(dataset="gowalla", scale=0.5, n_q=2000,
         dt = _t(lambda: query_host(idx.forest, tid, rects), repeats=repeats)
         rows.append(dict(engine="host", fanout=fanout, capacity=None,
                          us_per_q=dt / n_q * 1e6,
-                         depth=idx.forest.depth))
+                         depth=idx.forest.depth,
+                         **_lat_pct(lambda lo, hi: query_host(
+                             idx.forest, tid[lo:hi], rects[lo:hi]), n_q)))
         # jit wavefront at several capacities
         for cap in capacities:
             got, ovf = query_jax_wavefront(idx.forest, tid, rects,
@@ -79,7 +97,10 @@ def engine_sweep(dataset="gowalla", scale=0.5, n_q=2000,
             rows.append(dict(engine="wavefront", fanout=fanout,
                              capacity=cap, us_per_q=dt / n_q * 1e6,
                              overflow_frac=ovf_frac,
-                             depth=idx.forest.depth))
+                             depth=idx.forest.depth,
+                             **_lat_pct(lambda lo, hi: query_jax_wavefront(
+                                 idx.forest, tid[lo:hi], rects[lo:hi],
+                                 capacity=cap)[0], n_q)))
         # pallas leaf scan (interpret on CPU — structural comparison)
         got = range_query_forest(idx.forest, tid, rects)
         assert (got == ref).all()
@@ -87,7 +108,9 @@ def engine_sweep(dataset="gowalla", scale=0.5, n_q=2000,
                 repeats=3)
         rows.append(dict(engine="pallas_leafscan", fanout=fanout,
                          capacity=None, us_per_q=dt / n_q * 1e6,
-                         depth=idx.forest.depth))
+                         depth=idx.forest.depth,
+                         **_lat_pct(lambda lo, hi: range_query_forest(
+                             idx.forest, tid[lo:hi], rects[lo:hi]), n_q)))
         # device engine: compile-once hierarchical descent
         eng = QueryEngine(idx)
         got = eng.query_batch(us, rects)
@@ -115,6 +138,29 @@ def engine_sweep(dataset="gowalla", scale=0.5, n_q=2000,
                 (eng.stats["tiles_full_scan"] - full0) / max(batches, 1)),
             steady_state_recompiles=recompiles,
             steady_state_retranspositions=retranspositions,
+            **_lat_pct(lambda lo, hi: eng.query_batch(
+                us[lo:hi], rects[lo:hi]), n_q),
+        ))
+        # cluster engine: sharded multi-device serving (shards stack per
+        # device when the host exposes fewer devices than shards)
+        ceng = ShardedEngine(idx, n_shards=n_shards)
+        got = ceng.query_batch(us, rects)
+        assert (got == full).all(), "cluster engine disagrees with host"
+        pct = _lat_pct(lambda lo, hi: ceng.query_batch(
+            us[lo:hi], rects[lo:hi]), n_q)
+        compiles0 = ceng.n_compiles
+        soa0 = rq_ops.SOA_BUILDS
+        dt = _t(lambda: ceng.query_batch(us, rects), repeats=repeats)
+        rows.append(dict(
+            engine="cluster", fanout=fanout, capacity=None,
+            us_per_q=dt / n_q * 1e6, depth=idx.forest.depth,
+            n_shards=ceng.n_shards,
+            n_devices=int(ceng.mesh.shape["data"]),
+            shard_balance=ceng.partition.balance(),
+            shard_queries=ceng.shard_queries.tolist(),
+            steady_state_recompiles=ceng.n_compiles - compiles0,
+            steady_state_retranspositions=rq_ops.SOA_BUILDS - soa0,
+            **pct,
         ))
     return rows
 
@@ -157,17 +203,35 @@ def closure_sweep(scales=(0.1, 0.25, 0.5)) -> List[Dict]:
 def bench_summary(engine_rows: List[Dict]) -> Dict:
     """Root-level perf-trajectory datapoint (BENCH_rangereach.json)."""
     device = [r for r in engine_rows if r["engine"] == "device"]
+    cluster = [r for r in engine_rows if r["engine"] == "cluster"]
     best = {}
-    for name in ("host", "wavefront", "pallas_leafscan", "device"):
+    pct = {}
+    for name in ("host", "wavefront", "pallas_leafscan", "device",
+                 "cluster"):
         cands = [r for r in engine_rows if r["engine"] == name]
         if cands:
             best[name] = min(r["us_per_q"] for r in cands)
+            winner = min(cands, key=lambda r: r["us_per_q"])
+            if "lat_p50_us" in winner:
+                pct[name] = {p: winner[f"lat_{p}_us"]
+                             for p in ("p50", "p95", "p99")}
     scanned = sum(r["tiles_scanned_per_batch"] for r in device)
     grid = sum(r["tiles_grid_per_batch"] for r in device)
     full = sum(r["tiles_full_scan_per_batch"] for r in device)
     return {
         "unit": "us_per_query (best over structural params)",
         "engines": best,
+        "latency_percentiles_us": pct,
+        "cluster_engine": {
+            "n_shards": cluster[0]["n_shards"] if cluster else None,
+            "n_devices": cluster[0]["n_devices"] if cluster else None,
+            "shard_balance": max(
+                (r["shard_balance"] for r in cluster), default=None),
+            "steady_state_recompiles": int(sum(
+                r["steady_state_recompiles"] for r in cluster)),
+            "steady_state_retranspositions": int(sum(
+                r["steady_state_retranspositions"] for r in cluster)),
+        },
         "hierarchical_device_engine": {
             "leaf_tiles_scanned_per_batch": scanned,
             "grid_steps_per_batch_incl_bucket_padding": grid,
@@ -214,6 +278,14 @@ def main():
     assert dev["steady_state_recompiles"] == 0, "steady-state recompile"
     assert dev["steady_state_retranspositions"] == 0, \
         "steady-state host-side forest re-transposition"
+    clu = summary["cluster_engine"]
+    assert clu["steady_state_recompiles"] == 0, \
+        "cluster steady-state recompile"
+    assert clu["steady_state_retranspositions"] == 0, \
+        "cluster steady-state host-side forest re-transposition"
+    assert all("p99" in v for v in
+               summary["latency_percentiles_us"].values()), \
+        "latency percentiles missing from the bench summary"
 
 
 if __name__ == "__main__":

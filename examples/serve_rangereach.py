@@ -8,7 +8,12 @@ Pallas leaf-scan kernel, and the compile-once device QueryEngine
 (fused pointer lookup + hierarchically-pruned descent; interpret mode
 on CPU, the same calls compile to real kernels on TPU).
 
-Phase 2 (dynamic): wraps the same graph in a DynamicIndex and serves a
+Phase 2 (cluster): partitions the same forest into 8 shards
+(`repro.cluster.ShardedEngine`) and serves it request-at-a-time through
+the deadline-or-full micro-batching `Frontend`, asserting answers stay
+bit-identical to the host and that steady state recompiles nothing.
+
+Phase 3 (dynamic): wraps the same graph in a DynamicIndex and serves a
 *mutating* stream — new users, follows and check-ins interleaved with
 queries — answering every query on the mutated graph without a rebuild,
 with answers spot-checked against the BFS oracle, then compacts
@@ -85,7 +90,39 @@ for name, ts in lat.items():
           f"us/query   p max {ts.max() / BATCH * 1e6:7.2f} us/query "
           f"({BATCHES - 1} batches x {BATCH})")
 
-# ----- mutating stream (phase 2) -------------------------------------------
+# ----- cluster serving (sharded engine + micro-batching frontend) ----------
+# the same forest, partitioned into 8 shards (stacked per device when the
+# host exposes fewer than 8) and served request-at-a-time through the
+# deadline-or-full frontend — equivalent CLI:
+#   python -m repro.launch.serve --engine cluster --shards 8
+from repro.cluster import Frontend, ShardedEngine
+
+ceng = ShardedEngine(index, n_shards=8)
+print(f"\n[cluster] {ceng.n_shards} shards on "
+      f"{ceng.mesh.shape['data']} device(s), per-shard entries "
+      f"{ceng.partition.shard_entries.tolist()}")
+us, rects = workload(g, 512, extent_ratio=0.05, seed=200)
+want = batch_query(index, us, rects)
+with Frontend(ceng, max_batch=128, max_delay=2e-3) as fe:
+    fe.warmup(us[:128], rects[:128])
+    fe.submit_many(us, rects)          # warm pass fixes the K mark
+    fe.warmup(us[:128], rects[:128])   # re-pin every bucket at that mark
+    warm = ceng.n_compiles
+    t0 = time.perf_counter()
+    got = fe.submit_many(us, rects)
+    dt = time.perf_counter() - t0
+    assert (got == want).all(), "cluster engine mismatch"
+    assert ceng.n_compiles == warm, "steady-state recompile under frontend"
+    print(f"[cluster] {len(us)} queries in {dt * 1e3:.1f} ms "
+          f"({dt / len(us) * 1e6:.2f} us/query), "
+          f"{int(fe.stats['n_batches'])} flushes "
+          f"(full {int(fe.stats['n_flush_full'])} / deadline "
+          f"{int(fe.stats['n_flush_deadline'])}), "
+          f"routing {ceng.shard_queries.tolist()}")
+    print(f"[cluster] answers match host; {ceng.n_compiles} compiled "
+          f"shapes stayed flat through the steady-state pass")
+
+# ----- mutating stream (phase 3) -------------------------------------------
 print("\n[dynamic] serving a mutating stream (updates + queries interleaved)")
 dyn = build_dynamic_index(
     g, "2dreach-comp", engine="device",   # device base probe, host overlay

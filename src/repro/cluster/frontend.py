@@ -1,0 +1,217 @@
+"""Micro-batching frontend: request queue -> engine-sized batches.
+
+A serving node receives single RangeReach requests; the engines want
+batches (the jit cache is keyed on power-of-two buckets, and per-query
+overhead amortises across a tile).  :class:`Frontend` sits between:
+
+* ``submit(u, rect)`` enqueues a request onto a **bounded** queue
+  (backpressure: submit blocks while ``max_queue`` requests are
+  pending) and returns a future;
+* a scheduler thread flushes the queue into the engine on
+  **deadline-or-full**: as soon as ``max_batch`` requests are pending,
+  or when the oldest pending request has waited ``max_delay`` seconds —
+  whichever comes first.  Flushed batches are at most ``max_batch``
+  (keep it a power of two so steady state re-uses the engine's compiled
+  buckets), and the engine's own bucket padding absorbs ragged tails.
+
+The frontend is engine-agnostic: anything with a
+``query_batch(us, rects) -> bool array`` works — the single-device
+``QueryEngine``, the cluster ``ShardedEngine``, or a host index.
+``warmup`` pre-traces every batch bucket the flush policy can produce,
+so a steady-state stream recompiles nothing (asserted in tests via the
+engine's ``n_compiles`` introspection).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, InvalidStateError
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..kernels.range_query.kernel import TB
+
+
+class Frontend:
+    """Deadline-or-full micro-batch scheduler in front of a query engine.
+
+    Parameters
+    ----------
+    engine:    anything with ``query_batch(us, rects)``.
+    max_batch: flush as soon as this many requests are pending (keep it
+               a power of two to reuse the engine's compiled buckets).
+    max_delay: flush when the oldest pending request is this old (s).
+    max_queue: bounded-queue capacity; ``submit`` blocks above it.
+    """
+
+    def __init__(self, engine, max_batch: int = 256,
+                 max_delay: float = 2e-3, max_queue: int = 8192):
+        if max_batch < 1 or max_queue < max_batch:
+            raise ValueError(
+                f"need 1 <= max_batch <= max_queue, got "
+                f"{max_batch}/{max_queue}")
+        self.engine = engine
+        self.max_batch = int(max_batch)
+        self.max_delay = float(max_delay)
+        self.max_queue = int(max_queue)
+        self._cond = threading.Condition()
+        self._rect_len = None                 # fixed by the first submit
+        self._pending: List[tuple] = []       # (u, rect, future, t_enq)
+        self._inflight = False
+        self._closed = False
+        self._force = False
+        self.stats: Dict[str, float] = {
+            "n_requests": 0, "n_batches": 0, "n_flush_full": 0,
+            "n_flush_deadline": 0, "n_flush_forced": 0,
+            "batched_queries": 0, "max_pending_seen": 0,
+        }
+        self._thread = threading.Thread(
+            target=self._run, name="rangereach-frontend", daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------------
+    # client surface
+    # ------------------------------------------------------------------
+
+    def submit(self, u: int, rect) -> "Future[bool]":
+        """Enqueue one request; returns a future resolving to the answer.
+        Blocks while the queue is at capacity (backpressure)."""
+        fut: Future = Future()
+        rect = np.asarray(rect, dtype=np.float32).ravel()
+        with self._cond:
+            # reject shape mismatches in the caller's thread — a ragged
+            # rect must never reach batch assembly on the scheduler
+            if self._rect_len is None:
+                self._rect_len = len(rect)
+            elif len(rect) != self._rect_len:
+                raise ValueError(
+                    f"rect has {len(rect)} coords, expected "
+                    f"{self._rect_len}")
+            while len(self._pending) >= self.max_queue and not self._closed:
+                self._cond.wait()
+            if self._closed:
+                raise RuntimeError("Frontend is closed")
+            self._pending.append((int(u), rect, fut, time.monotonic()))
+            self.stats["n_requests"] += 1
+            self.stats["max_pending_seen"] = max(
+                self.stats["max_pending_seen"], len(self._pending))
+            self._cond.notify_all()
+        return fut
+
+    def submit_many(self, us: Sequence[int], rects,
+                    timeout: Optional[float] = None) -> np.ndarray:
+        """Submit a request stream one by one and gather the answers —
+        the convenience used by benchmarks and examples."""
+        rects = np.asarray(rects, dtype=np.float32)
+        futs = [self.submit(u, r) for u, r in zip(us, rects)]
+        return np.array([f.result(timeout=timeout) for f in futs],
+                        dtype=bool)
+
+    def flush(self, timeout: Optional[float] = None) -> None:
+        """Force-dispatch everything pending and wait until served."""
+        with self._cond:
+            self._force = True
+            self._cond.notify_all()
+            self._cond.wait_for(
+                lambda: not self._pending and not self._inflight,
+                timeout=timeout)
+            # don't leak the flag onto requests submitted after the
+            # flush completes (they should wait for deadline-or-full)
+            self._force = False
+
+    def warmup(self, us: np.ndarray, rects: np.ndarray) -> None:
+        """Pre-trace every batch bucket the flush policy can produce,
+        using a representative workload (tiled up to ``max_batch``)."""
+        us = np.asarray(us, dtype=np.int64)
+        rects = np.asarray(rects, dtype=np.float32).reshape(len(us), -1)
+        reps = -(-self.max_batch // max(len(us), 1))
+        us = np.tile(us, reps)
+        rects = np.tile(rects, (reps, 1))
+        b = TB
+        while True:
+            k = min(b, self.max_batch)
+            self.engine.query_batch(us[:k], rects[:k])
+            if b >= self.max_batch:
+                break
+            b <<= 1
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Serve everything pending, then stop the scheduler thread."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        self._thread.join(timeout=timeout)
+
+    def __enter__(self) -> "Frontend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def mean_batch(self) -> float:
+        b = self.stats["n_batches"]
+        return self.stats["batched_queries"] / b if b else 0.0
+
+    # ------------------------------------------------------------------
+    # scheduler thread
+    # ------------------------------------------------------------------
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while True:
+                    if self._pending:
+                        n = len(self._pending)
+                        deadline = self._pending[0][3] + self.max_delay
+                        now = time.monotonic()
+                        if n >= self.max_batch:
+                            reason = "n_flush_full"
+                            break
+                        if self._force or self._closed:
+                            reason = "n_flush_forced"
+                            break
+                        if now >= deadline:
+                            reason = "n_flush_deadline"
+                            break
+                        self._cond.wait(timeout=deadline - now)
+                    elif self._closed:
+                        return
+                    else:
+                        self._force = False
+                        self._cond.wait()
+                batch = self._pending[: self.max_batch]
+                del self._pending[: self.max_batch]
+                if not self._pending:
+                    self._force = False
+                self._inflight = True
+                self._cond.notify_all()       # queue space freed
+            self._serve(batch, reason)
+            with self._cond:
+                self._inflight = False
+                self._cond.notify_all()
+
+    def _serve(self, batch: List[tuple], reason: str) -> None:
+        try:
+            # assembly inside the latch too: no input may ever kill the
+            # scheduler thread and strand the batch's futures
+            us = np.array([b[0] for b in batch], dtype=np.int64)
+            rects = np.stack([b[1] for b in batch])
+            ans = self.engine.query_batch(us, rects)
+        except BaseException as e:  # latch the error onto every future
+            for _, _, fut, _ in batch:
+                try:
+                    fut.set_exception(e)
+                except InvalidStateError:   # client cancelled meanwhile
+                    pass
+            return
+        self.stats["n_batches"] += 1
+        self.stats[reason] += 1
+        self.stats["batched_queries"] += len(batch)
+        for (_, _, fut, _), a in zip(batch, ans):
+            try:
+                fut.set_result(bool(a))
+            except InvalidStateError:       # client cancelled meanwhile
+                pass

@@ -1,0 +1,153 @@
+"""Size-balanced partitioning of a 2DReach forest for sharded serving.
+
+The 2DReach forest is embarrassingly partitionable: each component's 2D
+R-tree is an independent lookup target, so any assignment of whole trees
+to shards preserves exactness — a query probes exactly the shard that
+owns its tree.  What matters is *balance*: per-shard work is
+proportional to resident leaf entries (arena size bounds both memory and
+the worst-case scan), so trees are bin-packed by entry count with the
+classic LPT (longest-processing-time) greedy — sort descending, always
+assign to the least-loaded shard — which is deterministic and within
+4/3 of the optimal whole-tree assignment.  Whole trees are the unit of
+placement, so when a single tree dominates the forest (a giant SCC) the
+optimum itself is skewed and ``ForestPartition.balance()`` reports a
+max/mean ratio well above 1.
+
+The partition is summarised by three *replicated* per-tree arrays
+(``tree_shard``, ``tree_qs``, ``tree_qe``): every device routes every
+query's tree id to (owning shard, local arena slice) with plain gathers,
+mirroring the single-device engine's fused lookup.  The per-shard
+arenas themselves are stacked into one ``(S, 2*dim, Pp)`` plane (plus
+the fine/coarse tile-pyramid planes) padded to a common width so the
+stack shards cleanly over a mesh axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List, Tuple
+
+import numpy as np
+
+from ..core.rtree import RTreeForest
+from ..kernels.range_query.descent import build_tile_pyramid
+from ..kernels.range_query.kernel import TP
+from ..kernels.range_query.ops import forest_soa
+
+
+def balanced_assignment(weights: np.ndarray, n_shards: int) -> np.ndarray:
+    """LPT greedy bin packing: (T,) weights -> (T,) shard ids.
+
+    Deterministic: items are processed in descending weight order with
+    index as tie-break, and ties between equally loaded shards go to the
+    lowest shard id.
+    """
+    T = len(weights)
+    assign = np.zeros(T, dtype=np.int32)
+    if T == 0 or n_shards <= 1:
+        return assign
+    order = np.lexsort((np.arange(T), -np.asarray(weights, np.int64)))
+    heap: List[Tuple[int, int]] = [(0, s) for s in range(n_shards)]
+    heapq.heapify(heap)
+    for t in order:
+        load, s = heapq.heappop(heap)
+        assign[t] = s
+        heapq.heappush(heap, (load + int(weights[t]), s))
+    return assign
+
+
+@dataclasses.dataclass(frozen=True)
+class ForestPartition:
+    """Tree→shard assignment + replicated routing arrays.
+
+    ``tree_shard``/``tree_qs``/``tree_qe`` are padded to length
+    ``max(T, 1)`` so an empty forest still gathers safely (every lookup
+    then resolves to shard -1 / an empty slice).
+    """
+
+    n_shards: int
+    shard_trees: Tuple[np.ndarray, ...]  # ascending global tree ids
+    tree_shard: np.ndarray               # (max(T,1),) int32, -1 pad
+    tree_qs: np.ndarray                  # (max(T,1),) int32 local start
+    tree_qe: np.ndarray                  # (max(T,1),) int32 local end
+    shard_entries: np.ndarray            # (S,) int64 resident leaf entries
+
+    @property
+    def n_trees(self) -> int:
+        return sum(len(t) for t in self.shard_trees)
+
+    def balance(self) -> float:
+        """max/mean shard load (1.0 = perfectly balanced)."""
+        mean = self.shard_entries.mean() if self.n_shards else 0.0
+        return float(self.shard_entries.max() / mean) if mean > 0 else 1.0
+
+
+def partition_forest(forest: RTreeForest, n_shards: int) -> ForestPartition:
+    """Assign whole trees to ``n_shards`` size-balanced shards."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    T = forest.n_trees
+    counts = np.diff(forest.entry_off).astype(np.int64)
+    assign = balanced_assignment(counts, n_shards)
+    shard_trees = tuple(
+        np.nonzero(assign == s)[0].astype(np.int64) for s in range(n_shards)
+    )
+    pad = max(T, 1)
+    tree_shard = np.full(pad, -1, dtype=np.int32)
+    tree_qs = np.zeros(pad, dtype=np.int32)
+    tree_qe = np.zeros(pad, dtype=np.int32)
+    shard_entries = np.zeros(n_shards, dtype=np.int64)
+    for s, trees in enumerate(shard_trees):
+        lo = 0
+        for t in trees:
+            c = int(counts[t])
+            tree_shard[t] = s
+            tree_qs[t] = lo
+            tree_qe[t] = lo + c
+            lo += c
+        shard_entries[s] = lo
+    return ForestPartition(
+        n_shards=n_shards,
+        shard_trees=shard_trees,
+        tree_shard=tree_shard,
+        tree_qs=tree_qs,
+        tree_qe=tree_qe,
+        shard_entries=shard_entries,
+    )
+
+
+def shard_arenas(
+    forest: RTreeForest, part: ForestPartition
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Stacked per-shard SoA arenas + tile pyramids.
+
+    Returns ``(entries (S, 2*dim, Pp), fine (S, 2*dim, NTp),
+    coarse (S, 2*dim, NTp // COARSE_GROUP), n_tiles)`` — every shard
+    padded to the *common* width ``Pp`` (the max shard's TP-rounded
+    entry count) with impossible boxes (min > max), so padding tiles
+    have impossible MBRs and never activate.  ``n_tiles = Pp // TP`` is
+    therefore uniform across shards, which keeps the shard_map program
+    one trace.
+    """
+    esoa, off = forest_soa(forest)           # cached global transposition
+    dim = forest.dim
+    S = part.n_shards
+    Pp = max(TP, -(-int(part.shard_entries.max(initial=0)) // TP) * TP)
+    entries = np.empty((S, 2 * dim, Pp), dtype=np.float32)
+    entries[:, :dim] = 1.0                    # impossible box padding
+    entries[:, dim:] = 0.0
+    for s, trees in enumerate(part.shard_trees):
+        lo = 0
+        for t in trees:
+            a, b = int(off[t]), int(off[t + 1])
+            entries[s, :, lo:lo + (b - a)] = esoa[:, a:b]
+            lo += b - a
+    fine_l, coarse_l = [], []
+    nt = Pp // TP
+    for s in range(S):
+        fine, coarse, nt_s = build_tile_pyramid(entries[s], dim)
+        assert nt_s == nt
+        fine_l.append(fine)
+        coarse_l.append(coarse)
+    return entries, np.stack(fine_l), np.stack(coarse_l), nt

@@ -1,0 +1,286 @@
+"""Sharded multi-device RangeReach serving over a partitioned forest.
+
+:class:`ShardedEngine` is the cluster-scale sibling of the single-device
+:class:`~repro.core.engine.QueryEngine`.  The 2DReach forest is
+partitioned by tree id (size-balanced bin packing over per-tree entry
+counts, :mod:`repro.cluster.partition`), one ``QueryEngine``-style SoA
+arena + tile pyramid is uploaded **per shard** (stacked and sharded over
+the mesh's ``data`` axis), and the vertex→tree pointer arrays are
+replicated on every device.  ``query_batch`` runs as two
+``shard_map``-ed jits mirroring the single-device two-phase structure:
+
+1. **route + prune** — every device evaluates the fused pointer lookup
+   for the whole (replicated) batch, masks it down to the queries whose
+   tree lives on one of its shards (everyone else gets an empty arena
+   slice, so the kernels do no work for them), and runs the Pallas
+   hierarchical prune against its own tile pyramid;
+2. **masked scan** — after a host-side power-of-two bucket of the global
+   candidate max (``pmax`` across shards, so every device traces the
+   same K), each device runs the scalar-prefetch descent scan over its
+   own arena and the per-query hits ``OR``-reduce across the mesh
+   (``psum`` of 0/1 ints).
+
+Every query's tree lives on exactly one shard and that shard's arena
+holds exactly the tree's entries (same boxes, same slice contents), so
+answers are **bit-identical** to ``query_host`` — the same guarantee the
+single-device engine gives, asserted across shard counts in tests.
+
+More shards than devices is legal (and how single-host tests exercise
+the 8-shard layout): each device serves ``n_shards / n_devices`` stacked
+shards with an unrolled loop inside the same trace, so the program is
+identical SPMD everywhere and steady state still recompiles nothing.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..compat import shard_map
+from ..core.engine import (
+    PointerSide,
+    _bucket,
+    _unsupported_msg,
+    compact_candidates,
+    pad_batch,
+)
+from ..core.two_d_reach import TwoDReachIndex
+from ..distributed.sharding import index_shard_specs
+from ..kernels.range_query.descent import (
+    descent_scan_pallas,
+    prune_tiles_pallas,
+)
+from ..kernels.range_query.kernel import TB
+from ..launch.mesh import make_shard_mesh
+from .partition import partition_forest, shard_arenas
+
+_AXIS = "data"
+
+
+def _devices_for(n_shards: int, n_avail: int) -> int:
+    """Largest device count <= n_avail that divides n_shards evenly."""
+    for d in range(min(n_shards, n_avail), 0, -1):
+        if n_shards % d == 0:
+            return d
+    return 1
+
+
+class ShardedEngine:
+    """Compile-once sharded engine over a built ``TwoDReachIndex``.
+
+    Parameters
+    ----------
+    index:     any 2DReach variant (``base`` / ``comp`` / ``pointer``).
+    n_shards:  forest partitions; defaults to the local device count.
+               May exceed it — shards then stack per device.
+    mesh:      1-D mesh with a ``data`` axis; ``None`` builds one over
+               the largest device count that divides ``n_shards``.
+    interpret: Pallas interpret mode; ``None`` picks real kernels on
+               TPU and interpret elsewhere.
+    """
+
+    def __init__(self, index: TwoDReachIndex,
+                 n_shards: Optional[int] = None,
+                 mesh=None,
+                 interpret: Optional[bool] = None):
+        if not isinstance(index, TwoDReachIndex):
+            raise ValueError(_unsupported_msg(index, "cluster ShardedEngine"))
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self._interpret = bool(interpret)
+        self.variant = index.variant
+        self.dim = index.forest.dim
+
+        if n_shards is None:
+            n_shards = (mesh.shape[_AXIS] if mesh is not None
+                        else len(jax.devices()))
+        n_shards = int(n_shards)
+        if mesh is None:
+            mesh = make_shard_mesh(_devices_for(n_shards, len(jax.devices())))
+        n_dev = mesh.shape[_AXIS]
+        if n_shards % n_dev:
+            raise ValueError(
+                f"n_shards={n_shards} must be a multiple of the mesh's "
+                f"{_AXIS} axis size {n_dev}")
+        self.mesh = mesh
+        self.n_shards = n_shards
+        self._shards_per_dev = n_shards // n_dev
+
+        # ---- partition + one-time sharded upload -----------------------
+        self.partition = partition_forest(index.forest, n_shards)
+        entries, fine, coarse, nt = shard_arenas(index.forest, self.partition)
+        self.n_tiles = nt                       # per shard, uniform
+        specs = index_shard_specs(_AXIS)
+
+        def put(x, spec):
+            return jax.device_put(x, NamedSharding(mesh, spec))
+
+        self._entries = put(entries, specs["entries"])
+        self._fine = put(fine, specs["fine"])
+        self._coarse = put(coarse, specs["coarse"])
+        self._tree_shard = put(
+            jnp.asarray(self.partition.tree_shard), specs["tree_shard"])
+        self._tree_qs = put(
+            jnp.asarray(self.partition.tree_qs), specs["tree_qs"])
+        self._tree_qe = put(
+            jnp.asarray(self.partition.tree_qe), specs["tree_qe"])
+        self._side = PointerSide(index)
+
+        self.stats: Dict[str, float] = {
+            "uploads": 1, "batches": 0, "queries": 0,
+            "tiles_scanned": 0, "tiles_grid": 0, "tiles_full_scan": 0,
+        }
+        self.shard_queries = np.zeros(n_shards, dtype=np.int64)
+        # candidate-capacity high-water mark: K only ever ratchets up, so
+        # a smaller batch never traces a new K shape and lifetime scan
+        # retraces are bounded by log2(n_tiles) per batch bucket.  A
+        # regrouped frontend flush (deadline-or-full boundaries are
+        # timing-dependent) can still ratchet once if a new query-tile
+        # window's candidate union crosses the warmed power-of-two
+        # bucket; after that the mark covers it for good
+        self._kb_hwm = 1
+        self._prepare = jax.jit(self._make_prepare())
+        self._scan = jax.jit(self._make_scan())
+
+    # ------------------------------------------------------------------
+    # shard_map-ed jit closures
+    # ------------------------------------------------------------------
+
+    def _make_prepare(self):
+        side, dim = self._side, self.dim
+        interpret = self._interpret
+        L, nt = self._shards_per_dev, self.n_tiles
+        tshard, tqs, tqe = self._tree_shard, self._tree_qs, self._tree_qe
+
+        def prepare(fine, coarse, us, rsoa):
+            # fine/coarse: (L, 2*dim, ·) local shard stack; us/rsoa
+            # replicated.  Routing is replicated compute (identical on
+            # every device); only the prune runs against local pyramids.
+            tid, valid, forced = side.route(us, rsoa)
+            t = jnp.maximum(tid, 0)
+            own = jnp.where(valid, tshard[t], -1)   # replicated routing
+            first = jax.lax.axis_index(_AXIS) * L
+            qs_l, qe_l, cand_l, cnt_l = [], [], [], []
+            for l in range(L):
+                mine = own == first + l
+                qs = jnp.where(mine, tqs[t], 0)
+                qe = jnp.where(mine, tqe[t], 0)
+                mask = prune_tiles_pallas(
+                    fine[l], coarse[l], rsoa, qs, qe,
+                    dim=dim, interpret=interpret,
+                )
+                cand, cnt = compact_candidates(mask, nt)
+                qs_l.append(qs)
+                qe_l.append(qe)
+                cand_l.append(cand)
+                cnt_l.append(cnt)
+            cnt = jnp.stack(cnt_l)
+            mx = jax.lax.pmax(cnt.max(), _AXIS)
+            return (forced, own, jnp.stack(qs_l), jnp.stack(qe_l),
+                    jnp.stack(cand_l), cnt, mx)
+
+        return shard_map(
+            prepare, self.mesh,
+            in_specs=(P(_AXIS), P(_AXIS), P(), P()),
+            out_specs=(P(), P(), P(_AXIS), P(_AXIS), P(_AXIS),
+                       P(_AXIS), P()),
+        )
+
+    def _make_scan(self):
+        dim, interpret = self.dim, self._interpret
+        L = self._shards_per_dev
+
+        def scan(entries, cand, qs, qe, rsoa):
+            # entries (L, 2*dim, Pp); cand (L, NB, K); qs/qe (L, Bb)
+            hit = jnp.zeros((rsoa.shape[1],), jnp.int32)
+            for l in range(L):
+                hit = hit | descent_scan_pallas(
+                    cand[l], entries[l], rsoa, qs[l], qe[l],
+                    dim=dim, interpret=interpret,
+                )
+            # OR-reduce across shards: hits are 0/1 and each query's
+            # tree lives on exactly one shard, so a sum is an OR
+            return jax.lax.psum(hit, _AXIS)
+
+        return shard_map(
+            scan, self.mesh,
+            in_specs=(P(_AXIS), P(_AXIS), P(_AXIS), P(_AXIS), P()),
+            out_specs=P(),
+        )
+
+    # ------------------------------------------------------------------
+    # public surface
+    # ------------------------------------------------------------------
+
+    @property
+    def n_compiles(self) -> int:
+        """Distinct (bucketed) shapes traced so far — flat in steady
+        state; tests assert it via this introspection hook."""
+        return int(self._prepare._cache_size() + self._scan._cache_size())
+
+    def query_batch(self, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
+        """Batched RangeReach, bit-identical to the host path."""
+        us = np.asarray(us, dtype=np.int64)
+        B = len(us)
+        if B == 0:
+            return np.zeros(0, dtype=bool)
+        Bb, us_p, rsoa = pad_batch(us, rects, self.dim)
+        rsoa_dev = jnp.asarray(rsoa)
+
+        forced, own, qs, qe, cand, cnt, mx = self._prepare(
+            self._fine, self._coarse, jnp.asarray(us_p), rsoa_dev
+        )
+        self._kb_hwm = max(self._kb_hwm,
+                           min(_bucket(max(int(mx), 1), 1), self.n_tiles))
+        kb = self._kb_hwm
+        hit = self._scan(
+            self._entries, cand[:, :, :kb], qs, qe, rsoa_dev
+        )
+
+        S = self.n_shards
+        self.stats["batches"] += 1
+        self.stats["queries"] += B
+        self.stats["tiles_scanned"] += int(np.asarray(cnt).sum())
+        self.stats["tiles_grid"] += (Bb // TB) * kb * S
+        self.stats["tiles_full_scan"] += (Bb // TB) * self.n_tiles * S
+        # routing stats over the *real* lanes only (padding reuses
+        # vertex 0, which routes to a real shard but answers nothing)
+        own_b = np.asarray(own)[:B]
+        self.shard_queries += np.bincount(
+            own_b[own_b >= 0], minlength=S).astype(np.int64)
+        out = (np.asarray(hit) > 0) | np.asarray(forced)
+        return out[:B]
+
+    def query(self, u: int, rect) -> bool:
+        return bool(self.query_batch(np.array([u]), np.array([rect]))[0])
+
+
+def sharded_engine_for(index, n_shards: Optional[int] = None,
+                       interpret: Optional[bool] = None) -> ShardedEngine:
+    """Memoised ``ShardedEngine`` for a built 2DReach index.
+
+    One engine is cached per index instance: an explicit ``n_shards`` or
+    ``interpret`` that disagrees with the cached engine rebuilds and
+    *replaces* it (two shard layouts of the same index are never
+    resident at once), while ``n_shards=None`` accepts whatever layout
+    is cached — callers that need a specific count must say so.  Unlike
+    ``engine_for`` there is no silent fallback: cluster serving is an
+    explicit opt-in, so an unsupported index type raises a
+    ``ValueError`` naming it."""
+    if not isinstance(index, TwoDReachIndex):
+        raise ValueError(_unsupported_msg(index, "cluster ShardedEngine"))
+    eng = getattr(index, "_cluster_engine", None)
+    if eng is None or (
+        n_shards is not None and eng.n_shards != int(n_shards)
+    ) or (
+        interpret is not None and eng._interpret != bool(interpret)
+    ):
+        eng = ShardedEngine(index, n_shards=n_shards, interpret=interpret)
+        index._cluster_engine = eng
+    return eng

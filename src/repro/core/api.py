@@ -67,6 +67,10 @@ def batch_query(index, us: np.ndarray, rects: np.ndarray,
     compile-once :class:`~repro.core.engine.QueryEngine` (uploaded and
     memoised on first use); index types without a device engine fall
     back to the host path.
+    ``engine="cluster"`` routes through the sharded multi-device
+    :class:`~repro.cluster.ShardedEngine` (forest partitioned over the
+    mesh, memoised on first use); cluster serving is an explicit opt-in,
+    so an unsupported index type raises instead of falling back.
     """
     if engine == "device":
         from .engine import engine_for  # deferred: engine imports kernels
@@ -74,8 +78,14 @@ def batch_query(index, us: np.ndarray, rects: np.ndarray,
         eng = engine_for(index)
         if eng is not None:
             return eng.query_batch(np.asarray(us), np.asarray(rects))
+    elif engine == "cluster":
+        from ..cluster import sharded_engine_for  # deferred: imports core
+
+        eng = sharded_engine_for(index)
+        return eng.query_batch(np.asarray(us), np.asarray(rects))
     elif engine != "host":
-        raise ValueError(f"unknown engine {engine!r}; expected host|device")
+        raise ValueError(
+            f"unknown engine {engine!r}; expected host|device|cluster")
     return index.query_batch(np.asarray(us), np.asarray(rects))
 
 

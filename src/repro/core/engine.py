@@ -21,17 +21,28 @@ scanned) forfeits the reduction.  :class:`QueryEngine` uploads a built
    with the query's R-tree footprint instead of the arena size.
 
 Batches are padded to power-of-two **buckets** (and the candidate
-capacity K likewise), so the jit cache is keyed on a handful of shapes:
+capacity K likewise, with a monotone high-water mark so a smaller batch
+never traces a new K shape), so the jit cache is keyed on a handful of
+shapes:
 steady-state serving recompiles nothing and re-transposes nothing —
 asserted by tests via jit cache-size introspection.  Exactness never
 rests on the pruning: the scan kernel re-masks by arena slice and exact
 box test, so the engine is bit-identical to the ``query_host`` oracle
 (scanning an extra tile is an idempotent OR with no new hits).
+
+The upload path is factored into two reusable pieces so the sharded
+cluster engine (:mod:`repro.cluster`) serves the same structures:
+
+* :class:`PointerSide` — the replicated vertex→tree lookup arrays plus
+  the fused in-jit routing (lookup + Alg. 2 forced answers);
+* :class:`TileArena` — one SoA entry arena + tile-MBR pyramid (a shard
+  holds one arena; the single-device engine holds the whole forest's).
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+import dataclasses
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -64,6 +75,139 @@ def _popcount32_jnp(x: jax.Array) -> jax.Array:
     return ((x * np.uint32(0x01010101)) >> 24).astype(jnp.int32)
 
 
+# --------------------------------------------------------------------------
+# Reusable upload pieces (single-device engine + cluster shards)
+# --------------------------------------------------------------------------
+
+class PointerSide:
+    """Device-resident vertex→tree lookup side of a 2DReach index.
+
+    Holds the arrays every serving replica needs in full — coords,
+    excluded mask, and the variant's pointer structure — and evaluates
+    the fused lookup / Alg. 2 routing inside whatever jit traces it.
+    In the cluster engine these arrays are *replicated* per device while
+    the R-tree arenas shard.
+    """
+
+    def __init__(self, index: TwoDReachIndex):
+        self.variant = index.variant
+        self.dim = index.forest.dim
+        self._coords = jnp.asarray(index.coords, jnp.float32)
+        self._excluded = jnp.asarray(index.excluded)
+        if self.variant == "pointer":
+            self._vertex_comp = jnp.asarray(index.vertex_comp, jnp.int32)
+            self._bits = jnp.asarray(index.bitrank.bits)
+            self._rank = jnp.asarray(index.bitrank.rank, jnp.int32)
+            self._tree_ptrs = jnp.asarray(index.tree_ptrs, jnp.int32)
+            self._vertex_tree = None
+        else:
+            self._vertex_tree = jnp.asarray(index.vertex_tree, jnp.int32)
+
+    def lookup(self, us: jax.Array) -> jax.Array:
+        """Fused vertex -> tree id (-1: excluded / no tree), in-jit."""
+        if self.variant != "pointer":
+            return self._vertex_tree[us]
+        c = self._vertex_comp[us]
+        ok = c >= 0
+        cc = jnp.maximum(c, 0)
+        w = cc // 32
+        b = (cc % 32).astype(jnp.uint32)
+        word = self._bits[w]
+        member = ((word >> b) & np.uint32(1)) > 0
+        below = word & ((np.uint32(1) << b) - np.uint32(1))
+        rank = self._rank[w] + _popcount32_jnp(below)
+        t = self._tree_ptrs[
+            jnp.minimum(rank, self._tree_ptrs.shape[0] - 1)
+        ]
+        return jnp.where(ok & member, t, -1)
+
+    def route(self, us: jax.Array, rects_soa: jax.Array
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """(tree id, needs-tree-probe mask, Alg. 2 forced answers).
+
+        ``forced`` is the spatial-query special case fused in-trace: an
+        excluded (spatial-sink) query vertex answers by its own point
+        against the rect, with the same float32 comparisons as host.
+        """
+        dim = self.dim
+        tid = self.lookup(us)
+        exc = self._excluded[us]
+        valid = (tid >= 0) & ~exc
+        pt = self._coords[us]
+        inr = jnp.ones(us.shape[0], dtype=bool)
+        for a in range(dim):
+            inr = inr & (pt[:, a] >= rects_soa[a])
+            inr = inr & (pt[:, a] <= rects_soa[dim + a])
+        return tid, valid, exc & inr
+
+
+@dataclasses.dataclass(frozen=True)
+class TileArena:
+    """One uploaded SoA entry arena + its tile-MBR pyramid."""
+
+    entries: jax.Array     # (2*dim, Pp) float32 SoA planes
+    fine: jax.Array        # (2*dim, NTp) float32 leaf-tile MBRs
+    coarse: jax.Array      # (2*dim, NTp // COARSE_GROUP) float32
+    entry_off: jax.Array   # (T+1,) int32 per-tree arena slices
+    n_tiles: int           # true fine tile count (Pp // TP)
+
+    @classmethod
+    def upload(cls, esoa: np.ndarray, off: np.ndarray,
+               dim: int) -> "TileArena":
+        fine, coarse, nt = build_tile_pyramid(esoa, dim)
+        return cls(
+            entries=jnp.asarray(esoa),
+            fine=jnp.asarray(fine),
+            coarse=jnp.asarray(coarse),
+            entry_off=jnp.asarray(off, jnp.int32),
+            n_tiles=nt,
+        )
+
+
+def compact_candidates(mask: jax.Array, nt: int
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Prune mask (NB, >=nt) -> compacted candidate tiles per query tile.
+
+    Returns ``(cand (NB, nt) int32, cnt (NB,) int32)``: active tiles
+    first (ascending), then the last active tile repeated so consecutive
+    identical block indices elide the scan kernel's DMA.
+    """
+    active = mask[:, :nt] > 0
+    cnt = active.sum(axis=1).astype(jnp.int32)
+    j = jnp.arange(nt, dtype=jnp.int32)
+    order = jnp.argsort(
+        jnp.where(active, j[None, :], nt + j[None, :]), axis=1
+    ).astype(jnp.int32)
+    last = order[jnp.arange(order.shape[0]), jnp.maximum(cnt - 1, 0)]
+    cand = jnp.where(j[None, :] < cnt[:, None], order, last[:, None])
+    return cand, cnt
+
+
+def pad_batch(us: np.ndarray, rects: np.ndarray, dim: int
+              ) -> Tuple[int, np.ndarray, np.ndarray]:
+    """Pad a host batch to its power-of-two bucket.
+
+    Returns ``(Bb, us_p (Bb,) int32, rsoa (2*dim, Bb) float32)``.
+    Padding rects must miss every box regardless of data extent:
+    min=+inf / max=-inf fails both halves of the intersect test (a
+    finite 1.0/0.0 sentinel would phantom-hit tiles spanning it).
+    """
+    B = len(us)
+    rects = np.asarray(rects, dtype=np.float32).reshape(B, 2 * dim)
+    Bb = _bucket(B, TB)
+    us_p = np.zeros(Bb, dtype=np.int32)
+    us_p[:B] = us
+    rsoa = np.empty((2 * dim, Bb), dtype=np.float32)
+    rsoa[:dim] = np.inf
+    rsoa[dim:] = -np.inf
+    rsoa[:, :B] = rects.T
+    return Bb, us_p, rsoa
+
+
+# --------------------------------------------------------------------------
+# Single-device engine
+# --------------------------------------------------------------------------
+
 class QueryEngine:
     """Compile-once device engine over a built ``TwoDReachIndex``.
 
@@ -85,31 +229,23 @@ class QueryEngine:
         self._interpret = bool(interpret)
         self.variant = index.variant
         self.dim = index.forest.dim
-        dim = self.dim
 
         # ---- one-time upload -------------------------------------------
         esoa, off = forest_soa(index.forest)          # cached transposition
-        fine, coarse, nt = build_tile_pyramid(esoa, dim)
-        self.n_tiles = nt
-        self._entries = jnp.asarray(esoa)
-        self._fine = jnp.asarray(fine)
-        self._coarse = jnp.asarray(coarse)
-        self._entry_off = jnp.asarray(off, jnp.int32)  # (T+1,)
-        self._coords = jnp.asarray(index.coords, jnp.float32)
-        self._excluded = jnp.asarray(index.excluded)
-        if self.variant == "pointer":
-            self._vertex_comp = jnp.asarray(index.vertex_comp, jnp.int32)
-            self._bits = jnp.asarray(index.bitrank.bits)
-            self._rank = jnp.asarray(index.bitrank.rank, jnp.int32)
-            self._tree_ptrs = jnp.asarray(index.tree_ptrs, jnp.int32)
-            self._vertex_tree = None
-        else:
-            self._vertex_tree = jnp.asarray(index.vertex_tree, jnp.int32)
+        self._side = PointerSide(index)
+        self._arena = TileArena.upload(esoa, off, self.dim)
+        self.n_tiles = self._arena.n_tiles
 
         self.stats: Dict[str, float] = {
             "uploads": 1, "batches": 0, "queries": 0,
             "tiles_scanned": 0, "tiles_grid": 0, "tiles_full_scan": 0,
         }
+        # candidate-capacity high-water mark: K only ratchets up, so a
+        # smaller batch never traces a new K shape and lifetime scan
+        # retraces are bounded by log2(n_tiles) per batch bucket; extra
+        # K columns repeat the last candidate tile, whose DMA the
+        # pipeline elides
+        self._kb_hwm = 1
         self._prepare = jax.jit(self._make_prepare())
         self._scan = jax.jit(self._make_scan())
 
@@ -117,59 +253,24 @@ class QueryEngine:
     # jit closures (per-engine, so cache introspection is local)
     # ------------------------------------------------------------------
 
-    def _lookup(self, us: jax.Array) -> jax.Array:
-        """Fused vertex -> tree id (-1: excluded / no tree), in-jit."""
-        if self.variant != "pointer":
-            return self._vertex_tree[us]
-        c = self._vertex_comp[us]
-        ok = c >= 0
-        cc = jnp.maximum(c, 0)
-        w = cc // 32
-        b = (cc % 32).astype(jnp.uint32)
-        word = self._bits[w]
-        member = ((word >> b) & np.uint32(1)) > 0
-        below = word & ((np.uint32(1) << b) - np.uint32(1))
-        rank = self._rank[w] + _popcount32_jnp(below)
-        t = self._tree_ptrs[
-            jnp.minimum(rank, self._tree_ptrs.shape[0] - 1)
-        ]
-        return jnp.where(ok & member, t, -1)
-
     def _make_prepare(self):
-        dim = self.dim
         nt = self.n_tiles
         interpret = self._interpret
+        dim = self.dim
+        side = self._side
+        arena = self._arena
 
         def prepare(us, rects_soa):
             # us (Bb,) int32; rects_soa (2*dim, Bb) f32
-            tid = self._lookup(us)
-            exc = self._excluded[us]
-            valid = (tid >= 0) & ~exc
+            tid, valid, forced = side.route(us, rects_soa)
             t = jnp.maximum(tid, 0)
-            qs = jnp.where(valid, self._entry_off[t], 0)
-            qe = jnp.where(valid, self._entry_off[t + 1], 0)
-            # Alg. 2 spatial-query special case, fused: the vertex's own
-            # point against the rect (same float32 comparisons as host)
-            pt = self._coords[us]
-            inr = jnp.ones(us.shape[0], dtype=bool)
-            for a in range(dim):
-                inr = inr & (pt[:, a] >= rects_soa[a])
-                inr = inr & (pt[:, a] <= rects_soa[dim + a])
-            forced = exc & inr
+            qs = jnp.where(valid, arena.entry_off[t], 0)
+            qe = jnp.where(valid, arena.entry_off[t + 1], 0)
             mask = prune_tiles_pallas(
-                self._fine, self._coarse, rects_soa, qs, qe,
+                arena.fine, arena.coarse, rects_soa, qs, qe,
                 dim=dim, interpret=interpret,
             )
-            active = mask[:, :nt] > 0                       # (NB, NT)
-            cnt = active.sum(axis=1).astype(jnp.int32)
-            j = jnp.arange(nt, dtype=jnp.int32)
-            order = jnp.argsort(
-                jnp.where(active, j[None, :], nt + j[None, :]), axis=1
-            ).astype(jnp.int32)
-            last = order[
-                jnp.arange(order.shape[0]), jnp.maximum(cnt - 1, 0)
-            ]
-            cand = jnp.where(j[None, :] < cnt[:, None], order, last[:, None])
+            cand, cnt = compact_candidates(mask, nt)
             return forced, qs, qe, cand, cnt, cnt.max()
 
         return prepare
@@ -177,10 +278,11 @@ class QueryEngine:
     def _make_scan(self):
         dim = self.dim
         interpret = self._interpret
+        arena = self._arena
 
         def scan(cand_k, rects_soa, qs, qe):
             return descent_scan_pallas(
-                cand_k, self._entries, rects_soa, qs, qe,
+                cand_k, arena.entries, rects_soa, qs, qe,
                 dim=dim, interpret=interpret,
             )
 
@@ -203,23 +305,15 @@ class QueryEngine:
         B = len(us)
         if B == 0:
             return np.zeros(0, dtype=bool)
-        rects = np.asarray(rects, dtype=np.float32).reshape(B, 2 * self.dim)
-        Bb = _bucket(B, TB)
-        us_p = np.zeros(Bb, dtype=np.int32)
-        us_p[:B] = us
-        rsoa = np.empty((2 * self.dim, Bb), dtype=np.float32)
-        # padding rects must miss every box regardless of data extent:
-        # min=+inf / max=-inf fails both halves of the intersect test
-        # (a finite 1.0/0.0 sentinel would phantom-hit tiles spanning it)
-        rsoa[: self.dim] = np.inf
-        rsoa[self.dim:] = -np.inf
-        rsoa[:, :B] = rects.T
+        Bb, us_p, rsoa = pad_batch(us, rects, self.dim)
         rsoa_dev = jnp.asarray(rsoa)
 
         forced, qs, qe, cand, cnt, mx = self._prepare(
             jnp.asarray(us_p), rsoa_dev
         )
-        kb = min(_bucket(max(int(mx), 1), 1), self.n_tiles)
+        self._kb_hwm = max(self._kb_hwm,
+                           min(_bucket(max(int(mx), 1), 1), self.n_tiles))
+        kb = self._kb_hwm
         hit = self._scan(cand[:, :kb], rsoa_dev, qs, qe)
 
         self.stats["batches"] += 1
@@ -237,13 +331,29 @@ class QueryEngine:
         return bool(self.query_batch(np.array([u]), np.array([rect]))[0])
 
 
-def engine_for(index, interpret: Optional[bool] = None):
+def _unsupported_msg(index, what: str) -> str:
+    name = type(index).__name__
+    method = getattr(index, "method", None) or getattr(index, "variant", None)
+    via = f" (method {method!r})" if isinstance(method, str) else ""
+    return (
+        f"no {what} for {name}{via}: device/cluster serving supports the "
+        f"2DReach variants only (2dreach, 2dreach-comp, 2dreach-pointer)"
+    )
+
+
+def engine_for(index, interpret: Optional[bool] = None,
+               required: bool = False):
     """Memoised ``QueryEngine`` for a built 2DReach index (one upload per
-    index instance); returns ``None`` for index types the device engine
-    does not serve — callers fall back to the host path.  An explicit
-    ``interpret`` that disagrees with the memoised engine's mode rebuilds
-    rather than silently returning the wrong kernel mode."""
+    index instance).  For index types the device engine does not serve,
+    returns ``None`` so callers can fall back to the host path — or, with
+    ``required=True``, raises a ``ValueError`` naming the unsupported
+    index/method (instead of the caller tripping an ``AttributeError``
+    deep inside the engine).  An explicit ``interpret`` that disagrees
+    with the memoised engine's mode rebuilds rather than silently
+    returning the wrong kernel mode."""
     if not isinstance(index, TwoDReachIndex):
+        if required:
+            raise ValueError(_unsupported_msg(index, "device QueryEngine"))
         return None
     eng = getattr(index, "_device_engine", None)
     if eng is None or (

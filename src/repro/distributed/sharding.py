@@ -172,6 +172,31 @@ def batch_spec(axes: MeshAxes) -> P:
     return P(axes.data)
 
 
+# --------------------------------------------------------------------------
+# RangeReach index sharding (cluster serving)
+# --------------------------------------------------------------------------
+
+def index_shard_specs(axis: str = "data") -> Dict[str, P]:
+    """PartitionSpecs for the cluster ``ShardedEngine``'s device arrays.
+
+    The stacked per-shard R-tree arenas — SoA entry planes plus the
+    fine/coarse tile-pyramid planes, all shaped ``(S, 2*dim, width)`` —
+    shard over ``axis`` on the leading (shard) dim; the vertex→tree
+    routing arrays are replicated on every device (the pointer side is
+    tiny next to the arenas, and every device must route every query).
+    """
+    arena = P(axis, None, None)
+    replicated = P()
+    return {
+        "entries": arena,
+        "fine": arena,
+        "coarse": arena,
+        "tree_shard": replicated,
+        "tree_qs": replicated,
+        "tree_qe": replicated,
+    }
+
+
 def opt_state_specs(opt_state, params, pspecs, axes: MeshAxes, mesh: Mesh,
                     zero1: bool = True):
     """Specs for AdamWState(step, m, v)."""

@@ -73,19 +73,34 @@ class DynamicIndex:
              index's NumPy path; ``"device"`` uploads the static base to
              a compile-once :class:`~repro.core.engine.QueryEngine`
              (rebuilt on every compaction swap) while the overlay —
-             small, mutable, pointer-rich — stays host-side.
+             small, mutable, pointer-rich — stays host-side;
+             ``"cluster"`` shards the static base over the mesh through
+             a :class:`~repro.cluster.ShardedEngine` (repartitioned and
+             re-uploaded on every compaction swap) with the same
+             host-side overlay on top.
+    n_shards: forest partitions for ``engine="cluster"`` (default: the
+             local device count); ignored otherwise.
     build_kw: forwarded to ``build_index`` (fanout, dedup, ...).
     """
 
     def __init__(self, graph: GeosocialGraph, method: str,
                  policy: Optional[CompactionPolicy] = None,
-                 engine: str = "host", **build_kw):
+                 engine: str = "host", n_shards: Optional[int] = None,
+                 **build_kw):
         from ..core.api import build_index  # deferred: api imports us lazily
 
-        if engine not in ("host", "device"):
-            raise ValueError(f"unknown engine {engine!r}; expected host|device")
+        if engine not in ("host", "device", "cluster"):
+            raise ValueError(
+                f"unknown engine {engine!r}; expected host|device|cluster")
+        if engine != "host" and not method.lower().startswith("2dreach"):
+            # fail at construction, naming the method — not deep inside
+            # the first compaction's engine rebuild
+            raise ValueError(
+                f"engine={engine!r} serves the 2DReach variants only, "
+                f"not method {method!r}")
         self.method = method.lower()
         self.engine = engine
+        self.n_shards = n_shards
         self._build_kw = dict(build_kw)
         self.policy = policy or CompactionPolicy()
         self._lock = threading.RLock()
@@ -140,7 +155,15 @@ class DynamicIndex:
         if self.engine == "device":
             from ..core.engine import engine_for  # deferred: core is heavy
 
-            self._base_engine = engine_for(index)
+            # required=True: asking for device serving on a method the
+            # engine cannot serve is a configuration error, not a
+            # silent host fallback
+            self._base_engine = engine_for(index, required=True)
+        elif self.engine == "cluster":
+            from ..cluster import sharded_engine_for  # deferred: heavy
+
+            self._base_engine = sharded_engine_for(
+                index, n_shards=self.n_shards)
 
     def _base_probe(self, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
         """Static-base probe — the device engine when enabled (and the

@@ -31,3 +31,15 @@ def make_host_mesh():
     """Whatever devices exist locally (tests / examples): (1, n) mesh."""
     n = len(jax.devices())
     return jax.make_mesh((1, n), ("data", "model"))
+
+
+def make_shard_mesh(n_dev: int = None):
+    """1-D query-serving mesh over the ``data`` axis.
+
+    The cluster :class:`~repro.cluster.ShardedEngine` shards the 2DReach
+    forest over this axis (``launch/serve.py --engine cluster``); index
+    PartitionSpecs live in ``distributed.sharding.index_shard_specs``.
+    ``n_dev`` defaults to every local device.
+    """
+    n = len(jax.devices()) if n_dev is None else int(n_dev)
+    return jax.make_mesh((n,), ("data",))

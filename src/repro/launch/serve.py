@@ -1,10 +1,10 @@
 """RangeReach serving launcher — the paper's production workload.
 
     PYTHONPATH=src python -m repro.launch.serve --dataset yelp --scale 0.1 \
-        --method 2dreach-comp --queries 2000 --engine kernel
+        --method 2dreach-comp --queries 2000 --engine cluster --shards 8
 
 Builds the chosen index offline, then serves batched RANGEREACH queries
-through one of four engines:
+through one of five engines:
 
     host      — vectorised NumPy ragged wavefront (paper-equivalent)
     wavefront — jit fixed-capacity R-tree descent (device engine)
@@ -12,21 +12,149 @@ through one of four engines:
     device    — the compile-once QueryEngine: fused on-device pointer
                 lookup + hierarchically-pruned Pallas descent
                 (2DReach variants only)
+    cluster   — the sharded multi-device ShardedEngine behind the
+                micro-batching Frontend: forest partitioned over the
+                mesh, requests flushed deadline-or-full into the
+                power-of-two buckets the engine compiles for
 
-Every engine's answers are verified against the host engine before
-timing; throughput and per-query latency are reported.  On a mesh the
-query batch shards over the data axes (engine fns are pure jit).
+Every engine's answers are verified against the host engine before the
+timed pass.  Reported per engine: throughput *and* per-query latency
+percentiles (p50/p95/p99) — batch-amortised for the batched engines,
+true per-request submit→resolve latency for the cluster frontend.  The
+cluster arm additionally asserts the steady-state no-recompile
+contract after a warm pass.
 """
 
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import numpy as np
 
 from ..core import batch_query, build_index, index_nbytes
 from ..data import get_dataset, workload
+
+
+def _percentiles(lat_s: np.ndarray) -> dict:
+    """{p50, p95, p99} per-query latency in microseconds."""
+    lat_us = np.asarray(lat_s, dtype=np.float64) * 1e6
+    return {f"p{p}": float(np.percentile(lat_us, p)) for p in (50, 95, 99)}
+
+
+def _fmt_pct(pct: dict) -> str:
+    return " ".join(f"{k} {v:8.2f}us" for k, v in pct.items())
+
+
+def serve_chunked(call, n: int, batch: int):
+    """Serve queries [0, n) in chunks of ``batch`` via
+    ``call(lo, hi) -> answers`` and measure amortised per-query latency.
+
+    Warms the full-chunk shape *and* the ragged tail's shape first (the
+    tail is its own jit shape — an unwarmed one would report compile
+    time as tail latency), then times each chunk, assigning every query
+    in it the chunk's wall-time / chunk size.  Returns
+    ``(answers (n,) bool, per-query latencies (n,) seconds, total s)``.
+    Shared by this launcher and ``benchmarks/perf_rangereach.py``.
+    """
+    ans = np.zeros(n, dtype=bool)
+    lats = np.zeros(n, dtype=np.float64)
+    call(0, min(batch, n))                   # warmup / compile
+    if n % batch:
+        call(n - n % batch, n)               # ... and the ragged tail
+    total = 0.0
+    for lo in range(0, n, batch):
+        hi = min(lo + batch, n)
+        t0 = time.perf_counter()
+        out = call(lo, hi)
+        dt = time.perf_counter() - t0
+        ans[lo:hi] = np.asarray(out)[: hi - lo].astype(bool)
+        lats[lo:hi] = dt / (hi - lo)
+        total += dt
+    return ans, lats, total
+
+
+def _serve_batched(fn, us, rects, batch: int):
+    """``serve_chunked`` over a ``fn(us_chunk, rects_chunk)`` engine."""
+    return serve_chunked(
+        lambda lo, hi: fn(us[lo:hi], rects[lo:hi]), len(us), batch)
+
+
+def _serve_cluster(index, us, rects, args):
+    """ShardedEngine behind the micro-batching Frontend: per-request
+    latencies (submit→resolve), steady-state no-recompile assertion."""
+    from ..cluster import Frontend, ShardedEngine
+
+    eng = ShardedEngine(index, n_shards=args.shards)
+    part = eng.partition
+    print(f"[serve] cluster: {eng.n_shards} shards on "
+          f"{eng.mesh.shape['data']} device(s), "
+          f"{part.n_trees} trees, per-shard entries "
+          f"{part.shard_entries.tolist()} (balance {part.balance():.2f})")
+    fe = Frontend(eng, max_batch=args.batch,
+                  max_delay=args.flush_ms * 1e-3)
+    try:
+        fe.warmup(us[:args.batch], rects[:args.batch])
+        fe.submit_many(us, rects)           # warm the K high-water mark
+        for i in range(len(us)):            # structure-matched shakeout:
+            fe.submit(int(us[i]), rects[i])
+        fe.flush(timeout=120)               # same per-request submission
+        # pattern as the timed pass below, so a regrouping-induced K
+        # ratchet lands here; then re-pin every batch bucket at the
+        # final mark so any flush grouping reuses an existing trace
+        fe.warmup(us[:args.batch], rects[:args.batch])
+        warm = eng.n_compiles
+        n = len(us)
+        lats = np.zeros(n, dtype=np.float64)
+        done = np.zeros(n, dtype=bool)
+        t0s = np.zeros(n, dtype=np.float64)
+        n_done = [0]
+        done_lock = threading.Lock()
+        all_done = threading.Event()
+        errs = []
+
+        def _cb(i):
+            # completion callbacks are the sync point: Future.result()
+            # can return before callbacks run, so the gather below waits
+            # on the callback count, not on the futures
+            def cb(fut):
+                try:
+                    lats[i] = time.monotonic() - t0s[i]
+                    done[i] = fut.result()
+                except BaseException as e:   # surfaced after the wait —
+                    errs.append(e)           # not swallowed by Future
+                finally:
+                    with done_lock:
+                        n_done[0] += 1
+                        if n_done[0] == n:
+                            all_done.set()
+            return cb
+
+        t_all = time.perf_counter()
+        for i in range(n):
+            t0s[i] = time.monotonic()
+            fe.submit(int(us[i]), rects[i]).add_done_callback(_cb(i))
+        assert all_done.wait(timeout=120), "request stream timed out"
+        if errs:
+            raise errs[0]
+        total = time.perf_counter() - t_all
+        assert eng.n_compiles == warm, (
+            f"steady-state recompile under the frontend: "
+            f"{eng.n_compiles} != {warm}")
+        print(f"[serve] cluster: {eng.n_compiles} compiled shapes "
+              f"(flat through the steady-state pass), "
+              f"frontend {int(fe.stats['n_batches'])} flushes "
+              f"(full {int(fe.stats['n_flush_full'])} / deadline "
+              f"{int(fe.stats['n_flush_deadline'])}), "
+              f"mean batch {fe.mean_batch:.1f}")
+        print(f"[serve] cluster: shard query routing "
+              f"{eng.shard_queries.tolist()}, "
+              f"{eng.stats['tiles_scanned']}/"
+              f"{eng.stats['tiles_full_scan']} leaf tiles scanned")
+        return done, lats, total
+    finally:
+        fe.close()
 
 
 def main():
@@ -37,7 +165,16 @@ def main():
     ap.add_argument("--queries", type=int, default=2000)
     ap.add_argument("--extent", type=float, default=0.05)
     ap.add_argument("--engine", default="host",
-                    choices=("host", "wavefront", "kernel", "device"))
+                    choices=("host", "wavefront", "kernel", "device",
+                             "cluster"))
+    ap.add_argument("--batch", type=int, default=256,
+                    help="serving batch size (keep it a power of two "
+                         "to reuse the engines' compiled buckets)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="cluster forest partitions "
+                         "(default: local device count)")
+    ap.add_argument("--flush-ms", type=float, default=2.0,
+                    help="cluster frontend deadline flush (ms)")
     ap.add_argument("--verify", type=int, default=64,
                     help="queries to verify against the BFS oracle")
     args = ap.parse_args()
@@ -63,51 +200,54 @@ def main():
         assert (want == got).all(), "index disagrees with oracle"
         print(f"[serve] verified {k} queries vs BFS oracle")
 
-    if args.engine == "host" or not hasattr(index, "forest"):
-        t0 = time.perf_counter()
-        ans = batch_query(index, us, rects)
-        dt = time.perf_counter() - t0
+    host_arm = args.engine == "host" or (
+        args.engine in ("wavefront", "kernel")
+        and not hasattr(index, "forest")
+    )
+    # host reference answers, for the arms that verify against them
+    host = None if host_arm else batch_query(index, us, rects)
+    if args.engine == "cluster":
+        ans, lats, dt = _serve_cluster(index, us, rects, args)
+    elif host_arm:
+        ans, lats, dt = _serve_batched(
+            lambda ub, rb: batch_query(index, ub, rb), us, rects,
+            args.batch)
     elif args.engine == "device":
         from ..core import engine_for
 
-        eng = engine_for(index)
-        if eng is None:
-            raise SystemExit(
-                f"--engine device serves the 2DReach variants only, "
-                f"not {args.method}")
-        eng.query_batch(us, rects)  # warm up / compile + upload
-        t0 = time.perf_counter()
-        sub = eng.query_batch(us, rects)
-        dt = time.perf_counter() - t0
-        ans = batch_query(index, us, rects)
-        assert (sub == ans).all(), "device engine mismatch"
+        eng = engine_for(index, required=True)
+        ans, lats, dt = _serve_batched(eng.query_batch, us, rects,
+                                       args.batch)
         print(f"[serve] device engine: {eng.n_compiles} compiled shapes, "
               f"{eng.stats['tiles_scanned']}/"
               f"{eng.stats['tiles_full_scan']} leaf tiles scanned "
               f"(vs full leaf scan)")
     else:
-        tid = index.lookup_tree(us)
         if args.engine == "wavefront":
             from ..core import query_jax_wavefront
 
-            fn = lambda: query_jax_wavefront(index.forest, tid, rects)[0]
+            def fn(ub, rb):
+                return query_jax_wavefront(
+                    index.forest, index.lookup_tree(ub), rb)[0]
         else:
             from ..kernels.range_query.ops import range_query_forest
 
-            fn = lambda: range_query_forest(index.forest, tid, rects)
-        sub = fn()   # warm up / compile
-        t0 = time.perf_counter()
-        sub = fn()
-        dt = time.perf_counter() - t0
-        host = batch_query(index, us, rects)
+            def fn(ub, rb):
+                return range_query_forest(
+                    index.forest, index.lookup_tree(ub), rb)
+        ans, lats, dt = _serve_batched(fn, us, rects, args.batch)
+        # wavefront/kernel probe trees only — mask the Alg. 2
+        # spatial-sink special case the full pipeline handles
         exc = getattr(index, "excluded", None)
-        if exc is not None:
-            m = ~exc[us]
-            assert (sub[m] == host[m]).all(), "engine mismatch"
+        m = ~exc[us] if exc is not None else np.ones(len(us), bool)
+        assert (ans[m] == host[m]).all(), "engine mismatch"
         ans = host
+    if args.engine in ("device", "cluster"):
+        assert (ans == host).all(), f"{args.engine} engine mismatch"
+    pct = _percentiles(lats)
     print(f"[serve] {args.engine}: {len(us)} queries in {dt * 1e3:.1f} ms "
-          f"({dt / len(us) * 1e6:.2f} us/query), "
-          f"{int(np.sum(ans))} positive")
+          f"({dt / len(us) * 1e6:.2f} us/query mean), "
+          f"{_fmt_pct(pct)}, {int(np.sum(ans))} positive")
 
 
 if __name__ == "__main__":

@@ -87,6 +87,21 @@ def test_engine_rejects_non_2dreach(graph):
         QueryEngine(idx)
 
 
+def test_engine_for_required_raises_clear_error(graph):
+    """engine_for(required=True) names the unsupported index instead of
+    the caller tripping an AttributeError deep inside the engine."""
+    idx = build_index(graph, "georeach")
+    with pytest.raises(ValueError, match="GeoReachIndex"):
+        engine_for(idx, required=True)
+    # DynamicIndex device/cluster serving on an unsupported method fails
+    # at construction, naming the method
+    from repro.core import build_dynamic_index
+
+    for eng in ("device", "cluster"):
+        with pytest.raises(ValueError, match="georeach"):
+            build_dynamic_index(graph, "georeach", engine=eng)
+
+
 # ---------------------------------------------------------------- buckets
 @pytest.mark.parametrize("B", [1, TB, TB + 1, 2 * TB, 100])
 def test_engine_bucket_boundaries(graph, indexes, B):
