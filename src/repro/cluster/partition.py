@@ -30,8 +30,10 @@ from typing import List, Tuple
 
 import numpy as np
 
-from ..core.rtree import RTreeForest
-from ..kernels.range_query.descent import build_tile_pyramid
+import jax.numpy as jnp
+
+from ..core.rtree import RTreeForest, _ragged_arange
+from ..kernels.range_query.descent import COARSE_GROUP, TPT, build_tile_pyramid
 from ..kernels.range_query.kernel import TP
 from ..kernels.range_query.ops import forest_soa
 
@@ -129,7 +131,19 @@ def shard_arenas(
     have impossible MBRs and never activate.  ``n_tiles = Pp // TP`` is
     therefore uniform across shards, which keeps the shard_map program
     one trace.
+
+    A forest built with ``build_forest_device`` carries its serving
+    arrays on device already; the shard stacks are then *gathered on
+    device* from the resident global plane (and the per-shard pyramids
+    reduced there too) — no host transposition, no host→device
+    re-upload.  Both paths produce identical float32 planes.
     """
+    dev = getattr(forest, "device", None)
+    if dev is not None:
+        return _shard_arenas_device(forest, part, dev)
+    from ..core.engine import UPLOAD_COUNTERS  # deferred: engine is heavy
+
+    UPLOAD_COUNTERS["host_uploads"] += 1
     esoa, off = forest_soa(forest)           # cached global transposition
     dim = forest.dim
     S = part.n_shards
@@ -151,3 +165,55 @@ def shard_arenas(
         fine_l.append(fine)
         coarse_l.append(coarse)
     return entries, np.stack(fine_l), np.stack(coarse_l), nt
+
+
+def _shard_arenas_device(
+    forest: RTreeForest, part: ForestPartition, dev
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, int]:
+    """``shard_arenas`` for a device-built forest: gather each shard's
+    arena from the resident global entry plane and reduce the per-shard
+    tile pyramids on device.  Identical planes to the host path."""
+    import jax
+
+    from ..core.engine import UPLOAD_COUNTERS  # deferred: engine is heavy
+    from ..kernels.forest_build import (
+        default_build_kernel,
+        np_inert_plane,
+        tile_pyramid_device,
+    )
+
+    UPLOAD_COUNTERS["device_adoptions"] += 1
+    dim = forest.dim
+    S = part.n_shards
+    off = forest.entry_off
+    Pp = max(TP, -(-int(part.shard_entries.max(initial=0)) // TP) * TP)
+    Pg = int(dev.entries.shape[1])
+    # host-computed gather map (small ints); sentinel Pg -> inert column
+    pos = np.full((S, Pp), Pg, dtype=np.int32)
+    for s, trees in enumerate(part.shard_trees):
+        if len(trees):
+            cnt = (off[trees + 1] - off[trees]).astype(np.int64)
+            within = _ragged_arange(cnt)
+            dstp = np.repeat(
+                np.r_[0, np.cumsum(cnt)[:-1]], cnt) + within
+            srcp = np.repeat(off[trees], cnt) + within
+            pos[s, dstp] = srcp
+    src = jnp.concatenate(
+        [dev.entries, jnp.asarray(np_inert_plane(dim, 1))], axis=1)
+    entries = jnp.take(
+        src, jnp.asarray(pos.reshape(-1)), axis=1
+    ).reshape(2 * dim, S, Pp).transpose(1, 0, 2)
+
+    kernel = default_build_kernel()
+    interpret = jax.default_backend() != "tpu"
+    fine_l, coarse_l = [], []
+    nt = Pp // TP
+    for s in range(S):
+        fine, coarse, nt_s = tile_pyramid_device(
+            entries[s], dim, tp=TP, tpt=TPT, group=COARSE_GROUP,
+            kernel=kernel, interpret=interpret,
+        )
+        assert nt_s == nt
+        fine_l.append(fine)
+        coarse_l.append(coarse)
+    return entries, jnp.stack(fine_l), jnp.stack(coarse_l), nt

@@ -134,6 +134,7 @@ class ShardedEngine:
 
         self.stats: Dict[str, float] = {
             "uploads": 1, "batches": 0, "queries": 0,
+            "adopted": int(getattr(index.forest, "device", None) is not None),
             "tiles_scanned": 0, "tiles_grid": 0, "tiles_full_scan": 0,
         }
         self.shard_queries = np.zeros(n_shards, dtype=np.int64)

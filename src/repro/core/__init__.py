@@ -18,11 +18,19 @@ from .graph import CSR, GeosocialGraph, build_csr, make_graph
 from .interval_labels import IntervalLabels, build_interval_labels
 from .oracle import rangereach_oracle, rangereach_oracle_batch, reachable_mask
 from .polygon import points_in_convex_polygon, polygon_oracle, polygon_query
-from .reachability import ClosureResult, closure_jax, closure_mbr_np, closure_np
+from .reachability import (
+    ClosureResult,
+    closure_bitset_mm,
+    closure_jax,
+    closure_mbr_np,
+    closure_np,
+)
 from .rtree import (
     DEFAULT_FANOUT,
+    DeviceForest,
     RTreeForest,
     build_forest,
+    build_forest_device,
     query_host,
     query_host_collect,
     query_jax_wavefront,
@@ -41,8 +49,10 @@ __all__ = [
     "IntervalLabels", "build_interval_labels",
     "rangereach_oracle", "rangereach_oracle_batch", "reachable_mask",
     "points_in_convex_polygon", "polygon_oracle", "polygon_query",
-    "ClosureResult", "closure_jax", "closure_mbr_np", "closure_np",
-    "DEFAULT_FANOUT", "RTreeForest", "build_forest", "query_host",
+    "ClosureResult", "closure_bitset_mm", "closure_jax", "closure_mbr_np",
+    "closure_np",
+    "DEFAULT_FANOUT", "DeviceForest", "RTreeForest", "build_forest",
+    "build_forest_device", "query_host",
     "query_host_collect", "query_jax_wavefront",
     "compact_labels", "same_partition", "scc_jax", "scc_np",
     "ThreeDReachIndex", "build_3dreach",

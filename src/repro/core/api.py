@@ -32,7 +32,31 @@ AnyIndex = Union[TwoDReachIndex, ThreeDReachIndex, GeoReachIndex]
 
 
 def build_index(graph: GeosocialGraph, method: str, **kw) -> AnyIndex:
+    """Build the offline index for ``method`` (one of ``METHODS``).
+
+    Keyword arguments are forwarded to the method's builder (``fanout``,
+    ``dedup``, ...).  ``backend`` selects the *build* pipeline and is a
+    2DReach-only option: ``backend="host"`` (default) builds in NumPy;
+    ``backend="device"`` runs the reachable-set closure and the forest
+    bulk-load on the accelerator and leaves the serving arrays device-
+    resident, so a subsequent ``QueryEngine`` / ``ShardedEngine`` (or a
+    ``DynamicIndex(engine="device"|"cluster")`` compaction swap) adopts
+    them without re-uploading.  Asking for ``backend="device"`` with a
+    method that has no device builder raises a ``ValueError`` naming the
+    method and the supported pairings — it never falls back silently.
+    """
     method = method.lower()
+    if method not in METHODS:
+        raise ValueError(
+            f"unknown method {method!r}; expected one of {METHODS}")
+    if not method.startswith("2dreach"):
+        backend = kw.pop("backend", "host")   # host build == the default
+        if backend != "host":
+            raise ValueError(
+                f"no {backend!r} build backend for method {method!r}: "
+                f"backend='device' is implemented for the 2DReach "
+                f"variants only (2dreach, 2dreach-comp, 2dreach-pointer);"
+                f" build {method!r} with backend='host' (the default)")
     if method == "2dreach":
         return build_2dreach(graph, variant="base", **kw)
     if method == "2dreach-comp":
@@ -45,6 +69,8 @@ def build_index(graph: GeosocialGraph, method: str, **kw) -> AnyIndex:
         return build_3dreach(graph, variant="3drev", **kw)
     if method == "georeach":
         return build_georeach(graph, **kw)
+    # unreachable while the if-chain covers METHODS — fail loudly if a
+    # new METHODS entry lands without a branch here
     raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
 
 

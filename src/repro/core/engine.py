@@ -79,6 +79,14 @@ def _popcount32_jnp(x: jax.Array) -> jax.Array:
 # Reusable upload pieces (single-device engine + cluster shards)
 # --------------------------------------------------------------------------
 
+# Build→serve handoff counters since import.  ``host_uploads`` counts
+# arenas built from host arrays (transpose + pyramid + upload);
+# ``device_adoptions`` counts arenas adopted zero-copy from a
+# ``build_forest_device`` handoff.  Benchmarks and tests assert that
+# serving a device-built index — including every DynamicIndex compaction
+# swap — bumps only the adoption counter.
+UPLOAD_COUNTERS: Dict[str, int] = {"host_uploads": 0, "device_adoptions": 0}
+
 class PointerSide:
     """Device-resident vertex→tree lookup side of a 2DReach index.
 
@@ -154,6 +162,7 @@ class TileArena:
     @classmethod
     def upload(cls, esoa: np.ndarray, off: np.ndarray,
                dim: int) -> "TileArena":
+        UPLOAD_COUNTERS["host_uploads"] += 1
         fine, coarse, nt = build_tile_pyramid(esoa, dim)
         return cls(
             entries=jnp.asarray(esoa),
@@ -162,6 +171,25 @@ class TileArena:
             entry_off=jnp.asarray(off, jnp.int32),
             n_tiles=nt,
         )
+
+    @classmethod
+    def for_forest(cls, forest, dim: int) -> "TileArena":
+        """Arena for a built forest — adopted zero-copy when the forest
+        carries a ``build_forest_device`` handoff (the arrays are
+        already device-resident in exactly this layout), uploaded from
+        the host arrays otherwise."""
+        dev = getattr(forest, "device", None)
+        if dev is not None:
+            UPLOAD_COUNTERS["device_adoptions"] += 1
+            return cls(
+                entries=dev.entries,
+                fine=dev.fine,
+                coarse=dev.coarse,
+                entry_off=dev.entry_off,
+                n_tiles=dev.n_tiles,
+            )
+        esoa, off = forest_soa(forest)        # cached transposition
+        return cls.upload(esoa, off, dim)
 
 
 def compact_candidates(mask: jax.Array, nt: int
@@ -230,14 +258,14 @@ class QueryEngine:
         self.variant = index.variant
         self.dim = index.forest.dim
 
-        # ---- one-time upload -------------------------------------------
-        esoa, off = forest_soa(index.forest)          # cached transposition
+        # ---- one-time upload (or zero-copy adoption) -------------------
         self._side = PointerSide(index)
-        self._arena = TileArena.upload(esoa, off, self.dim)
+        self._arena = TileArena.for_forest(index.forest, self.dim)
         self.n_tiles = self._arena.n_tiles
 
         self.stats: Dict[str, float] = {
             "uploads": 1, "batches": 0, "queries": 0,
+            "adopted": int(getattr(index.forest, "device", None) is not None),
             "tiles_scanned": 0, "tiles_grid": 0, "tiles_full_scan": 0,
         }
         # candidate-capacity high-water mark: K only ratchets up, so a
@@ -344,13 +372,20 @@ def _unsupported_msg(index, what: str) -> str:
 def engine_for(index, interpret: Optional[bool] = None,
                required: bool = False):
     """Memoised ``QueryEngine`` for a built 2DReach index (one upload per
-    index instance).  For index types the device engine does not serve,
-    returns ``None`` so callers can fall back to the host path — or, with
-    ``required=True``, raises a ``ValueError`` naming the unsupported
-    index/method (instead of the caller tripping an ``AttributeError``
-    deep inside the engine).  An explicit ``interpret`` that disagrees
-    with the memoised engine's mode rebuilds rather than silently
-    returning the wrong kernel mode."""
+    index instance).
+
+    Supported pairings: any :class:`TwoDReachIndex` variant (``base`` /
+    ``comp`` / ``pointer``), from either build backend —
+    ``build_2dreach(backend="host")`` uploads its arrays here once;
+    ``backend="device"`` indexes are *adopted* zero-copy (the build left
+    the serving arrays on device; see ``UPLOAD_COUNTERS``).  For index
+    types the device engine does not serve (3DReach, GeoReach, anything
+    without a 2D forest), returns ``None`` so callers can fall back to
+    the host path — or, with ``required=True``, raises a ``ValueError``
+    naming the unsupported index/method (instead of the caller tripping
+    an ``AttributeError`` deep inside the engine).  An explicit
+    ``interpret`` that disagrees with the memoised engine's mode
+    rebuilds rather than silently returning the wrong kernel mode."""
     if not isinstance(index, TwoDReachIndex):
         if required:
             raise ValueError(_unsupported_msg(index, "device QueryEngine"))

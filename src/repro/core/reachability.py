@@ -19,12 +19,22 @@ exclude spatial sinks from the decomposition entirely.
 
 Three implementations:
 
-* ``closure_np``       — host build path (default), per-level scatter-OR.
+* ``closure_np``       — host build path, per-level segment-OR (sorted
+                         contributions + ``np.bitwise_or.reduceat``; the
+                         legacy unbuffered ``np.bitwise_or.at`` scatter
+                         stays selectable via ``segment_or=False`` for
+                         benchmarking).
 * ``closure_jax``      — jit fixpoint on a boolean (rows, p) matrix
                          (``.at[].max`` scatter); small-graph device path.
-* ``closure_bitset_mm``— packed fixpoint R <- own | A.R using the
-                         ``bitset_mm`` Pallas kernel (OR-AND matmul over
-                         uint32 words tiled in VMEM); the TPU build path.
+* ``closure_bitset_mm``— the ``backend="device"`` build path: a
+                         level-scheduled packed fixpoint R <- own | A.R
+                         where each condensation level runs one OR-AND
+                         matmul over its *frontier only* — the level's
+                         source rows against its compacted unique
+                         destinations — so converged rows stop paying
+                         matmul work.  The matmul is the ``bitset_mm``
+                         Pallas kernel on TPU and an XLA gather +
+                         halving-OR reduction elsewhere.
 
 plus ``closure_mbr_np`` which tracks only per-component reachability MBRs
 (min/max scatter) — the GeoReach baseline's R-MBR tier rides on it.
@@ -185,12 +195,98 @@ def _own_columns(
     return indptr, col_all.astype(np.int32)
 
 
+def _segment_or_rows(bits: np.ndarray, targets: np.ndarray,
+                     sources: np.ndarray, presorted: bool = False) -> None:
+    """``bits[targets[i]] |= bits[sources[i]]`` without an unbuffered
+    scatter: contributions group by target row, OR-reduce per run with
+    ``np.bitwise_or.reduceat``, and write once per unique row.
+
+    ``presorted=True`` skips the grouping sort — the closure's per-level
+    edge schedule is already source-sorted."""
+    if len(targets) == 0:
+        return
+    if not presorted:
+        order = np.argsort(targets, kind="stable")
+        targets, sources = targets[order], sources[order]
+    starts = np.nonzero(np.r_[True, targets[1:] != targets[:-1]])[0]
+    lens = np.diff(np.r_[starts, len(targets)])
+    single = lens == 1
+    ss = starts[single]
+    if len(ss):
+        # a length-1 segment's OR degenerates to one buffered row OR
+        bits[targets[ss]] |= bits[sources[ss]]
+    if not single.all():
+        multi = np.repeat(~single, lens)
+        g = bits[sources[multi]]
+        tm = targets[multi]
+        st = np.nonzero(np.r_[True, tm[1:] != tm[:-1]])[0]
+        bits[tm[st]] |= np.bitwise_or.reduceat(g, st, axis=0)
+
+
+def _segment_or_bits(bits: np.ndarray, rows: np.ndarray,
+                     cols: np.ndarray, presorted: bool = False) -> None:
+    """``bits[rows] |= (1 << cols)`` via the same group + reduceat
+    segment-OR (duplicate (row, word) destinations collapse before the
+    single indexed write).  ``presorted`` asserts (row, col) pairs
+    already arrive in lexicographic order."""
+    if len(rows) == 0:
+        return
+    W = bits.shape[1]
+    cols = cols.astype(np.int64)
+    key = rows.astype(np.int64) * W + cols // 32
+    vals = np.uint32(1) << (cols % 32).astype(np.uint32)
+    if not presorted:
+        order = np.argsort(key, kind="stable")
+        key, vals = key[order], vals[order]
+    starts = np.nonzero(np.r_[True, key[1:] != key[:-1]])[0]
+    bits.reshape(-1)[key[starts]] |= np.bitwise_or.reduceat(vals, starts)
+
+
+def _closure_prologue(
+    cond: Condensation,
+    n: int,
+    spatial_vertex: np.ndarray,
+    extra_vertex_comp: Optional[Tuple[np.ndarray, np.ndarray]],
+):
+    """Shared host prologue of every closure implementation: column
+    mapping, own-column CSR, and the interior-row numbering (components
+    with at least one DAG out-edge get a packed bitset row)."""
+    p = len(spatial_vertex)
+    d = cond.n_comps
+    col_of_vertex = np.full(n, -1, dtype=np.int64)
+    col_of_vertex[spatial_vertex] = np.arange(p, dtype=np.int64)
+    own_indptr, own_cols = _own_columns(
+        cond, n, spatial_vertex, col_of_vertex, extra_vertex_comp
+    )
+    interior = np.zeros(d, dtype=bool)
+    if cond.dag_edges.size:
+        interior[cond.dag_edges[:, 0]] = True
+    interior_ids = np.nonzero(interior)[0]
+    interior_row = np.full(d, -1, dtype=np.int32)
+    interior_row[interior_ids] = np.arange(len(interior_ids), dtype=np.int32)
+    return p, col_of_vertex, own_indptr, own_cols, interior_row, interior_ids
+
+
+def _seed_pairs(own_indptr: np.ndarray, own_cols: np.ndarray,
+                interior_row: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(rows, cols) of every interior component's own columns — the
+    fixpoint seed."""
+    d = len(interior_row)
+    if not own_cols.size:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    own_comp = np.repeat(np.arange(d, dtype=np.int64), np.diff(own_indptr))
+    m0 = interior_row[own_comp] >= 0
+    return (interior_row[own_comp[m0]].astype(np.int64),
+            own_cols[m0].astype(np.int64))
+
+
 def closure_np(
     cond: Condensation,
     n: int,
     spatial_vertex: np.ndarray,
     extra_vertex_comp: Optional[Tuple[np.ndarray, np.ndarray]] = None,
     chunk_edges: int = 1 << 22,
+    segment_or: bool = True,
 ) -> ClosureResult:
     """Host reverse-topological closure (paper Alg. 1 lines 6-9).
 
@@ -200,36 +296,26 @@ def closure_np(
     spatial_vertex:  (p,) vertex ids that define bitset columns.
     extra_vertex_comp: compressed-variant extra own-members, see
                      ``_own_columns``.
+    segment_or:      per-level merge strategy.  ``True`` (default) sorts
+                     each level's contributions and OR-reduces runs with
+                     ``np.bitwise_or.reduceat`` — one buffered write per
+                     unique target instead of ``np.bitwise_or.at``'s
+                     element-at-a-time unbuffered scatter.  ``False``
+                     keeps the legacy scatter (identical result; kept
+                     for the before/after in ``benchmarks/perf_build``).
     """
-    p = len(spatial_vertex)
-    d = cond.n_comps
-    col_of_vertex = np.full(n, -1, dtype=np.int64)
-    col_of_vertex[spatial_vertex] = np.arange(p, dtype=np.int64)
-
-    own_indptr, own_cols = _own_columns(
-        cond, n, spatial_vertex, col_of_vertex, extra_vertex_comp
-    )
-
-    # interior = has at least one DAG out-edge
-    interior = np.zeros(d, dtype=bool)
-    if cond.dag_edges.size:
-        interior[cond.dag_edges[:, 0]] = True
-    interior_ids = np.nonzero(interior)[0]
-    interior_row = np.full(d, -1, dtype=np.int32)
-    interior_row[interior_ids] = np.arange(len(interior_ids), dtype=np.int32)
-
+    p, col_of_vertex, own_indptr, own_cols, interior_row, interior_ids = (
+        _closure_prologue(cond, n, spatial_vertex, extra_vertex_comp))
     W = n_words(p)
     bits = np.zeros((len(interior_ids), W), dtype=np.uint32)
 
     # seed interior rows with own columns (vectorised over all comps)
-    if own_cols.size:
-        own_comp = np.repeat(
-            np.arange(d, dtype=np.int64), np.diff(own_indptr)
-        )
-        m0 = interior_row[own_comp] >= 0
-        if m0.any():
-            rr = interior_row[own_comp[m0]]
-            cc = own_cols[m0].astype(np.int64)
+    rr, cc = _seed_pairs(own_indptr, own_cols, interior_row)
+    if len(rr):
+        if segment_or:
+            # own CSR is (comp, col)-sorted, so the keys arrive in order
+            _segment_or_bits(bits, rr, cc, presorted=True)
+        else:
             np.bitwise_or.at(
                 bits, (rr, cc // 32), np.uint32(1) << (cc % 32).astype(np.uint32)
             )
@@ -238,10 +324,11 @@ def closure_np(
         edges = cond.edges_by_level_desc()
         src_lv = cond.level[edges[:, 0]]
         # process one level at a time (descending); within a level the
-        # scatter-OR is order-independent because no edge joins two comps
-        # of the same level
+        # merge is order-independent because no edge joins two comps of
+        # the same level
         boundaries = np.nonzero(np.diff(-src_lv))[0] + 1
         seg_starts = np.concatenate([[0], boundaries, [len(edges)]])
+        interior = interior_row >= 0
         leaf = ~interior
         own_cnt = np.diff(own_indptr)
         for s, e in zip(seg_starts[:-1], seg_starts[1:]):
@@ -254,7 +341,11 @@ def closure_np(
                 di = interior_row[dst]
                 m = di >= 0
                 if m.any():
-                    np.bitwise_or.at(bits, (rs[m],), bits[di[m]])
+                    if segment_or:
+                        # the level schedule is source-sorted already
+                        _segment_or_rows(bits, rs[m], di[m], presorted=True)
+                    else:
+                        np.bitwise_or.at(bits, (rs[m],), bits[di[m]])
                 # contribution of leaf children: OR their own columns
                 lm = leaf[dst] & (own_cnt[dst] > 0)
                 if lm.any():
@@ -264,11 +355,14 @@ def closure_np(
                     starts = own_indptr[ld]
                     slot = np.repeat(starts, cnt) + _ragged_arange(cnt)
                     cc = own_cols[slot]
-                    np.bitwise_or.at(
-                        bits,
-                        (rep_row, cc // 32),
-                        np.uint32(1) << (cc % 32).astype(np.uint32),
-                    )
+                    if segment_or:
+                        _segment_or_bits(bits, rep_row, cc)
+                    else:
+                        np.bitwise_or.at(
+                            bits,
+                            (rep_row, cc // 32),
+                            np.uint32(1) << (cc % 32).astype(np.uint32),
+                        )
 
     return ClosureResult(
         p=p,
@@ -364,3 +458,200 @@ def _closure_jax_impl(edges, bits, n_sweeps):
     for _ in range(int(n_sweeps)):
         bits = _closure_sweep(bits, src, dst)
     return bits
+
+
+# --------------------------------------------------------------------------
+# Device (packed) closure — the backend="device" build path
+# --------------------------------------------------------------------------
+
+def _leaf_row_scatter(
+    rows: jax.Array, local: np.ndarray, dst: np.ndarray,
+    own_indptr: np.ndarray, own_cols: np.ndarray,
+) -> jax.Array:
+    """OR the own columns of leaf components ``dst`` into packed device
+    ``rows`` at row indices ``local``.  Distinct (row, column) pairs map
+    to distinct bits, so a scatter-add is an OR."""
+    cnt = np.diff(own_indptr)[dst]
+    rep = np.repeat(local, cnt)
+    slot = np.repeat(own_indptr[dst], cnt) + _ragged_arange(cnt)
+    cc = own_cols[slot].astype(np.int64)
+    return rows.at[
+        jnp.asarray(rep, jnp.int32), jnp.asarray(cc // 32, jnp.int32)
+    ].add(jnp.asarray(
+        np.uint32(1) << (cc % 32).astype(np.uint32)))
+
+
+def closure_bitset_mm(
+    cond: Condensation,
+    n: int,
+    spatial_vertex: np.ndarray,
+    extra_vertex_comp: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+    *,
+    kernel: Optional[str] = None,
+    interpret: Optional[bool] = None,
+    chunk_edges: int = 1 << 22,
+) -> ClosureResult:
+    """Device closure: level-scheduled packed fixpoint R <- own | A.R.
+
+    Produces a :class:`ClosureResult` with *identical* bits to
+    ``closure_np`` (set union is order-independent), but the expensive
+    per-level merges run on the accelerator against the packed uint32
+    bitset matrix.  Scheduling is the frontier-compacted form of the
+    reverse-topological sweep: level L touches only its source rows and
+    the compacted block of their unique destinations, so rows that
+    converged at deeper levels pay no further matmul work.
+
+    kernel:    ``"pallas"`` — per level, pack the frontier adjacency and
+               run the ``bitset_mm`` OR-AND matmul kernel (the TPU
+               path); ``"xla"`` — per level, gather destination rows and
+               OR-reduce runs by halving (the fast path on CPU hosts,
+               where the Pallas interpreter would dominate);
+               ``None`` picks per backend.
+    interpret: Pallas interpret mode for ``kernel="pallas"``.
+    """
+    from ..kernels.bitset_mm.ops import bitset_mm_dev
+    from ..kernels.forest_build.ops import default_build_kernel
+
+    if kernel is None:
+        kernel = default_build_kernel()
+    if kernel not in ("pallas", "xla"):
+        raise ValueError(
+            f"unknown closure kernel {kernel!r}; expected pallas|xla")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    p, col_of_vertex, own_indptr, own_cols, interior_row, interior_ids = (
+        _closure_prologue(cond, n, spatial_vertex, extra_vertex_comp))
+    W = n_words(p)
+    n_int = len(interior_ids)
+    own_cnt = np.diff(own_indptr)
+
+    # seed: every interior row starts as its own packed columns
+    R = jnp.zeros((n_int, max(W, 1)), jnp.uint32)
+    rr, cc = _seed_pairs(own_indptr, own_cols, interior_row)
+    if len(rr):
+        R = R.at[
+            jnp.asarray(rr, jnp.int32), jnp.asarray(cc // 32, jnp.int32)
+        ].add(jnp.asarray(np.uint32(1) << (cc % 32).astype(np.uint32)))
+
+    if cond.dag_edges.size:
+        edges = cond.edges_by_level_desc()
+        src_lv = cond.level[edges[:, 0]]
+        boundaries = np.nonzero(np.diff(-src_lv))[0] + 1
+        seg_starts = np.concatenate([[0], boundaries, [len(edges)]])
+        for s, e in zip(seg_starts[:-1], seg_starts[1:]):
+            # chunk wide levels like closure_np does: the dense frontier
+            # matrix is (chunk, W) words, never (level_width, W).  A
+            # source run split across chunks just ORs into its row twice
+            for cs in range(s, e, chunk_edges):
+                ce = min(cs + chunk_edges, e)
+                src = edges[cs:ce, 0].astype(np.int64)
+                dst = edges[cs:ce, 1].astype(np.int64)
+                if kernel == "pallas":
+                    R = _level_step_pallas(
+                        R, src, dst, interior_row, own_indptr, own_cols,
+                        own_cnt, interpret, bitset_mm_dev)
+                else:
+                    R = _level_step_xla(
+                        R, src, dst, interior_row, own_indptr, own_cols,
+                        own_cnt)
+
+    return ClosureResult(
+        p=p,
+        spatial_vertex=np.asarray(spatial_vertex, dtype=np.int32),
+        col_of_vertex=col_of_vertex,
+        interior_row=interior_row,
+        bits=np.asarray(R[:, :W]).reshape(n_int, W),
+        own_indptr=own_indptr,
+        own_cols=own_cols,
+    )
+
+
+def _level_step_xla(
+    R: jax.Array, src: np.ndarray, dst: np.ndarray,
+    interior_row: np.ndarray, own_indptr: np.ndarray,
+    own_cols: np.ndarray, own_cnt: np.ndarray,
+) -> jax.Array:
+    """One level as gather + bucketed halving-OR.
+
+    Contributions (one packed row per DAG edge of the level — an
+    interior destination's current row, or a leaf destination's own
+    columns) land in a dense frontier matrix C; runs of equal source
+    (contiguous: the level schedule preserves the source-sorted edge
+    order) OR-reduce through power-of-two bucketed halving, then one
+    scatter updates the level's source rows."""
+    E = len(src)
+    Wc = R.shape[1]
+    C = jnp.zeros((E + 1, Wc), jnp.uint32)    # +1: zero pad row
+    di = interior_row[dst]
+    im = di >= 0
+    if im.any():
+        C = C.at[jnp.asarray(np.nonzero(im)[0], jnp.int32)].set(
+            R[jnp.asarray(di[im], jnp.int32)])
+    lm = ~im & (own_cnt[dst] > 0)
+    if lm.any():
+        C = _leaf_row_scatter(
+            C, np.nonzero(lm)[0], dst[lm], own_indptr, own_cols)
+
+    run_start = np.nonzero(np.r_[True, src[1:] != src[:-1]])[0]
+    usrc = src[run_start]
+    run_len = np.diff(np.r_[run_start, E])
+    lb = np.ones(len(usrc), dtype=np.int64)
+    big = run_len > 1
+    lb[big] = 1 << np.ceil(np.log2(run_len[big])).astype(np.int64)
+    for L in np.unique(lb):
+        rid = np.nonzero(lb == L)[0]
+        k = np.arange(L)
+        gidx = run_start[rid][:, None] + k[None, :]
+        gi = np.where(k[None, :] < run_len[rid][:, None], gidx, E)
+        M = C[jnp.asarray(gi, jnp.int32)]      # (Rb, L, Wc)
+        Lh = int(L)
+        while Lh > 1:
+            Lh //= 2
+            M = M[:, :Lh] | M[:, Lh:2 * Lh]
+        tr = jnp.asarray(interior_row[usrc[rid]], jnp.int32)
+        R = R.at[tr].set(R[tr] | M[:, 0])
+    return R
+
+
+def _level_step_pallas(
+    R: jax.Array, src: np.ndarray, dst: np.ndarray,
+    interior_row: np.ndarray, own_indptr: np.ndarray,
+    own_cols: np.ndarray, own_cnt: np.ndarray,
+    interpret: bool, bitset_mm_dev,
+) -> jax.Array:
+    """One level as a frontier-compacted OR-AND matmul.
+
+    The level's unique destinations become the contraction axis: their
+    packed rows (gathered for interior comps, materialised from own
+    columns for leaves) stack into R_L, the level's edges scatter into a
+    packed frontier adjacency A_L, and the ``bitset_mm`` kernel computes
+    all of the level's merges in one call."""
+    udst, dst_inv = np.unique(dst, return_inverse=True)
+    m = len(udst)
+    Wm = (m + 31) // 32
+    Wc = R.shape[1]
+
+    R_L = jnp.zeros((m, Wc), jnp.uint32)
+    di = interior_row[udst]
+    im = di >= 0
+    if im.any():
+        R_L = R_L.at[jnp.asarray(np.nonzero(im)[0], jnp.int32)].set(
+            R[jnp.asarray(di[im], jnp.int32)])
+    lm = ~im & (own_cnt[udst] > 0)
+    if lm.any():
+        R_L = _leaf_row_scatter(
+            R_L, np.nonzero(lm)[0], udst[lm], own_indptr, own_cols)
+
+    run_start = np.nonzero(np.r_[True, src[1:] != src[:-1]])[0]
+    usrc = src[run_start]
+    f = len(usrc)
+    src_local = np.searchsorted(usrc, src)
+    A = jnp.zeros((f, Wm), jnp.uint32).at[
+        jnp.asarray(src_local, jnp.int32),
+        jnp.asarray(dst_inv // 32, jnp.int32),
+    ].add(jnp.asarray(np.uint32(1) << (dst_inv % 32).astype(np.uint32)))
+
+    out = bitset_mm_dev(A, R_L, interpret=interpret)
+    tr = jnp.asarray(interior_row[usrc], jnp.int32)
+    return R.at[tr].set(R[tr] | out)

@@ -39,6 +39,7 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import enable_x64
 
 
 DEFAULT_FANOUT = 16
@@ -109,6 +110,9 @@ class RTreeForest:
     entry_off: np.ndarray          # (T+1,) int64
     level_mbr: List[np.ndarray]    # depth arrays, each (count_l, 2*dim)
     tree_off: List[np.ndarray]     # depth arrays, each (T+1,) int64
+    # device-resident serving arrays (set by ``build_forest_device``);
+    # engines adopt these instead of re-uploading the host arrays
+    device: Optional["DeviceForest"] = None
 
     @property
     def n_trees(self) -> int:
@@ -249,6 +253,279 @@ def _ragged_arange(counts: np.ndarray) -> np.ndarray:
         return np.zeros(0, dtype=np.int64)
     starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
     return np.arange(total, dtype=np.int64) - np.repeat(starts, counts)
+
+
+# --------------------------------------------------------------------------
+# Device bulk load (backend="device" build pipeline)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeviceForest:
+    """Device-resident serving arrays produced by ``build_forest_device``.
+
+    Exactly the arrays :class:`~repro.core.engine.TileArena` consumes —
+    SoA entry planes plus the fine/coarse tile-MBR pyramid — already on
+    device, so engines *adopt* them instead of re-transposing and
+    re-uploading the host forest (the zero-copy handoff).
+    """
+
+    entries: jax.Array     # (2*dim, Pp) float32 SoA planes, inert padding
+    fine: jax.Array        # (2*dim, NTp) float32 leaf-tile MBRs
+    coarse: jax.Array      # (2*dim, NCp) float32
+    entry_off: jax.Array   # (T+1,) int32
+    n_tiles: int
+
+
+def _part1by1_jnp(x: jax.Array) -> jax.Array:
+    x = x & np.uint64(0xFFFF)
+    x = (x | (x << np.uint64(8))) & np.uint64(0x00FF00FF)
+    x = (x | (x << np.uint64(4))) & np.uint64(0x0F0F0F0F)
+    x = (x | (x << np.uint64(2))) & np.uint64(0x33333333)
+    x = (x | (x << np.uint64(1))) & np.uint64(0x55555555)
+    return x
+
+
+def _part1by2_jnp(x: jax.Array) -> jax.Array:
+    x = x & np.uint64(0x3FF)
+    x = (x | (x << np.uint64(16))) & np.uint64(0x030000FF)
+    x = (x | (x << np.uint64(8))) & np.uint64(0x0300F00F)
+    x = (x | (x << np.uint64(4))) & np.uint64(0x030C30C3)
+    x = (x | (x << np.uint64(2))) & np.uint64(0x09249249)
+    return x
+
+
+def _morton_code_jnp(centers: jax.Array, lo: jax.Array,
+                     hi: jax.Array) -> jax.Array:
+    """Device mirror of ``morton_code`` — identical float64 math, so the
+    codes (and hence the bulk-load order) are bit-identical to the host
+    build.  Must run under ``enable_x64``."""
+    dim = centers.shape[1]
+    span = jnp.where(hi > lo, hi - lo, 1.0)
+    unit = jnp.clip((centers.astype(jnp.float64) - lo) / span, 0.0, 1.0)
+    if dim == 2:
+        q = (unit * 0xFFFF).astype(jnp.uint64)
+        return _part1by1_jnp(q[:, 0]) | (_part1by1_jnp(q[:, 1]) << np.uint64(1))
+    elif dim == 3:
+        q = (unit * 0x3FF).astype(jnp.uint64)
+        return (
+            _part1by2_jnp(q[:, 0])
+            | (_part1by2_jnp(q[:, 1]) << np.uint64(1))
+            | (_part1by2_jnp(q[:, 2]) << np.uint64(2))
+        )
+    raise ValueError(f"dim {dim} unsupported")
+
+
+@jax.jit
+def _morton_key_jit(soa: jax.Array, lo: jax.Array, hi: jax.Array
+                    ) -> jax.Array:
+    """(P,) uint64 sort keys ``morton_code << 32 | entry_index``, fused
+    into one pass over the entry planes.  Runs under ``enable_x64``."""
+    dim = soa.shape[0] // 2
+    centers = ((soa[:dim] + soa[dim:]) * 0.5).T       # (P, dim) f32
+    code = _morton_code_jnp(centers, lo, hi)
+    P = soa.shape[1]
+    return (code << np.uint64(32)) | jnp.arange(P, dtype=jnp.uint64)
+
+
+@partial(jax.jit, static_argnames=("L",), donate_argnums=(3,))
+def _bucket_sort_step(key, starts, cnts, order, *, L: int):
+    P = key.shape[0]
+    idx = starts[:, None] + jnp.arange(L, dtype=jnp.int32)[None, :]
+    mask = idx < (starts + cnts)[:, None]
+    km = jnp.where(
+        mask,
+        key[jnp.clip(idx, 0, max(P - 1, 0))],
+        np.uint64(0xFFFFFFFFFFFFFFFF),
+    )
+    sm = jnp.sort(km, axis=1)
+    perm = (sm & np.uint64(0xFFFFFFFF)).astype(jnp.int32)
+    return order.at[jnp.where(mask, idx, P)].set(perm, mode="drop")
+
+
+def _bucketed_tree_sort(
+    key: jax.Array,         # (P,) uint64 keys: code << 32 | entry index
+    entry_off: np.ndarray,  # (T+1,) int64 per-tree slices (generation order)
+    counts: np.ndarray,     # (T,) int64
+) -> jax.Array:
+    """(P,) int32 device permutation = ``np.lexsort((code, tree))``.
+
+    XLA's fast sort path is values-only (payload sorts fall back to a
+    comparator network an order of magnitude slower), so the permutation
+    is packed *into* the key and the per-tree segments become rows of
+    power-of-two-bucketed matrices sorted along the lanes.  Tree
+    separation comes from the rows (no tree bits in the key), ties
+    resolve by entry index (exactly ``np.lexsort`` stability), and
+    padding keys of all-ones sort to the end of every row.  Each bucket
+    runs as one fused jit with row counts padded to powers of two, so
+    repeated builds (compaction swaps) reuse a handful of traces.
+    Must run under ``enable_x64``.
+    """
+    P = int(counts.sum())
+    order = jnp.zeros(P, dtype=jnp.int32)
+    lb = np.ones(len(counts), dtype=np.int64)
+    pos = counts > 0
+    lb[pos] = 1 << np.ceil(np.log2(counts[pos])).astype(np.int64)
+    for L in np.unique(lb[pos]):
+        trees = np.nonzero(pos & (lb == L))[0]
+        rb = 1 << int(np.ceil(np.log2(len(trees)))) if len(trees) else 1
+        starts = np.zeros(rb, dtype=np.int32)
+        cnts = np.zeros(rb, dtype=np.int32)
+        starts[: len(trees)] = entry_off[trees]
+        cnts[: len(trees)] = counts[trees]
+        order = _bucket_sort_step(
+            key, jnp.asarray(starts), jnp.asarray(cnts), order, L=int(L))
+    return order
+
+
+def build_forest_device(
+    boxes: np.ndarray,
+    ids: np.ndarray,
+    tree_of_entry: np.ndarray,
+    n_trees: int,
+    fanout: int = DEFAULT_FANOUT,
+    extent: Optional[np.ndarray] = None,
+    *,
+    kernel: Optional[str] = None,
+    interpret: Optional[bool] = None,
+) -> RTreeForest:
+    """Bulk-load a forest on the accelerator (same contract — and same
+    resulting arrays, bit for bit — as :func:`build_forest`).
+
+    The pipeline stays device-resident end to end: Morton encode (jnp,
+    float64 math identical to host), one bucketed ``(tree, code)``
+    values-only key sort, then the segmented-MBR reduction of
+    :mod:`repro.kernels.forest_build` builds every R-tree node level and
+    the query engines' fine/coarse tile pyramid.  The returned forest
+    carries host mirrors of every array (so ``query_host`` and
+    checkpointing work unchanged) plus a :class:`DeviceForest` handoff
+    (``forest.device``) that engines adopt without re-uploading.
+
+    ``tree_of_entry`` must be non-decreasing (entries generated per tree
+    in tree order — what ``build_2dreach`` produces); the device sort
+    exploits that contiguity for its segmented bucketing.
+
+    kernel:    ``"pallas"`` (the TPU reduction kernel) or ``"xla"`` (jnp
+               reduction, the fast path on CPU hosts); ``None`` picks
+               per backend.
+    interpret: Pallas interpret mode for ``kernel="pallas"``; ``None``
+               picks real kernels on TPU and interpret elsewhere.
+    """
+    from ..kernels.forest_build import (
+        default_build_kernel,
+        level_mbr,
+        np_inert_plane,
+        tile_pyramid_device,
+    )
+    from ..kernels.range_query.descent import COARSE_GROUP, TPT
+    from ..kernels.range_query.kernel import TP
+
+    if kernel is None:
+        kernel = default_build_kernel()
+    if kernel not in ("pallas", "xla"):
+        raise ValueError(
+            f"unknown forest-build kernel {kernel!r}; expected pallas|xla")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    boxes = np.asarray(boxes, dtype=np.float32)
+    P, two_dim = boxes.shape
+    dim = two_dim // 2
+    ids = np.asarray(ids, dtype=np.int32)
+    tree_of_entry = np.asarray(tree_of_entry, dtype=np.int64)
+    if P and (np.diff(tree_of_entry) < 0).any():
+        raise ValueError(
+            "build_forest_device requires tree-contiguous input entries "
+            "(tree_of_entry non-decreasing)")
+
+    if extent is None:
+        if P:
+            extent = np.concatenate(
+                [boxes[:, :dim].min(0), boxes[:, dim:].max(0)]
+            )
+        else:
+            extent = np.zeros(2 * dim, dtype=np.float32)
+    extent = np.asarray(extent)
+
+    counts = np.bincount(tree_of_entry, minlength=n_trees).astype(np.int64)
+    entry_off = np.zeros(n_trees + 1, dtype=np.int64)
+    np.cumsum(counts, out=entry_off[1:])
+
+    # ---- device sort: morton encode + bucketed (tree, code) key sort ----
+    Pp = max(TP, -(-P // TP) * TP)
+    soa_ext = jnp.concatenate([
+        jnp.asarray(np.ascontiguousarray(boxes.T)),
+        jnp.asarray(np_inert_plane(dim, 1)),   # padding gather target
+    ], axis=1)                                              # (2*dim, P+1)
+    if P:
+        with enable_x64():
+            key = _morton_key_jit(
+                soa_ext[:, :P],
+                jnp.asarray(extent[:dim], jnp.float64),
+                jnp.asarray(extent[dim:], jnp.float64),
+            )
+            order = _bucketed_tree_sort(key, entry_off, counts)
+        # one gather builds the permuted AND padded serving plane
+        order_pad = jnp.concatenate([
+            order, jnp.full((Pp - P,), P, jnp.int32)])
+        plane = soa_ext[:, order_pad]                       # (2*dim, Pp)
+        ids_host = np.asarray(jnp.asarray(ids)[order])
+    else:
+        plane = jnp.asarray(np_inert_plane(dim, Pp))
+        ids_host = ids
+    boxes_host = np.ascontiguousarray(np.asarray(plane[:, :P]).T)
+
+    # ---- level loop: fused segmented-MBR reduction per R-tree level -----
+    level_mbrs: List[np.ndarray] = []
+    tree_off: List[np.ndarray] = []
+    cur_soa = plane          # level 0 gathers only indices < P
+    cur_counts = counts
+    while True:
+        node_counts = -(-cur_counts // fanout)  # ceil div; 0 stays 0
+        off = np.zeros(n_trees + 1, dtype=np.int64)
+        np.cumsum(node_counts, out=off[1:])
+        n_nodes = int(off[-1])
+        if n_nodes:
+            child_off = np.zeros(n_trees + 1, dtype=np.int64)
+            np.cumsum(cur_counts, out=child_off[1:])
+            node_tree = np.repeat(np.arange(n_trees), node_counts)
+            local = _ragged_arange(node_counts)
+            starts = child_off[node_tree] + local * fanout
+            ends = np.minimum(starts + fanout, child_off[node_tree + 1])
+            mbr_soa = level_mbr(cur_soa, starts, ends, fanout, dim,
+                                kernel=kernel, interpret=interpret)
+        else:
+            mbr_soa = jnp.zeros((2 * dim, 0), jnp.float32)
+        level_mbrs.append(
+            np.ascontiguousarray(np.asarray(mbr_soa[:, :n_nodes]).T))
+        tree_off.append(off)
+        if np.all(node_counts <= 1):
+            break
+        cur_soa = mbr_soa   # padded tail rows are inert, never addressed
+        cur_counts = node_counts
+
+    # ---- device serving arrays (the zero-copy engine handoff) ----------
+    fine, coarse, nt = tile_pyramid_device(
+        plane, dim, tp=TP, tpt=TPT, group=COARSE_GROUP,
+        kernel=kernel, interpret=interpret,
+    )
+
+    forest = RTreeForest(
+        dim=dim,
+        fanout=fanout,
+        entries=boxes_host,
+        entry_ids=ids_host,
+        entry_off=entry_off,
+        level_mbr=level_mbrs,
+        tree_off=tree_off,
+        device=DeviceForest(
+            entries=plane,
+            fine=fine,
+            coarse=coarse,
+            entry_off=jnp.asarray(entry_off, jnp.int32),
+            n_tiles=nt,
+        ),
+    )
+    return forest
 
 
 def intersects(boxes: np.ndarray, rect: np.ndarray, dim: int) -> np.ndarray:

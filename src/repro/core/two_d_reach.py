@@ -38,13 +38,22 @@ from .graph import GeosocialGraph
 from .reachability import (
     ClosureResult,
     _ragged_arange,
+    closure_bitset_mm,
     closure_np,
     nonzero_cols,
     popcount32 as _popcount32,
     unpack_rows,
 )
-from .rtree import DEFAULT_FANOUT, RTreeForest, build_forest, query_host
+from .rtree import (
+    DEFAULT_FANOUT,
+    RTreeForest,
+    build_forest,
+    build_forest_device,
+    query_host,
+)
 from .scc import scc_np
+
+BUILD_BACKENDS = ("host", "device")
 
 
 # --------------------------------------------------------------------------
@@ -105,6 +114,7 @@ class TwoDReachIndex:
     bitrank: Optional[BitRank]      # pointer variant lookup
     tree_ptrs: Optional[np.ndarray]  # compacted (n_with_tree,) int32
     stats: Dict[str, float]
+    backend: str = "host"           # build backend that produced this index
 
     # -- sizes (Table 4 decomposition) ------------------------------------
     def nbytes_rtree(self) -> int:
@@ -166,10 +176,34 @@ def build_2dreach(
     variant: str = "comp",
     fanout: int = DEFAULT_FANOUT,
     dedup: str = "paper",
+    backend: str = "host",
+    device_kernel: Optional[str] = None,
+    interpret: Optional[bool] = None,
 ) -> TwoDReachIndex:
-    """Construct the 2DReach index (paper Alg. 1 + §4.1 compression)."""
+    """Construct the 2DReach index (paper Alg. 1 + §4.1 compression).
+
+    backend:       ``"host"`` builds everything in NumPy (the paper's
+                   offline setting).  ``"device"`` runs the two
+                   expensive stages on the accelerator — the
+                   reachable-set closure as a level-scheduled packed
+                   ``bitset_mm`` fixpoint (``closure_bitset_mm``) and
+                   the forest bulk-load as a device sort + segmented-MBR
+                   reduction (``build_forest_device``) — and attaches
+                   the device-resident serving arrays to the forest so
+                   ``QueryEngine`` / ``ShardedEngine`` adopt them
+                   without re-uploading.  Both backends produce
+                   identical indexes (same arrays, bit for bit).
+    device_kernel: ``"pallas"`` | ``"xla"`` | ``None`` (auto: Pallas on
+                   TPU, XLA elsewhere); ignored for ``backend="host"``.
+    interpret:     Pallas interpret mode for ``device_kernel="pallas"``.
+    """
     assert variant in ("base", "comp", "pointer")
     assert dedup in ("paper", "global", "none")
+    if backend not in BUILD_BACKENDS:
+        raise ValueError(
+            f"unknown build backend {backend!r}; expected one of "
+            f"{BUILD_BACKENDS} (backend='device' runs the closure and "
+            f"forest bulk-load on the accelerator)")
     t_start = time.perf_counter()
     n = graph.n_nodes
     stats: Dict[str, float] = {}
@@ -203,32 +237,40 @@ def build_2dreach(
             src_c = cond.comp[e[m, 0]]
             ok = src_c >= 0
             extra = (e[m, 1][ok], src_c[ok])
-    clo = closure_np(cond, n, spatial_ids, extra_vertex_comp=extra)
+    if backend == "device":
+        clo = closure_bitset_mm(cond, n, spatial_ids,
+                                extra_vertex_comp=extra,
+                                kernel=device_kernel, interpret=interpret)
+    else:
+        clo = closure_np(cond, n, spatial_ids, extra_vertex_comp=extra)
     stats["t_closure"] = time.perf_counter() - t0
 
     # ---- tree assignment (+ sharing) --------------------------------------
     t0 = time.perf_counter()
     d = cond.n_comps
-    comp_tree, tree_cols, n_shared = _assign_trees(
+    comp_tree, tree_indptr, cols_flat, n_shared = _assign_trees(
         cond, clo, variant=variant, dedup=dedup
     )
+    n_tree = len(tree_indptr) - 1
     stats["t_assign"] = time.perf_counter() - t0
 
     # ---- forest bulk load --------------------------------------------------
     t0 = time.perf_counter()
-    lens = np.array([len(c) for c in tree_cols], dtype=np.int64)
-    cols_flat = (
-        np.concatenate(tree_cols) if tree_cols else np.zeros(0, np.int64)
-    ).astype(np.int64)
-    vid = clo.spatial_vertex[cols_flat]
+    lens = np.diff(tree_indptr)
+    vid = clo.spatial_vertex[cols_flat.astype(np.int64)]
     pts = graph.coords[vid]
     boxes = np.concatenate([pts, pts], axis=1)
-    tree_of_entry = np.repeat(np.arange(len(tree_cols)), lens)
+    tree_of_entry = np.repeat(np.arange(n_tree), lens)
     ext = graph.spatial_extent()
     extent = np.array([ext[0], ext[1], ext[2], ext[3]], dtype=np.float32)
-    forest = build_forest(
-        boxes, vid.astype(np.int32), tree_of_entry, len(tree_cols),
-        fanout=fanout, extent=extent,
+    load = build_forest_device if backend == "device" else build_forest
+    load_kw = (
+        {"kernel": device_kernel, "interpret": interpret}
+        if backend == "device" else {}
+    )
+    forest = load(
+        boxes, vid.astype(np.int32), tree_of_entry, n_tree,
+        fanout=fanout, extent=extent, **load_kw,
     )
     stats["t_forest"] = time.perf_counter() - t0
 
@@ -256,7 +298,7 @@ def build_2dreach(
     nonspatial_comp[sc[sc >= 0]] = False
     stats["n_comps"] = float(d)
     stats["user_comps"] = float(nonspatial_comp.sum())
-    stats["distinct_rtrees"] = float(len(tree_cols))
+    stats["distinct_rtrees"] = float(n_tree)
     stats["shared_trees"] = float(n_shared)
 
     return TwoDReachIndex(
@@ -272,6 +314,7 @@ def build_2dreach(
         bitrank=bitrank,
         tree_ptrs=tree_ptrs,
         stats=stats,
+        backend=backend,
     )
 
 
@@ -350,15 +393,163 @@ def _assign_trees(
     clo: ClosureResult,
     variant: str,
     dedup: str,
-) -> Tuple[np.ndarray, List[np.ndarray], int]:
-    """Map each component to a tree id; returns (comp_tree, per-tree column
-    lists, #components that share another's tree).
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Map each component to a tree id; returns ``(comp_tree,
+    tree_indptr, tree_cols, n_shared)`` with the per-tree column lists
+    in CSR form.
 
-    Sharing detection hashes every component's reachable set once
-    (vectorised, see ``_hash_sets``) and bucket-compares by hash +
-    cardinality; actual column bytes are compared only on collision —
-    the per-component ``tobytes()`` dictionary of the original
-    implementation is gone from the hot path."""
+    Fully vectorised: sharing candidates come from hash + cardinality
+    equality (``_hash_sets``), are verified by an exact ragged
+    element-wise compare (``np.logical_and.reduceat`` over the flattened
+    candidate pairs), and share *chains* resolve by pointer doubling —
+    no per-component Python loop anywhere.  Produces bit-identical
+    output to the reference per-component walk
+    (``_assign_trees_reference``, kept as the property-test oracle),
+    including tree id numbering and the shared-tree count.
+    """
+    d = cond.n_comps
+    comp_tree = np.full(d, -1, dtype=np.int32)
+    nonempty = clo.comp_nonempty()
+    share = (variant != "base") and (dedup != "none")
+
+    indptr, cols_all = _comp_cols_csr(clo)
+    sizes = np.diff(indptr)
+
+    if not share:
+        # one tree per nonempty comp, in comp id order
+        creators = np.nonzero(nonempty)[0]
+        root = np.arange(d, dtype=np.int64)
+    elif dedup == "paper":
+        hashes = _hash_sets(indptr, cols_all)
+        child = _paper_share_children(
+            cond, nonempty, indptr, cols_all, sizes, hashes)
+        root = _resolve_share_roots(child)
+        # tree ids are assigned in host processing order: descending
+        # level, stable — children strictly before parents
+        order = np.argsort(-cond.level, kind="stable")
+        creators_mask = nonempty & (child < 0)
+        creators = order[creators_mask[order]]
+    else:  # dedup == "global": one tree per distinct set anywhere
+        hashes = _hash_sets(indptr, cols_all)
+        root = _global_share_reps(nonempty, indptr, cols_all, sizes, hashes)
+        creators = np.nonzero(nonempty & (root == np.arange(d)))[0]
+
+    tid = np.full(d, -1, dtype=np.int32)
+    tid[creators] = np.arange(len(creators), dtype=np.int32)
+    ne = np.nonzero(nonempty)[0]
+    comp_tree[ne] = tid[root[ne]]
+    n_shared = int(nonempty.sum()) - len(creators)
+
+    cnt = sizes[creators].astype(np.int64)
+    tree_indptr = np.zeros(len(creators) + 1, dtype=np.int64)
+    np.cumsum(cnt, out=tree_indptr[1:])
+    slot = np.repeat(indptr[creators], cnt) + _ragged_arange(cnt)
+    tree_cols = cols_all[slot]
+    return comp_tree, tree_indptr, tree_cols, n_shared
+
+
+def _verify_equal_sets(
+    a: np.ndarray, b: np.ndarray,
+    indptr: np.ndarray, cols_all: np.ndarray, sizes: np.ndarray,
+) -> np.ndarray:
+    """(k,) bool — exact element-wise equality of the column sets of
+    comp pairs (a[i], b[i]); the pairs must have equal sizes > 0."""
+    cnt = sizes[a].astype(np.int64)
+    ar = _ragged_arange(cnt)
+    ia = np.repeat(indptr[a], cnt) + ar
+    ib = np.repeat(indptr[b], cnt) + ar
+    eq = cols_all[ia] == cols_all[ib]
+    starts = np.zeros(len(a), dtype=np.int64)
+    np.cumsum(cnt[:-1], out=starts[1:])
+    return np.logical_and.reduceat(eq, starts)
+
+
+def _paper_share_children(
+    cond: Condensation, nonempty: np.ndarray,
+    indptr: np.ndarray, cols_all: np.ndarray, sizes: np.ndarray,
+    hashes: np.ndarray,
+) -> np.ndarray:
+    """(d,) chosen share child per comp (-1: own tree) — for each parent
+    the first child (in DAG adjacency order) with an identical set."""
+    d = cond.n_comps
+    child = np.full(d, -1, dtype=np.int64)
+    e = cond.dag_edges
+    if e.size == 0:
+        return child
+    src, dst = e[:, 0].astype(np.int64), e[:, 1].astype(np.int64)
+    cand = (
+        nonempty[src] & nonempty[dst]
+        & (hashes[src] == hashes[dst]) & (sizes[src] == sizes[dst])
+    )
+    src, dst = src[cand], dst[cand]
+    if not len(src):
+        return child
+    ok = _verify_equal_sets(src, dst, indptr, cols_all, sizes)
+    src, dst = src[ok], dst[ok]
+    if not len(src):
+        return child
+    # dag_edges are (src, dst)-sorted, so the first row of each src run
+    # is the first matching child the reference walk would pick
+    first = np.r_[True, src[1:] != src[:-1]]
+    child[src[first]] = dst[first]
+    return child
+
+
+def _resolve_share_roots(child: np.ndarray) -> np.ndarray:
+    """Resolve share chains (parent -> equal child -> ...) to their
+    terminal tree-creating comp by pointer doubling.  Chains follow DAG
+    edges, so they are acyclic and converge in O(log depth) rounds."""
+    f = np.where(child >= 0, child, np.arange(len(child), dtype=np.int64))
+    while True:
+        f2 = f[f]
+        if np.array_equal(f2, f):
+            return f
+        f = f2
+
+
+def _global_share_reps(
+    nonempty: np.ndarray, indptr: np.ndarray, cols_all: np.ndarray,
+    sizes: np.ndarray, hashes: np.ndarray,
+) -> np.ndarray:
+    """(d,) representative comp per comp (itself: creates a tree).
+
+    Groups nonempty comps by (hash, cardinality); every group member
+    byte-compares against the group's lowest comp id.  Hash collisions
+    (unequal sets in one group) regroup among themselves and repeat —
+    each round retires at least its representatives, so the loop
+    terminates; in practice one round resolves everything."""
+    d = len(sizes)
+    rep = np.arange(d, dtype=np.int64)
+    pending = np.nonzero(nonempty)[0]
+    while len(pending) > 1:
+        order = np.lexsort((pending, sizes[pending], hashes[pending]))
+        ps = pending[order]
+        new_grp = np.r_[
+            True,
+            (hashes[ps][1:] != hashes[ps][:-1])
+            | (sizes[ps][1:] != sizes[ps][:-1]),
+        ]
+        reps = ps[new_grp]                       # lowest id per group
+        my = reps[np.cumsum(new_grp) - 1]
+        member = ps != my
+        mm, rr = ps[member], my[member]
+        if not len(mm):
+            break
+        ok = _verify_equal_sets(mm, rr, indptr, cols_all, sizes)
+        rep[mm[ok]] = rr[ok]
+        pending = mm[~ok]
+    return rep
+
+
+def _assign_trees_reference(
+    cond: Condensation,
+    clo: ClosureResult,
+    variant: str,
+    dedup: str,
+) -> Tuple[np.ndarray, List[np.ndarray], int]:
+    """Reference per-component walk (the original implementation) —
+    the oracle ``_assign_trees`` is property-tested against; returns
+    per-tree column *lists* rather than CSR."""
     d = cond.n_comps
     comp_tree = np.full(d, -1, dtype=np.int32)
     nonempty = clo.comp_nonempty()

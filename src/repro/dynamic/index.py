@@ -80,7 +80,13 @@ class DynamicIndex:
              host-side overlay on top.
     n_shards: forest partitions for ``engine="cluster"`` (default: the
              local device count); ignored otherwise.
-    build_kw: forwarded to ``build_index`` (fanout, dedup, ...).
+    build_kw: forwarded to ``build_index`` (fanout, dedup, ...).  When a
+             device serving engine is selected (``"device"`` /
+             ``"cluster"``) and no explicit ``backend`` is given, the
+             static base — including every compaction rebuild — is
+             built with ``backend="device"``, so each swap's fresh index
+             is adopted by the new engine zero-copy instead of being
+             re-transposed and re-uploaded from host.
     """
 
     def __init__(self, graph: GeosocialGraph, method: str,
@@ -102,6 +108,11 @@ class DynamicIndex:
         self.engine = engine
         self.n_shards = n_shards
         self._build_kw = dict(build_kw)
+        if engine != "host":
+            # device serving gets the device builder by default: the
+            # compaction swap then hands the freshly built arrays to the
+            # new engine without a host→device re-upload
+            self._build_kw.setdefault("backend", "device")
         self.policy = policy or CompactionPolicy()
         self._lock = threading.RLock()
         self._compactor = Compactor(self)
@@ -116,7 +127,7 @@ class DynamicIndex:
             "updates_since_compaction": 0,
         }
         t0 = time.perf_counter()
-        index = build_index(graph, self.method, **build_kw)
+        index = build_index(graph, self.method, **self._build_kw)
         built = self._build_reach_substrate(graph)
         self._install_base(graph, index, built)
         self.stats["t_initial_build"] = time.perf_counter() - t0

@@ -4,6 +4,8 @@ range_query/  — batched AABB range probe over packed R-tree leaves
                 (the RangeReach online hot path).
 bitset_mm/    — packed uint32 boolean OR-AND matmul (the Alg. 1 closure
                 build step as a semiring matmul; + MXU variant in ops).
+forest_build/ — segmented-MBR reduction (the R-tree bulk-load level
+                step; also builds the query engines' tile pyramids).
 segment_bag/  — fused EmbeddingBag gather+segment-sum (recsys/GNN
                 substrate; JAX has no native EmbeddingBag).
 

@@ -71,6 +71,31 @@ def bitset_mm_mxu(a_bits: np.ndarray, r_bits: np.ndarray) -> np.ndarray:
     )
 
 
+def bitset_mm_dev(
+    a_bits: jax.Array,   # (f, Wm) uint32 packed adjacency rows
+    r_bits: jax.Array,   # (m, W) uint32 packed set rows, m <= Wm * 32
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Device-resident ``bitset_mm``: jnp padding, no host round-trip.
+
+    The level-scheduled closure (:func:`repro.core.reachability
+    .closure_bitset_mm`) calls this once per condensation level with the
+    level's *frontier* — the compacted (source rows x unique-destination
+    columns) block — so converged rows outside the frontier pay nothing.
+    Returns the unpadded (f, W) OR-AND product, still on device.
+    """
+    f, Wm = a_bits.shape
+    m, W = r_bits.shape
+    assert m <= Wm * 32, (m, Wm)
+    fp = ((f + TI - 1) // TI) * TI
+    Wp = ((W + TW - 1) // TW) * TW
+    a = jnp.pad(a_bits, ((0, fp - f), (0, 0)))
+    r = jnp.pad(r_bits, ((0, Wm * 32 - m), (0, Wp - W)))
+    out = bitset_mm_pallas(a, r, interpret=interpret)
+    return out[:f, :W]
+
+
 def closure_fixpoint(
     own_bits: np.ndarray,   # (d, W) uint32 — own spatial columns per comp
     a_bits: np.ndarray,     # (d, ceil(d/32)) uint32 — DAG adjacency, packed

@@ -1,0 +1,19 @@
+"""Segmented-MBR reduction kernel for on-device R-tree bulk-load."""
+
+from .kernel import TN, seg_mbr_pallas
+from .ops import (
+    default_build_kernel,
+    gather_child_slots,
+    level_mbr,
+    mbr_reduce,
+    np_inert_plane,
+    slot_major,
+    tile_pyramid_device,
+)
+from .ref import seg_mbr_ref
+
+__all__ = [
+    "TN", "seg_mbr_pallas", "seg_mbr_ref",
+    "default_build_kernel", "gather_child_slots", "level_mbr",
+    "mbr_reduce", "np_inert_plane", "slot_major", "tile_pyramid_device",
+]

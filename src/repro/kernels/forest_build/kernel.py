@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: segmented-MBR reduction (R-tree bulk-load step).
+
+Bulk-loading a packed R-tree forest is, per level, one segmented
+min/max: every node's MBR is the reduction of its (at most ``fan``)
+children, and after the bulk-load sort the children of node ``j`` are
+contiguous.  The host path does this with ``np.minimum.reduceat``; the
+device path pads every node to exactly ``fan`` child slots (inert slots
+are +inf/-inf boxes) and lays the slots out **slot-major**:
+
+    children[(k * 2*dim) + a, j] = axis ``a`` of child ``k`` of node ``j``
+
+so one kernel block holds ``TN`` nodes along the lanes and all ``fan``
+child slots along the sublanes.  The reduction is then a static unroll
+over slots — mins for the low axes, maxes for the high axes — with no
+gather, no scatter, and no ragged bookkeeping inside the kernel.  The
+same kernel builds the R-tree node levels (``fan`` = tree fanout), the
+query engine's fine tile pyramid (``fan = TP``) and its coarse plane
+(``fan = COARSE_GROUP``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+TN = 128    # nodes per block (lanes)
+
+
+def _seg_mbr_kernel(c_ref, o_ref, *, dim: int, fan: int):
+    c = c_ref[...]                        # (fan * 2*dim, TN)
+    lo = c[0:dim]
+    hi = c[dim:2 * dim]
+    for k in range(1, fan):
+        lo = jnp.minimum(lo, c[k * 2 * dim:k * 2 * dim + dim])
+        hi = jnp.maximum(hi, c[k * 2 * dim + dim:(k + 1) * 2 * dim])
+    o_ref[...] = jnp.concatenate([lo, hi], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "fan", "interpret", "tn"))
+def seg_mbr_pallas(
+    children: jax.Array,   # (fan * 2*dim, Np) float32, Np % tn == 0
+    *,
+    dim: int,
+    fan: int,
+    interpret: bool = False,
+    tn: int = TN,
+) -> jax.Array:
+    """(2*dim, Np) node MBRs; inert child slots must be +inf/-inf."""
+    rows, np_ = children.shape
+    assert rows == fan * 2 * dim, (rows, fan, dim)
+    assert np_ % tn == 0, (np_, tn)
+    grid = (np_ // tn,)
+    return pl.pallas_call(
+        functools.partial(_seg_mbr_kernel, dim=dim, fan=fan),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, tn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((2 * dim, tn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((2 * dim, np_), jnp.float32),
+        interpret=interpret,
+    )(children)

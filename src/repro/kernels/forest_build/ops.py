@@ -1,0 +1,204 @@
+"""Device-side forest bulk-load building blocks.
+
+The bulk-load proper (sort + level loop) lives in
+:func:`repro.core.rtree.build_forest_device`; this module owns the
+device-resident segmented-MBR reduction it loops over, in two
+interchangeable implementations:
+
+* ``kernel="pallas"`` — the :mod:`kernel` slot-major reduction kernel
+  (the TPU path; ``interpret=True`` runs it on CPU for tests);
+* ``kernel="xla"``    — the :mod:`ref` jnp reduction (XLA fuses it into
+  a plain strided min/max — the fast path on CPU hosts, where the
+  Pallas interpreter would dominate the build).
+
+``default_build_kernel()`` picks per backend, mirroring how the query
+engines pick interpret mode.  Both implementations are exact (min/max
+over identical float32 values), so backend choice never changes the
+built index — asserted in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import TN, seg_mbr_pallas
+from .ref import seg_mbr_ref
+
+
+def default_build_kernel() -> str:
+    """Pallas on TPU, XLA everywhere else (same policy as the engines'
+    interpret-mode default, but for build throughput)."""
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _pow2(n: int, lo: int = 1) -> int:
+    b = lo
+    while b < n:
+        b <<= 1
+    return b
+
+
+def slot_major(x: jax.Array, fan: int) -> jax.Array:
+    """(2*dim, N*fan) node-major child planes -> (fan*2*dim, N)
+    slot-major layout the reduction kernel consumes."""
+    two_dim, m = x.shape
+    n = m // fan
+    return x.reshape(two_dim, n, fan).transpose(2, 0, 1).reshape(
+        fan * two_dim, n)
+
+
+def gather_child_slots(
+    src_soa: jax.Array,     # (2*dim, C) float32 child-level planes
+    starts: jax.Array,      # (N,) int32 first child of each node
+    ends: jax.Array,        # (N,) int32 one past the last child
+    fan: int,
+    dim: int,
+) -> jax.Array:
+    """(2*dim, N*fan) node-major slots; ragged tails filled inert.
+
+    Node ``j`` owns children ``[starts[j], ends[j])`` of the child
+    level (contiguous after the bulk-load sort); slots past the end get
+    +inf mins / -inf maxes so they never move a min/max.
+    """
+    C = src_soa.shape[1]
+    idx = starts[:, None] + jnp.arange(fan, dtype=jnp.int32)[None, :]
+    mask = idx < ends[:, None]                       # (N, fan)
+    g = src_soa[:, jnp.clip(idx, 0, max(C - 1, 0))]  # (2*dim, N, fan)
+    inert = jnp.concatenate([
+        jnp.full((dim,), jnp.inf, jnp.float32),
+        jnp.full((dim,), -jnp.inf, jnp.float32),
+    ])[:, None, None]
+    g = jnp.where(mask[None, :, :], g, inert)
+    n = starts.shape[0]
+    return g.reshape(2 * dim, n * fan)
+
+
+def mbr_reduce(
+    children_soa: jax.Array,   # (2*dim, N*fan) node-major child planes
+    dim: int,
+    fan: int,
+    *,
+    kernel: str = "xla",
+    interpret: bool = True,
+) -> jax.Array:
+    """(2*dim, N) segmented MBRs — one reduction per ``fan`` slots."""
+    if kernel == "xla":
+        # node-major reduce directly: XLA fuses the reshape + min/max
+        # into one pass (no slot-major transpose materialised)
+        two_dim, m = children_soa.shape
+        c = children_soa.reshape(two_dim, m // fan, fan)
+        return jnp.concatenate(
+            [c[:dim].min(axis=2), c[dim:].max(axis=2)], axis=0)
+    arr = slot_major(children_soa, fan)
+    n = arr.shape[1]
+    npad = max(TN, -(-n // TN) * TN)
+    if npad != n:
+        inert = jnp.concatenate([
+            jnp.full((dim,), jnp.inf, jnp.float32),
+            jnp.full((dim,), -jnp.inf, jnp.float32),
+        ])
+        pad = jnp.tile(inert, fan)[:, None]
+        arr = jnp.concatenate(
+            [arr, jnp.broadcast_to(pad, (arr.shape[0], npad - n))], axis=1)
+    out = seg_mbr_pallas(arr, dim=dim, fan=fan, interpret=interpret)
+    return out[:, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dim", "tp", "tpt", "group", "kernel", "interpret"),
+)
+def _tile_pyramid_jit(esoa, *, dim, tp, tpt, group, kernel, interpret):
+    two_dim, pp = esoa.shape
+    nt = pp // tp
+    fine = mbr_reduce(esoa, dim, tp, kernel=kernel, interpret=interpret)
+
+    nc = -(-nt // group)
+    pad_f = nc * group
+    inert = jnp.concatenate([
+        jnp.full((dim,), jnp.inf, jnp.float32),
+        jnp.full((dim,), -jnp.inf, jnp.float32),
+    ])[:, None]
+    if pad_f != nt:
+        fine_in = jnp.concatenate(
+            [fine, jnp.broadcast_to(inert, (two_dim, pad_f - nt))], axis=1)
+    else:
+        fine_in = fine
+    coarse = mbr_reduce(fine_in, dim, group, kernel=kernel,
+                        interpret=interpret)
+
+    ntp = max(tpt, -(-nt // tpt) * tpt)
+    ncp = ntp // group
+    fine_soa = jnp.concatenate(
+        [fine, jnp.broadcast_to(inert, (two_dim, ntp - nt))], axis=1)
+    coarse_soa = jnp.concatenate(
+        [coarse, jnp.broadcast_to(inert, (two_dim, ncp - nc))], axis=1)
+    return fine_soa, coarse_soa
+
+
+def tile_pyramid_device(
+    esoa: jax.Array,   # (2*dim, Pp) float32 entry planes, Pp % tp == 0
+    dim: int,
+    *,
+    tp: int,
+    tpt: int,
+    group: int,
+    kernel: str = "xla",
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array, int]:
+    """Device mirror of ``descent.build_tile_pyramid`` (same shapes,
+    same float32 values): (fine (2*dim, NTp), coarse (2*dim, NCp),
+    n_tiles).  One fused jit — the reductions and the padding
+    concatenations compile to a single pass over the plane."""
+    two_dim, pp = esoa.shape
+    assert two_dim == 2 * dim and pp % tp == 0
+    fine_soa, coarse_soa = _tile_pyramid_jit(
+        esoa, dim=dim, tp=tp, tpt=tpt, group=group, kernel=kernel,
+        interpret=interpret)
+    return fine_soa, coarse_soa, pp // tp
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fan", "dim", "kernel", "interpret"))
+def _level_mbr_jit(src_soa, starts, ends, *, fan, dim, kernel, interpret):
+    slots = gather_child_slots(src_soa, starts, ends, fan, dim)
+    return mbr_reduce(slots, dim, fan, kernel=kernel, interpret=interpret)
+
+
+def level_mbr(
+    src_soa: jax.Array,     # (2*dim, C) float32 child-level planes
+    starts: np.ndarray,     # (N,) host int — first child per node
+    ends: np.ndarray,       # (N,) host int — one past the last child
+    fan: int,
+    dim: int,
+    *,
+    kernel: str = "xla",
+    interpret: bool = True,
+) -> jax.Array:
+    """(2*dim, Np2) node MBRs for one bulk-load level, fused gather +
+    reduction in a single jit.  ``N`` is padded up to a power of two
+    with empty segments (inert +inf/-inf rows past ``N``) so repeated
+    builds — compaction swaps above all — reuse a handful of traces."""
+    n = len(starts)
+    np2 = _pow2(max(n, 1), TN)
+    sp = np.zeros(np2, dtype=np.int32)
+    ep = np.zeros(np2, dtype=np.int32)
+    sp[:n] = starts
+    ep[:n] = ends
+    return _level_mbr_jit(
+        src_soa, jnp.asarray(sp), jnp.asarray(ep),
+        fan=fan, dim=dim, kernel=kernel, interpret=interpret)
+
+
+def np_inert_plane(dim: int, width: int) -> np.ndarray:
+    """Host helper: (2*dim, width) impossible-box plane (min > max),
+    matching ``forest_to_soa``'s padding convention."""
+    soa = np.empty((2 * dim, width), dtype=np.float32)
+    soa[:dim] = 1.0
+    soa[dim:] = 0.0
+    return soa

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the segmented-MBR reduction kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def seg_mbr_ref(children: jnp.ndarray, *, dim: int, fan: int) -> jnp.ndarray:
+    """Same contract as ``seg_mbr_pallas``: slot-major (fan*2*dim, N)
+    child planes -> (2*dim, N) node MBRs (min over the low axes, max
+    over the high axes)."""
+    rows, n = children.shape
+    assert rows == fan * 2 * dim
+    c = children.reshape(fan, 2 * dim, n)
+    return jnp.concatenate(
+        [c[:, :dim].min(axis=0), c[:, dim:].max(axis=0)], axis=0
+    )

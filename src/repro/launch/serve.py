@@ -86,7 +86,7 @@ def _serve_cluster(index, us, rects, args):
     latencies (submit→resolve), steady-state no-recompile assertion."""
     from ..cluster import Frontend, ShardedEngine
 
-    eng = ShardedEngine(index, n_shards=args.shards)
+    eng = ShardedEngine(index, n_shards=args.shards or None)
     part = eng.partition
     print(f"[serve] cluster: {eng.n_shards} shards on "
           f"{eng.mesh.shape['data']} device(s), "
@@ -170,9 +170,12 @@ def main():
     ap.add_argument("--batch", type=int, default=256,
                     help="serving batch size (keep it a power of two "
                          "to reuse the engines' compiled buckets)")
-    ap.add_argument("--shards", type=int, default=None,
-                    help="cluster forest partitions "
-                         "(default: local device count)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="cluster forest partitions; 0 (default) "
+                         "resolves to the local device count — on a "
+                         "single device extra shards only add per-shard "
+                         "kernel dispatches (see README, Cluster "
+                         "serving)")
     ap.add_argument("--flush-ms", type=float, default=2.0,
                     help="cluster frontend deadline flush (ms)")
     ap.add_argument("--verify", type=int, default=64,

@@ -30,6 +30,13 @@ except ImportError:  # pragma: no cover - exercised on minimal installs
     def given(*_args, **_kwargs):
         return pytest.mark.skip(reason="hypothesis not installed")
 
+    def settings(*_args, **_kwargs):
+        """No-op decorator so ``@settings(...)`` stacks on the skip."""
+        def _wrap(fn):
+            return fn
+
+        return _wrap
+
 
 def random_geosocial(rng: np.random.Generator, n: int, m: int,
                      spatial_frac: float = 0.35, sink_bias: float = 0.8):

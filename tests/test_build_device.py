@@ -1,0 +1,293 @@
+"""backend="device" build pipeline: exactness vs the host build, the
+level-scheduled device closure, the vectorised tree assignment, and the
+zero-copy build→serve handoff (adoption counters)."""
+
+import numpy as np
+import pytest
+from conftest import given, settings, st
+
+from repro.core import (
+    QueryEngine,
+    batch_query,
+    build_2dreach,
+    build_dynamic_index,
+    build_index,
+    condense,
+    scc_np,
+)
+from repro.core import engine as engine_mod
+from repro.core.graph import make_graph
+from repro.core.reachability import closure_bitset_mm, closure_np
+from repro.core.two_d_reach import _assign_trees, _assign_trees_reference
+from repro.data import get_dataset, workload
+from repro.dynamic import CompactionPolicy
+from repro.kernels.range_query import ops as rq_ops
+
+VARIANTS = ("base", "comp", "pointer")
+
+
+def _random_graph(rng, n, m, p_spatial):
+    edges = rng.integers(0, n, (m, 2)).astype(np.int64)
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    coords = (rng.random((n, 2)) * 100).astype(np.float32)
+    sm = rng.random(n) < p_spatial
+    return make_graph(n, edges, coords, sm)
+
+
+def _assert_index_equal(a, b):
+    assert a.variant == b.variant
+    assert np.array_equal(a.excluded, b.excluded)
+    assert np.array_equal(a.vertex_comp, b.vertex_comp)
+    assert np.array_equal(a.comp_tree, b.comp_tree)
+    if a.vertex_tree is not None:
+        assert np.array_equal(a.vertex_tree, b.vertex_tree)
+    else:
+        assert np.array_equal(a.bitrank.bits, b.bitrank.bits)
+        assert np.array_equal(a.bitrank.rank, b.bitrank.rank)
+        assert np.array_equal(a.tree_ptrs, b.tree_ptrs)
+    fa, fb = a.forest, b.forest
+    assert np.array_equal(fa.entries, fb.entries)
+    assert np.array_equal(fa.entry_ids, fb.entry_ids)
+    assert np.array_equal(fa.entry_off, fb.entry_off)
+    assert fa.depth == fb.depth
+    for l in range(fa.depth):
+        assert np.array_equal(fa.level_mbr[l], fb.level_mbr[l])
+        assert np.array_equal(fa.tree_off[l], fb.tree_off[l])
+
+
+# --------------------------------------------------------------------------
+# build equivalence (the acceptance property): device == host, bit for bit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_device_build_identical_to_host(lbsn_graph, variant):
+    g = lbsn_graph
+    host = build_2dreach(g, variant=variant)
+    dev = build_2dreach(g, variant=variant, backend="device")
+    _assert_index_equal(host, dev)
+    assert host.backend == "host" and dev.backend == "device"
+    assert dev.forest.device is not None and host.forest.device is None
+    for k in ("t_scc", "t_closure", "t_assign", "t_forest", "t_pointers",
+              "t_total"):
+        assert k in host.stats and k in dev.stats
+    us, rects = workload(g, 256, extent_ratio=0.08, seed=4)
+    assert np.array_equal(host.query_batch(us, rects),
+                          dev.query_batch(us, rects))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_device_build_identical_on_random_graphs(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(10, 250))
+    g = _random_graph(rng, n, int(rng.integers(n, 5 * n)),
+                      float(rng.uniform(0.05, 0.9)))
+    variant = VARIANTS[seed % 3]
+    host = build_2dreach(g, variant=variant)
+    dev = build_2dreach(g, variant=variant, backend="device")
+    _assert_index_equal(host, dev)
+
+
+def test_device_build_pallas_kernels_interpret(lbsn_graph):
+    host = build_2dreach(lbsn_graph, variant="comp")
+    dev = build_2dreach(lbsn_graph, variant="comp", backend="device",
+                        device_kernel="pallas", interpret=True)
+    _assert_index_equal(host, dev)
+
+
+# --------------------------------------------------------------------------
+# device closure: level-scheduled fixpoint == host sweep
+# --------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_closure_bitset_mm_matches_closure_np(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(5, 200))
+    g = _random_graph(rng, n, int(rng.integers(n, 6 * n)),
+                      float(rng.uniform(0.1, 0.9)))
+    labels = scc_np(n, g.edges)
+    cond = condense(n, g.edges, labels)
+    ref = closure_np(cond, n, g.spatial_ids)
+    for kw in ({"kernel": "xla"},
+               {"kernel": "pallas", "interpret": True}):
+        got = closure_bitset_mm(cond, n, g.spatial_ids, **kw)
+        assert np.array_equal(ref.bits, got.bits)
+        assert np.array_equal(ref.interior_row, got.interior_row)
+        assert np.array_equal(ref.own_indptr, got.own_indptr)
+        assert np.array_equal(ref.own_cols, got.own_cols)
+
+
+def test_closure_np_segment_or_equals_legacy_scatter(lbsn_graph):
+    g = lbsn_graph
+    labels = scc_np(g.n_nodes, g.edges)
+    cond = condense(g.n_nodes, g.edges, labels)
+    a = closure_np(cond, g.n_nodes, g.spatial_ids, segment_or=True)
+    b = closure_np(cond, g.n_nodes, g.spatial_ids, segment_or=False)
+    assert np.array_equal(a.bits, b.bits)
+
+
+# --------------------------------------------------------------------------
+# vectorised tree assignment == reference per-component walk
+# --------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=12, deadline=None)
+def test_assign_trees_matches_reference(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(10, 300))
+    g = _random_graph(rng, n, int(rng.integers(n, 6 * n)),
+                      float(rng.uniform(0.05, 0.9)))
+    variant = VARIANTS[seed % 3]
+    dedup = ("paper", "global", "none")[(seed // 3) % 3]
+    if variant == "base":
+        excluded = np.zeros(n, dtype=bool)
+        dec_edges, include = g.edges, None
+    else:
+        excluded = g.spatial_sink_mask()
+        e = g.edges
+        keep = ~(excluded[e[:, 0]] | excluded[e[:, 1]])
+        dec_edges, include = e[keep], ~excluded
+    labels = scc_np(n, dec_edges)
+    cond = condense(n, dec_edges, labels, include_mask=include)
+    extra = None
+    if variant != "base":
+        e = g.edges
+        m = excluded[e[:, 1]] & ~excluded[e[:, 0]]
+        if m.any():
+            src_c = cond.comp[e[m, 0]]
+            ok = src_c >= 0
+            extra = (e[m, 1][ok], src_c[ok])
+    clo = closure_np(cond, n, g.spatial_ids, extra_vertex_comp=extra)
+    ct, ti, tc, ns = _assign_trees(cond, clo, variant, dedup)
+    ct2, tl2, ns2 = _assign_trees_reference(cond, clo, variant, dedup)
+    assert ns == ns2
+    assert np.array_equal(ct, ct2)
+    assert len(ti) - 1 == len(tl2)
+    flat = np.concatenate(tl2) if tl2 else np.zeros(0, np.int32)
+    assert np.array_equal(tc, flat.astype(tc.dtype))
+
+
+# --------------------------------------------------------------------------
+# zero-copy handoff: engines adopt device-built arrays, no re-upload
+# --------------------------------------------------------------------------
+
+def test_query_engine_adopts_device_build(lbsn_graph):
+    g = lbsn_graph
+    dev = build_2dreach(g, variant="comp", backend="device")
+    soa0 = rq_ops.SOA_BUILDS
+    c0 = dict(engine_mod.UPLOAD_COUNTERS)
+    eng = QueryEngine(dev)
+    assert eng.stats["adopted"] == 1
+    assert rq_ops.SOA_BUILDS == soa0              # no host transposition
+    assert engine_mod.UPLOAD_COUNTERS["host_uploads"] == c0["host_uploads"]
+    assert engine_mod.UPLOAD_COUNTERS["device_adoptions"] == \
+        c0["device_adoptions"] + 1
+    us, rects = workload(g, 200, extent_ratio=0.08, seed=6)
+    assert np.array_equal(eng.query_batch(us, rects),
+                          dev.query_batch(us, rects))
+
+
+def test_sharded_engine_adopts_device_build(lbsn_graph):
+    from repro.cluster import ShardedEngine
+
+    g = lbsn_graph
+    host = build_2dreach(g, variant="comp")
+    dev = build_2dreach(g, variant="comp", backend="device")
+    soa0 = rq_ops.SOA_BUILDS
+    c0 = dict(engine_mod.UPLOAD_COUNTERS)
+    eng = ShardedEngine(dev, n_shards=4)
+    assert eng.stats["adopted"] == 1
+    assert rq_ops.SOA_BUILDS == soa0
+    assert engine_mod.UPLOAD_COUNTERS["host_uploads"] == c0["host_uploads"]
+    assert engine_mod.UPLOAD_COUNTERS["device_adoptions"] == \
+        c0["device_adoptions"] + 1
+    us, rects = workload(g, 200, extent_ratio=0.08, seed=7)
+    assert np.array_equal(eng.query_batch(us, rects),
+                          host.query_batch(us, rects))
+
+
+def test_shard_arenas_device_equals_host(lbsn_graph):
+    from repro.cluster.partition import partition_forest, shard_arenas
+
+    host = build_2dreach(lbsn_graph, variant="comp")
+    dev = build_2dreach(lbsn_graph, variant="comp", backend="device")
+    for s in (1, 3):
+        ph, pd = partition_forest(host.forest, s), \
+            partition_forest(dev.forest, s)
+        assert np.array_equal(ph.tree_shard, pd.tree_shard)
+        ah, ad = shard_arenas(host.forest, ph), shard_arenas(dev.forest, pd)
+        for x, y, nm in zip(ah[:3], ad[:3], ("entries", "fine", "coarse")):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), nm
+        assert ah[3] == ad[3]
+
+
+def test_dynamic_device_compaction_zero_reupload(lbsn_graph):
+    g = lbsn_graph
+    dyn = build_dynamic_index(
+        g, "2dreach-comp",
+        policy=CompactionPolicy(max_overlay_edges=None, max_staged=None,
+                                max_updates=None),
+        engine="device",
+    )
+    assert dyn.base_index.backend == "device"
+    assert dyn.base_engine.stats["adopted"] == 1
+    soa0 = rq_ops.SOA_BUILDS
+    c0 = dict(engine_mod.UPLOAD_COUNTERS)
+    rng = np.random.default_rng(3)
+    for _ in range(25):
+        dyn.add_edge(int(rng.integers(0, g.n_nodes)),
+                     int(rng.integers(0, g.n_nodes)))
+    dyn.add_vertex((42.0, 17.0))
+    dyn.compact(background=False)
+    # the swap's fresh engine adopted the device build: no host upload,
+    # no transposition, exactly one new adoption
+    assert dyn.base_index.backend == "device"
+    assert dyn.base_engine.stats["adopted"] == 1
+    assert rq_ops.SOA_BUILDS == soa0
+    assert engine_mod.UPLOAD_COUNTERS["host_uploads"] == c0["host_uploads"]
+    assert engine_mod.UPLOAD_COUNTERS["device_adoptions"] == \
+        c0["device_adoptions"] + 1
+    snap = dyn.snapshot_graph()
+    fresh = build_2dreach(snap, variant="comp")
+    us, rects = workload(snap, 150, extent_ratio=0.08, seed=8)
+    assert np.array_equal(dyn.query_batch(us, rects),
+                          fresh.query_batch(us, rects))
+
+
+# --------------------------------------------------------------------------
+# error audit: unsupported backend pairings name the offender
+# --------------------------------------------------------------------------
+
+def test_build_index_rejects_device_backend_for_non_2dreach(lbsn_graph):
+    for method in ("3dreach", "3dreach-rev", "georeach"):
+        with pytest.raises(ValueError) as e:
+            build_index(lbsn_graph, method, backend="device")
+        msg = str(e.value)
+        assert method in msg and "2dreach" in msg and "backend" in msg
+    # explicit host backend on a host-only method is accepted
+    idx = build_index(lbsn_graph, "georeach", backend="host")
+    assert idx is not None
+
+
+def test_build_2dreach_rejects_unknown_backend(lbsn_graph):
+    with pytest.raises(ValueError) as e:
+        build_2dreach(lbsn_graph, backend="gpu")
+    assert "gpu" in str(e.value) and "device" in str(e.value)
+    with pytest.raises(ValueError) as e:
+        build_2dreach(lbsn_graph, backend="device", device_kernel="cuda")
+    assert "cuda" in str(e.value)
+
+
+def test_batch_query_device_engine_on_device_build(lbsn_graph):
+    dev = build_2dreach(lbsn_graph, variant="pointer", backend="device")
+    us, rects = workload(lbsn_graph, 128, extent_ratio=0.08, seed=5)
+    assert np.array_equal(
+        batch_query(dev, us, rects, engine="device"),
+        batch_query(dev, us, rects, engine="host"),
+    )
+
+
+@pytest.fixture(scope="module")
+def lbsn_graph():
+    return get_dataset("yelp", scale=0.06)

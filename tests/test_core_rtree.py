@@ -101,3 +101,148 @@ def test_collect_matches_scan():
         if 0.2 <= pts[i, 0] <= 0.6 and 0.2 <= pts[i, 1] <= 0.6
     }
     assert got == want
+
+
+# --------------------------------------------------------------------------
+# Bulk-load edge cases — both build backends, exhaustively checked
+# against query_host_collect
+# --------------------------------------------------------------------------
+
+def _points_forest(build, pts, tree_of, n_trees, fanout):
+    boxes = np.concatenate([pts, pts], axis=1)
+    return build(boxes, np.arange(len(pts), dtype=np.int32),
+                 tree_of, n_trees, fanout=fanout)
+
+
+def _check_collect_exhaustive(forest, pts, tree_of, n_trees, rects):
+    """Every tree x rect: collected payloads == brute-force point set."""
+    for t in range(-1, n_trees):
+        for rect in rects:
+            got = set(query_host_collect(forest, t, rect).tolist())
+            if t < 0:
+                want = set()
+            else:
+                sel = np.nonzero(tree_of == t)[0]
+                want = {
+                    int(i) for i in sel
+                    if rect[0] <= pts[i, 0] <= rect[2]
+                    and rect[1] <= pts[i, 1] <= rect[3]
+                }
+            assert got == want, (t, rect, got, want)
+    # the batched probe agrees with the collector
+    tids = np.repeat(np.arange(n_trees), len(rects))
+    rb = np.tile(rects, (max(n_trees, 1), 1))[: len(tids)]
+    hit = query_host(forest, tids, rb)
+    for k, (t, rect) in enumerate(zip(tids, rb)):
+        assert hit[k] == bool(
+            len(query_host_collect(forest, int(t), rect)))
+
+
+def _both_builders():
+    from repro.core import build_forest_device
+
+    return [("host", build_forest), ("device", build_forest_device)]
+
+
+def test_bulkload_empty_forest():
+    for name, build in _both_builders():
+        for T in (0, 1, 5):
+            f = _points_forest(
+                build, np.zeros((0, 2), np.float32),
+                np.zeros(0, np.int64), T, 16)
+            assert f.n_trees == T
+            assert f.depth == 1 and len(f.level_mbr[0]) == 0
+            assert not query_host(
+                f, np.arange(-1, T), np.zeros((T + 1, 4), np.float32)
+            ).any(), name
+
+
+def test_bulkload_zero_and_one_entry_trees_interleaved():
+    # trees 0,2,4,... empty; odd trees hold exactly one point each
+    T = 9
+    occupied = np.arange(1, T, 2)
+    pts = np.stack([occupied.astype(np.float32),
+                    occupied.astype(np.float32)], axis=1)
+    tree_of = occupied.astype(np.int64)
+    rects = np.array([[0, 0, 10, 10], [2.5, 2.5, 3.5, 3.5],
+                      [-1, -1, -0.5, -0.5]], np.float32)
+    for name, build in _both_builders():
+        f = _points_forest(build, pts, tree_of, T, 16)
+        assert (np.diff(f.entry_off) == np.isin(np.arange(T), occupied)).all()
+        _check_collect_exhaustive(f, pts, tree_of, T, rects)
+
+
+def test_bulkload_fanout_two_minimum():
+    rng = np.random.default_rng(11)
+    P, T = 77, 3
+    pts = (rng.random((P, 2)) * 8).astype(np.float32)
+    tree_of = np.sort(rng.integers(0, T, P)).astype(np.int64)
+    rects = np.array([[0, 0, 8, 8], [1, 1, 3, 3], [6.5, 0.5, 7.5, 7.5]],
+                     np.float32)
+    for name, build in _both_builders():
+        f = _points_forest(build, pts, tree_of, T, 2)
+        # fanout=2 gives the deepest pyramid: depth >= log2(max tree)
+        assert f.depth >= int(np.ceil(np.log2(max(
+            np.diff(f.entry_off).max(), 2))))
+        _check_collect_exhaustive(f, pts, tree_of, T, rects)
+
+
+def test_bulkload_counts_at_fanout_power_boundaries():
+    # tree sizes F**k - 1, F**k, F**k + 1 around every level boundary
+    F = 4
+    sizes = []
+    for k in (1, 2, 3):
+        sizes += [F ** k - 1, F ** k, F ** k + 1]
+    rng = np.random.default_rng(13)
+    pts_l, tree_l = [], []
+    for t, s in enumerate(sizes):
+        pts_l.append((rng.random((s, 2)) * 5).astype(np.float32))
+        tree_l.append(np.full(s, t, np.int64))
+    pts = np.concatenate(pts_l)
+    tree_of = np.concatenate(tree_l)
+    rects = np.array([[0, 0, 5, 5], [1, 2, 2, 3]], np.float32)
+    for name, build in _both_builders():
+        f = _points_forest(build, pts, tree_of, len(sizes), F)
+        # a tree of exactly F**k entries closes at one root after k levels
+        for t, s in enumerate(sizes):
+            nodes_l1 = f.tree_off[0][t + 1] - f.tree_off[0][t]
+            assert nodes_l1 == -(-s // F)
+        _check_collect_exhaustive(f, pts, tree_of, len(sizes), rects)
+
+
+def test_bulkload_morton_tie_determinism():
+    """Entries with identical coordinates (identical Morton codes) keep
+    their generation order under both backends — the sorts are stable —
+    so repeated builds are byte-identical and host == device."""
+    from repro.core import build_forest_device
+
+    P, T = 64, 2
+    pts = np.tile(np.array([[1.5, 2.5]], np.float32), (P, 1))
+    pts[::7] = [3.0, 3.0]      # a second tie class
+    tree_of = np.sort(np.tile(np.arange(T), P // T)).astype(np.int64)
+    boxes = np.concatenate([pts, pts], axis=1)
+    ids = np.arange(P, dtype=np.int32)[::-1].copy()
+    builds = [build_forest(boxes, ids, tree_of, T, fanout=4)
+              for _ in range(2)]
+    builds += [build_forest_device(boxes, ids, tree_of, T, fanout=4)
+               for _ in range(2)]
+    ref = builds[0]
+    for f in builds[1:]:
+        assert np.array_equal(ref.entries, f.entries)
+        assert np.array_equal(ref.entry_ids, f.entry_ids)
+        assert np.array_equal(ref.entry_off, f.entry_off)
+    # ties are resolved by input position: within a tree the reversed
+    # payload ids appear in descending order (== generation order)
+    for t in range(T):
+        s, e = ref.entry_off[t], ref.entry_off[t + 1]
+        grp = ref.entry_ids[s:e]
+        tie_classes = ref.entries[s:e, 0]
+        for v in np.unique(tie_classes):
+            cls = grp[tie_classes == v]
+            assert (np.diff(cls) < 0).all(), (t, v, cls)
+    # exhaustive collect check on identity payloads (both backends)
+    for name, build in _both_builders():
+        f = _points_forest(build, pts, tree_of, T, 4)
+        _check_collect_exhaustive(
+            f, pts, tree_of, T,
+            np.array([[0, 0, 4, 4], [2.9, 2.9, 3.1, 3.1]], np.float32))
