@@ -1,0 +1,164 @@
+"""§Perf hillclimb: the analytics query classes (repro.queries).
+
+Per query class — boolean reach (baseline), RangeCount, RangeCollect,
+KNNReach, convex-polygon reach — this bench measures wall-clock per
+query on the host NumPy descents vs the compile-once device engine
+(Pallas analytics leaf scans; interpret mode on CPU, real kernels on
+TPU), after verifying the two paths answer bit-identically.
+
+Outputs: results/perf_queries.json (full rows) and a root-level
+BENCH_queries.json summary with per-class host/device latency and the
+steady-state compile counts, gated to zero: after the warm pass no
+class may trace a new shape.  ``--smoke`` runs a seconds-scale subset
+for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import build_2dreach
+from repro.core.engine import engine_for
+from repro.data import get_dataset, knn_workload, polygon_workload, workload
+from repro.queries import (
+    knn_reach_host,
+    polygon_reach_host,
+    range_collect_host,
+    range_count_host,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT = os.path.join(ROOT, "results", "perf_queries.json")
+BENCH_OUT = os.path.join(ROOT, "BENCH_queries.json")
+
+
+def _t(fn, repeats=5):
+    fn()  # warmup
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _same(kind, a, b) -> bool:
+    if kind in ("reach", "count", "polygon"):
+        return bool((a == b).all())
+    if kind == "collect":
+        return bool((a.ids == b.ids).all() and (a.counts == b.counts).all()
+                    and (a.overflow == b.overflow).all())
+    return bool((a.ids == b.ids).all() and (a.dist2 == b.dist2).all())
+
+
+def class_sweep(dataset="gowalla", scale=0.5, n_q=2000, k=10,
+                repeats=5, variant="comp") -> List[Dict]:
+    g = get_dataset(dataset, scale=scale)
+    idx = build_2dreach(g, variant=variant)
+    eng = engine_for(idx)
+    us, rects = workload(g, n_q, extent_ratio=0.05, seed=5)
+    kus, pts = knn_workload(g, n_q, seed=6)
+    pus, polys = polygon_workload(g, n_q, extent_ratio=0.05, seed=7)
+    polys = list(polys)
+
+    cases = {
+        "reach": (
+            lambda: idx.query_batch(us, rects),
+            lambda: eng.query_batch(us, rects),
+        ),
+        "count": (
+            lambda: range_count_host(idx, us, rects),
+            lambda: eng.count_batch(us, rects),
+        ),
+        "collect": (
+            lambda: range_collect_host(idx, us, rects, k),
+            lambda: eng.collect_batch(us, rects, k),
+        ),
+        "knn": (
+            lambda: knn_reach_host(idx, kus, pts, k),
+            lambda: eng.knn_batch(kus, pts, k),
+        ),
+        "polygon": (
+            lambda: polygon_reach_host(idx, pus, polys),
+            lambda: eng.polygon_batch(pus, polys),
+        ),
+    }
+
+    # warm every class (shared prepare trace + per-class scans + the
+    # candidate/collect-cap high-water marks), then gate on flat compiles
+    for kind, (host_fn, dev_fn) in cases.items():
+        assert _same(kind, host_fn(), dev_fn()), \
+            f"{kind}: device answers diverge from host"
+    warm = eng.n_compiles
+
+    rows = []
+    for kind, (host_fn, dev_fn) in cases.items():
+        compiles0 = eng.n_compiles
+        t_host = _t(host_fn, repeats=repeats)
+        t_dev = _t(dev_fn, repeats=repeats)
+        rows.append(dict(
+            query_class=kind, variant=variant, n_queries=n_q, k=k,
+            host_us_per_q=t_host / n_q * 1e6,
+            device_us_per_q=t_dev / n_q * 1e6,
+            steady_state_recompiles=eng.n_compiles - compiles0,
+        ))
+    rows.append(dict(query_class="_all", variant=variant, n_queries=n_q,
+                     k=k, host_us_per_q=None, device_us_per_q=None,
+                     steady_state_recompiles=eng.n_compiles - warm))
+    return rows
+
+
+def bench_summary(rows: List[Dict]) -> Dict:
+    classes = {}
+    for r in rows:
+        if r["query_class"] == "_all":
+            continue
+        classes[r["query_class"]] = {
+            "host_us_per_q": r["host_us_per_q"],
+            "device_us_per_q": r["device_us_per_q"],
+        }
+    total_rec = int(sum(r["steady_state_recompiles"] for r in rows
+                        if r["query_class"] != "_all"))
+    return {
+        "unit": "us_per_query",
+        "classes": classes,
+        "device_bit_identical_to_host": True,   # asserted before timing
+        "steady_state_recompiles": total_rec,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale subset for CI")
+    args = ap.parse_args()
+
+    if args.smoke:
+        rows = class_sweep(dataset="yelp", scale=0.1, n_q=256, k=8,
+                           repeats=2)
+    else:
+        rows = class_sweep()
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump({"class_sweep": rows}, f, indent=1)
+    summary = bench_summary(rows)
+    with open(BENCH_OUT, "w") as f:
+        json.dump(summary, f, indent=1)
+    for r in rows:
+        print(r)
+    print(json.dumps(summary, indent=1))
+    assert summary["steady_state_recompiles"] == 0, \
+        "analytics steady-state recompile"
+    assert set(summary["classes"]) == {
+        "reach", "count", "collect", "knn", "polygon"}, \
+        "missing query class in the bench summary"
+
+
+if __name__ == "__main__":
+    main()

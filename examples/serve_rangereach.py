@@ -8,6 +8,11 @@ Pallas leaf-scan kernel, and the compile-once device QueryEngine
 (fused pointer lookup + hierarchically-pruned descent; interpret mode
 on CPU, the same calls compile to real kernels on TPU).
 
+Phase 1b (analytics): the same compiled engine answers the richer
+geosocial query classes of `repro.queries` — RangeCount, RangeCollect,
+KNNReach and convex-polygon regions — exact, bit-identical host vs
+device, spot-checked against the BFS oracles.
+
 Phase 2 (cluster): partitions the same forest into 8 shards
 (`repro.cluster.ShardedEngine`) and serves it request-at-a-time through
 the deadline-or-full micro-batching `Frontend`, asserting answers stay
@@ -89,6 +94,65 @@ for name, ts in lat.items():
     print(f"[serve] {name:<10} p50 {np.median(ts) / BATCH * 1e6:7.2f} "
           f"us/query   p max {ts.max() / BATCH * 1e6:7.2f} us/query "
           f"({BATCHES - 1} batches x {BATCH})")
+
+# ----- analytics query classes (count / collect / kNN / polygon) -----------
+# the same compiled engine answers the richer geosocial classes of
+# repro.queries — exact, device bit-identical to host, oracle spot-checked.
+# Equivalent CLI:  python -m repro.launch.serve --query-class knn --engine device
+from repro.core import run_queries
+from repro.core.oracle import (
+    knn_reach_oracle,
+    polygon_reach_oracle,
+    range_collect_oracle,
+    range_count_oracle,
+)
+from repro.data import knn_workload, polygon_workload
+from repro.queries import QueryProgram
+
+print("\n[analytics] count / collect / kNN / polygon on the device engine")
+K = 8
+aus, arects = workload(g, 256, extent_ratio=0.05, seed=300)
+kus, kpts = knn_workload(g, 256, seed=301)
+pus, ppolys = polygon_workload(g, 256, extent_ratio=0.05, seed=302)
+programs = {
+    "count": QueryProgram.count(aus, arects),
+    "collect": QueryProgram.collect(aus, arects, K),
+    "knn": QueryProgram.knn(kus, kpts, K),
+    "polygon": QueryProgram.polygon(pus, ppolys),
+}
+host_answers = {}
+for kind, prog in programs.items():
+    host_ans = host_answers[kind] = run_queries(index, prog, engine="host")
+    dev_ans = run_queries(index, prog, engine="device")   # warm / compile
+    t0 = time.perf_counter()
+    run_queries(index, prog, engine="device")
+    dt = time.perf_counter() - t0
+    if kind in ("count", "polygon"):
+        assert (dev_ans == host_ans).all(), f"{kind}: device != host"
+        tail = f"{int(np.sum(host_ans))} " + (
+            "total hits" if kind == "count" else "positive")
+    elif kind == "collect":
+        assert (dev_ans.ids == host_ans.ids).all()
+        assert (dev_ans.counts == host_ans.counts).all()
+        tail = (f"{int(host_ans.counts.sum())} venues materialised, "
+                f"{int(host_ans.overflow.sum())} overflowed K={K}")
+    else:
+        assert (dev_ans.ids == host_ans.ids).all()
+        assert (dev_ans.dist2 == host_ans.dist2).all()
+        tail = f"{int((host_ans.ids >= 0).sum())} neighbours returned"
+    print(f"[analytics] {kind:<8} device == host "
+          f"({dt / prog.n_queries * 1e6:7.2f} us/query warm)  {tail}")
+# oracle spot-check across all four classes (host answers from above)
+cnt_h, col_h = host_answers["count"], host_answers["collect"]
+knn_h, pol_h = host_answers["knn"], host_answers["polygon"]
+for b in range(16):
+    assert cnt_h[b] == range_count_oracle(g, int(aus[b]), arects[b])
+    want = range_collect_oracle(g, int(aus[b]), arects[b])
+    assert col_h.counts[b] == len(want) and (col_h.row(b) == want[:K]).all()
+    oi, _ = knn_reach_oracle(g, int(kus[b]), kpts[b], K)
+    assert (knn_h.row(b) == oi).all()
+    assert pol_h[b] == polygon_reach_oracle(g, int(pus[b]), ppolys[b])
+print("[analytics] oracle spot-check OK on all four classes")
 
 # ----- cluster serving (sharded engine + micro-batching frontend) ----------
 # the same forest, partitioned into 8 shards (stacked per device when the

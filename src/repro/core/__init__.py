@@ -10,14 +10,30 @@ from .api import (
     build_dynamic_index,
     build_index,
     index_nbytes,
+    run_queries,
 )
 from .condensation import Condensation, condense
 from .engine import QueryEngine, engine_for
 from .georeach import GeoReachIndex, build_georeach
 from .graph import CSR, GeosocialGraph, build_csr, make_graph
 from .interval_labels import IntervalLabels, build_interval_labels
-from .oracle import rangereach_oracle, rangereach_oracle_batch, reachable_mask
-from .polygon import points_in_convex_polygon, polygon_oracle, polygon_query
+from .oracle import (
+    knn_reach_oracle,
+    polygon_reach_oracle,
+    range_collect_oracle,
+    range_count_oracle,
+    rangereach_oracle,
+    rangereach_oracle_batch,
+    reachable_mask,
+)
+from .polygon import (
+    convex_halfplanes,
+    points_in_convex_polygon,
+    points_in_polygon_region,
+    polygon_bbox,
+    polygon_oracle,
+    polygon_query,
+)
 from .reachability import (
     ClosureResult,
     closure_bitset_mm,
@@ -33,6 +49,9 @@ from .rtree import (
     build_forest_device,
     query_host,
     query_host_collect,
+    query_host_collect_batch,
+    query_host_count,
+    query_host_knn,
     query_jax_wavefront,
 )
 from .scc import compact_labels, same_partition, scc_jax, scc_np
@@ -41,19 +60,24 @@ from .two_d_reach import BitRank, TwoDReachIndex, build_2dreach
 
 __all__ = [
     "METHODS", "batch_query", "build_dynamic_index", "build_index",
-    "index_nbytes",
+    "index_nbytes", "run_queries",
     "Condensation", "condense",
     "QueryEngine", "engine_for",
     "GeoReachIndex", "build_georeach",
     "CSR", "GeosocialGraph", "build_csr", "make_graph",
     "IntervalLabels", "build_interval_labels",
+    "knn_reach_oracle", "polygon_reach_oracle", "range_collect_oracle",
+    "range_count_oracle",
     "rangereach_oracle", "rangereach_oracle_batch", "reachable_mask",
-    "points_in_convex_polygon", "polygon_oracle", "polygon_query",
+    "convex_halfplanes", "points_in_convex_polygon",
+    "points_in_polygon_region", "polygon_bbox",
+    "polygon_oracle", "polygon_query",
     "ClosureResult", "closure_bitset_mm", "closure_jax", "closure_mbr_np",
     "closure_np",
     "DEFAULT_FANOUT", "DeviceForest", "RTreeForest", "build_forest",
     "build_forest_device", "query_host",
-    "query_host_collect", "query_jax_wavefront",
+    "query_host_collect", "query_host_collect_batch", "query_host_count",
+    "query_host_knn", "query_jax_wavefront",
     "compact_labels", "same_partition", "scc_jax", "scc_np",
     "ThreeDReachIndex", "build_3dreach",
     "BitRank", "TwoDReachIndex", "build_2dreach",

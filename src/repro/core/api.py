@@ -10,6 +10,7 @@ all go through this module so the methods stay interchangeable.
 
 from __future__ import annotations
 
+import warnings
 from typing import Union
 
 import numpy as np
@@ -84,19 +85,27 @@ def build_dynamic_index(graph: GeosocialGraph, method: str, policy=None, **kw):
     return DynamicIndex(graph, method, policy=policy, **kw)
 
 
+# index types batch_query has already warned about falling back to the
+# host path for (one warning per type, not one per batch)
+_FALLBACK_WARNED = set()
+
+
 def batch_query(index, us: np.ndarray, rects: np.ndarray,
-                engine: str = "host") -> np.ndarray:
+                engine: str = "host", required: bool = False) -> np.ndarray:
     """Batched RangeReach through ``index``.
 
     ``engine="host"`` is the NumPy path every index supports.
     ``engine="device"`` routes 2DReach indexes through the
     compile-once :class:`~repro.core.engine.QueryEngine` (uploaded and
     memoised on first use); index types without a device engine fall
-    back to the host path.
+    back to the host path with a one-time ``RuntimeWarning`` — or, with
+    ``required=True``, raise a ``ValueError`` naming the index, so a
+    benchmark asking for the device engine can never silently measure
+    the host path.
     ``engine="cluster"`` routes through the sharded multi-device
     :class:`~repro.cluster.ShardedEngine` (forest partitioned over the
     mesh, memoised on first use); cluster serving is an explicit opt-in,
-    so an unsupported index type raises instead of falling back.
+    so an unsupported index type always raises instead of falling back.
     """
     if engine == "device":
         from .engine import engine_for  # deferred: engine imports kernels
@@ -104,6 +113,21 @@ def batch_query(index, us: np.ndarray, rects: np.ndarray,
         eng = engine_for(index)
         if eng is not None:
             return eng.query_batch(np.asarray(us), np.asarray(rects))
+        if getattr(index, "engine", "host") != "host":
+            # a wrapper (DynamicIndex) already configured for device or
+            # cluster base serving: its own query_batch IS the device
+            # path, not a fallback
+            return index.query_batch(np.asarray(us), np.asarray(rects))
+        if required:
+            engine_for(index, required=True)  # raises, naming the index
+        key = type(index).__name__
+        if key not in _FALLBACK_WARNED:
+            _FALLBACK_WARNED.add(key)
+            warnings.warn(
+                f"batch_query(engine='device'): no device QueryEngine for "
+                f"{key}; falling back to the host path (pass required=True "
+                f"to make this an error)",
+                RuntimeWarning, stacklevel=2)
     elif engine == "cluster":
         from ..cluster import sharded_engine_for  # deferred: imports core
 
@@ -113,6 +137,97 @@ def batch_query(index, us: np.ndarray, rects: np.ndarray,
         raise ValueError(
             f"unknown engine {engine!r}; expected host|device|cluster")
     return index.query_batch(np.asarray(us), np.asarray(rects))
+
+
+def run_queries(index, program, engine: str = "host"):
+    """Execute a :class:`~repro.queries.QueryProgram` through ``index``.
+
+    The unified front door for the analytics query classes (see
+    :mod:`repro.queries`): ``reach`` works on every index (it delegates
+    to :func:`batch_query`); ``count`` / ``collect`` / ``knn`` /
+    ``polygon`` are exact on the 2DReach variants — static indexes on
+    both engines, :class:`~repro.dynamic.DynamicIndex` (host engine
+    routing, with its device base probes when so configured).  Asking
+    for an analytics class on an index without one raises a
+    ``ValueError`` naming the index — never a silent wrong answer.
+
+    engine: ``"host"`` (NumPy descents) or ``"device"`` (the
+    compile-once ``QueryEngine`` kernels; bit-identical to host).
+    """
+    from ..queries import host as qhost  # deferred: queries imports core
+
+    if engine not in ("host", "device"):
+        raise ValueError(
+            f"unknown engine {engine!r}; expected host|device "
+            f"(run_queries serves single-index engines; use batch_query "
+            f"for cluster boolean serving)")
+    kind = program.kind
+    is_static = isinstance(index, (TwoDReachIndex, ThreeDReachIndex,
+                                   GeoReachIndex))
+    if not is_static and engine == "device":
+        # wrappers (DynamicIndex) pick their serving engine at
+        # construction; asking run_queries for a device pass must not
+        # silently measure host base probes.  reach is served by both
+        # device and cluster wrappers; the analytics classes need the
+        # single-device QueryEngine (the cluster ShardedEngine is
+        # boolean-only, so a cluster wrapper's analytics base probes
+        # would fall back to the host descents)
+        wrapped = getattr(index, "engine", "host")
+        ok = ("device", "cluster") if kind == "reach" else ("device",)
+        if wrapped not in ok:
+            raise ValueError(
+                f"run_queries(engine='device', kind={kind!r}) on a "
+                f"{type(index).__name__} configured with "
+                f"engine={wrapped!r}: its base probes for this class "
+                f"would run on the host path — construct it with "
+                f"engine='device', or pass engine='host' here")
+    if kind == "reach":
+        if is_static:
+            return batch_query(index, program.us, program.rects,
+                               engine=engine,
+                               required=(engine == "device"))
+        # wrapper query_batch is the full mutated-graph answer, routed
+        # through whatever base engine the wrapper was built with
+        return index.query_batch(program.us, program.rects)
+
+    # analytics classes: one argument table drives every target surface
+    # (host descents, device engine methods, DynamicIndex methods)
+    try:
+        args = {
+            "count": (program.us, program.rects),
+            "collect": (program.us, program.rects, program.k),
+            "knn": (program.us, program.points, program.k),
+            "polygon": (program.us, program.polygons),
+        }[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown query kind {kind!r}; expected one of "
+            f"('reach', 'count', 'collect', 'knn', 'polygon')") from None
+    method = f"{kind}_batch"
+
+    if isinstance(index, TwoDReachIndex):
+        if engine == "device":
+            from .engine import engine_for
+
+            return getattr(engine_for(index, required=True), method)(*args)
+        from ..queries.knn import knn_reach_host
+
+        host_fns = {
+            "count": qhost.range_count_host,
+            "collect": qhost.range_collect_host,
+            "knn": knn_reach_host,
+            "polygon": qhost.polygon_reach_host,
+        }
+        return host_fns[kind](index, *args)
+
+    # DynamicIndex (or anything exposing the analytics surface)
+    if hasattr(index, method):
+        return getattr(index, method)(*args)
+    raise ValueError(
+        f"no {kind!r} query class for {type(index).__name__}: the "
+        f"analytics classes are implemented for the 2DReach variants "
+        f"(and DynamicIndex over them); use kind='reach' for boolean "
+        f"RangeReach on every method")
 
 
 def index_nbytes(index) -> dict:

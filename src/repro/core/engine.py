@@ -49,6 +49,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..kernels.range_query.analytics import (
+    ID_SENTINEL,
+    collect_scan_pallas,
+    count_scan_pallas,
+    polygon_scan_pallas,
+)
 from ..kernels.range_query.descent import (
     build_tile_pyramid,
     descent_scan_pallas,
@@ -56,6 +62,7 @@ from ..kernels.range_query.descent import (
 )
 from ..kernels.range_query.kernel import TB, TP
 from ..kernels.range_query.ops import forest_soa
+from .polygon import convex_halfplanes, points_in_polygon_region, polygon_bbox
 from .two_d_reach import TwoDReachIndex
 
 
@@ -65,6 +72,14 @@ def _bucket(n: int, lo: int) -> int:
     while b < n:
         b <<= 1
     return b
+
+
+def _collect_post(mat: jax.Array, *, kc: int):
+    """Fused collect postprocess: (B, K*TP) ids-or-sentinel -> the
+    ``kc`` smallest ids per row (sentinel sorts last) + exact totals."""
+    srt = jnp.sort(mat, axis=1)
+    cnt = jnp.sum(mat != ID_SENTINEL, axis=1)
+    return srt[:, :kc], cnt
 
 
 def _popcount32_jnp(x: jax.Array) -> jax.Array:
@@ -263,6 +278,24 @@ class QueryEngine:
         self._arena = TileArena.for_forest(index.forest, self.dim)
         self.n_tiles = self._arena.n_tiles
 
+        # host-side routing mirrors + payload-id plane for the analytics
+        # classes (count/collect/kNN/polygon, see repro.queries): the id
+        # plane rides next to the entry arena (sentinel padding so misses
+        # sort last), the excluded/coords mirrors resolve the Alg. 2
+        # special case per class
+        self._excluded_host = index.excluded
+        self._coords_host = index.coords
+        Pp = int(self._arena.entries.shape[1])
+        ids_row = np.full((1, Pp), ID_SENTINEL, dtype=np.int32)
+        ids_row[0, : len(index.forest.entry_ids)] = index.forest.entry_ids
+        self._ids_row = jnp.asarray(ids_row)
+        ent = index.forest.entries
+        self._extent_host = (
+            np.concatenate([ent[:, : self.dim].min(0),
+                            ent[:, self.dim:].max(0)]).astype(np.float64)
+            if len(ent) else None
+        )
+
         self.stats: Dict[str, float] = {
             "uploads": 1, "batches": 0, "queries": 0,
             "adopted": int(getattr(index.forest, "device", None) is not None),
@@ -276,6 +309,11 @@ class QueryEngine:
         self._kb_hwm = 1
         self._prepare = jax.jit(self._make_prepare())
         self._scan = jax.jit(self._make_scan())
+        self._count_scan = jax.jit(self._make_count_scan())
+        self._collect_scan = jax.jit(self._make_collect_scan())
+        self._collect_post = jax.jit(_collect_post, static_argnames=("kc",))
+        self._polygon_scan = jax.jit(self._make_polygon_scan(),
+                                     static_argnames=("ne",))
 
     # ------------------------------------------------------------------
     # jit closures (per-engine, so cache introspection is local)
@@ -316,6 +354,46 @@ class QueryEngine:
 
         return scan
 
+    def _make_count_scan(self):
+        dim = self.dim
+        interpret = self._interpret
+        arena = self._arena
+
+        def scan(cand_k, rects_soa, qs, qe):
+            return count_scan_pallas(
+                cand_k, arena.entries, rects_soa, qs, qe,
+                dim=dim, interpret=interpret,
+            )
+
+        return scan
+
+    def _make_collect_scan(self):
+        dim = self.dim
+        interpret = self._interpret
+        arena = self._arena
+        ids_row = self._ids_row
+
+        def scan(cand_k, rects_soa, qs, qe):
+            return collect_scan_pallas(
+                cand_k, arena.entries, ids_row, rects_soa, qs, qe,
+                dim=dim, interpret=interpret,
+            )
+
+        return scan
+
+    def _make_polygon_scan(self):
+        dim = self.dim
+        interpret = self._interpret
+        arena = self._arena
+
+        def scan(cand_k, rects_soa, lines_soa, qs, qe, *, ne):
+            return polygon_scan_pallas(
+                cand_k, arena.entries, rects_soa, lines_soa, qs, qe,
+                ne=ne, dim=dim, interpret=interpret,
+            )
+
+        return scan
+
     # ------------------------------------------------------------------
     # public surface
     # ------------------------------------------------------------------
@@ -324,26 +402,29 @@ class QueryEngine:
     def n_compiles(self) -> int:
         """Distinct (bucketed) shapes traced so far — flat in steady
         state; tests assert it via this introspection hook."""
-        return int(self._prepare._cache_size() + self._scan._cache_size())
+        return int(
+            self._prepare._cache_size() + self._scan._cache_size()
+            + self._count_scan._cache_size()
+            + self._collect_scan._cache_size()
+            + self._collect_post._cache_size()
+            + self._polygon_scan._cache_size()
+        )
 
-    def query_batch(self, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
-        """Batched RangeReach, same contract as ``TwoDReachIndex
-        .query_batch`` (and bit-identical to it)."""
-        us = np.asarray(us, dtype=np.int64)
+    def _route_prune(self, us: np.ndarray, rects: np.ndarray):
+        """Shared phase 1 for every query class: pad to the batch
+        bucket, run the fused route + hierarchical prune, ratchet the
+        candidate high-water mark.  Returns ``(Bb, rsoa_dev, forced,
+        qs, qe, cand_k)`` with ``cand_k`` already sliced to the K
+        bucket."""
         B = len(us)
-        if B == 0:
-            return np.zeros(0, dtype=bool)
         Bb, us_p, rsoa = pad_batch(us, rects, self.dim)
         rsoa_dev = jnp.asarray(rsoa)
-
         forced, qs, qe, cand, cnt, mx = self._prepare(
             jnp.asarray(us_p), rsoa_dev
         )
         self._kb_hwm = max(self._kb_hwm,
                            min(_bucket(max(int(mx), 1), 1), self.n_tiles))
         kb = self._kb_hwm
-        hit = self._scan(cand[:, :kb], rsoa_dev, qs, qe)
-
         self.stats["batches"] += 1
         self.stats["queries"] += B
         # tiles_scanned: live candidate tiles (pruning effectiveness);
@@ -352,11 +433,112 @@ class QueryEngine:
         self.stats["tiles_scanned"] += int(np.asarray(cnt).sum())
         self.stats["tiles_grid"] += (Bb // TB) * kb
         self.stats["tiles_full_scan"] += (Bb // TB) * self.n_tiles
+        return Bb, rsoa_dev, forced, qs, qe, cand[:, :kb]
+
+    def query_batch(self, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
+        """Batched RangeReach, same contract as ``TwoDReachIndex
+        .query_batch`` (and bit-identical to it)."""
+        us = np.asarray(us, dtype=np.int64)
+        B = len(us)
+        if B == 0:
+            return np.zeros(0, dtype=bool)
+        _, rsoa_dev, forced, qs, qe, cand_k = self._route_prune(us, rects)
+        hit = self._scan(cand_k, rsoa_dev, qs, qe)
         out = np.asarray(hit).astype(bool) | np.asarray(forced)
         return out[:B]
 
     def query(self, u: int, rect) -> bool:
         return bool(self.query_batch(np.array([u]), np.array([rect]))[0])
+
+    # -- analytics classes (see repro.queries) --------------------------
+
+    def count_batch(self, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
+        """Batched RangeCount: (B,) int64 exact number of reachable
+        venues intersecting each rect (bit-identical to the host
+        ``repro.queries.range_count_host``)."""
+        us = np.asarray(us, dtype=np.int64)
+        B = len(us)
+        if B == 0:
+            return np.zeros(0, dtype=np.int64)
+        _, rsoa_dev, forced, qs, qe, cand_k = self._route_prune(us, rects)
+        counts = self._count_scan(cand_k, rsoa_dev, qs, qe)
+        # forced: an excluded (spatial-sink) query vertex reaches exactly
+        # itself — its tree probe counted nothing (empty slice)
+        out = (np.asarray(counts).astype(np.int64)
+               + np.asarray(forced).astype(np.int64))
+        return out[:B]
+
+    def collect_batch(self, us: np.ndarray, rects: np.ndarray, k: int):
+        """Batched RangeCollect: the K smallest reachable venue ids in
+        each rect + exact totals and overflow flags — see
+        ``repro.queries.CollectResult`` (bit-identical to host)."""
+        from ..queries.program import CollectResult  # deferred: no cycle
+
+        us = np.asarray(us, dtype=np.int64)
+        B = len(us)
+        k = int(k)
+        if k < 1:
+            raise ValueError(f"collect needs k >= 1, got {k}")
+        if B == 0:
+            return CollectResult(
+                ids=np.zeros((0, k), np.int32),
+                counts=np.zeros(0, np.int64),
+                overflow=np.zeros(0, bool),
+            )
+        _, rsoa_dev, forced, qs, qe, cand_k = self._route_prune(us, rects)
+        mat = self._collect_scan(cand_k, rsoa_dev, qs, qe)
+        top, cnt = self._collect_post(mat, kc=_bucket(k, 1))
+        top = np.asarray(top)[:B]
+        counts = np.asarray(cnt).astype(np.int64)[:B]
+        ids = np.full((B, k), ID_SENTINEL, dtype=np.int32)
+        take = min(k, top.shape[1])
+        ids[:, :take] = top[:, :take]
+        ids[ids == ID_SENTINEL] = -1
+        exc = self._excluded_host[us]
+        if exc.any():
+            hit = np.nonzero(exc & np.asarray(forced)[:B])[0]
+            ids[hit, 0] = us[hit]
+            counts[hit] = 1
+        return CollectResult(ids=ids, counts=counts, overflow=counts > k)
+
+    def knn_batch(self, us: np.ndarray, points: np.ndarray, k: int):
+        """Batched KNNReach via the device radius-doubling driver over
+        RangeCount/RangeCollect (see ``repro.queries.knn``); results are
+        the exact (dist², id)-ordered k nearest reachable venues,
+        bit-identical to the host best-first descent."""
+        from ..queries.knn import knn_radius_doubling  # deferred: no cycle
+
+        return knn_radius_doubling(self, us, points, k)
+
+    def polygon_batch(self, us: np.ndarray, polygons) -> np.ndarray:
+        """Batched convex-polygon RangeReach: the half-plane postfilter
+        runs inside the leaf-scan kernel (bbox prune + canonical f32
+        region test; bit-identical to host)."""
+        us = np.asarray(us, dtype=np.int64)
+        B = len(us)
+        if B == 0:
+            return np.zeros(0, dtype=bool)
+        if len(polygons) != B:
+            raise ValueError(f"{len(polygons)} polygons for {B} queries")
+        bboxes = np.stack([polygon_bbox(p) for p in polygons])
+        ne = max(len(np.asarray(p).reshape(-1, 2)) for p in polygons)
+        neb = _bucket(ne, 4)
+        hps = np.stack([convex_halfplanes(p, pad_to=neb) for p in polygons])
+        Bb, rsoa_dev, _, qs, qe, cand_k = self._route_prune(us, bboxes)
+        # (B, 3, neb) -> (3*neb, Bb); padded batch lanes get inert
+        # half-planes (A=B=0, C=+inf) to match their impossible rects
+        lines = np.zeros((3 * neb, Bb), dtype=np.float32)
+        lines[2 * neb:] = np.inf
+        lines[:, :B] = hps.transpose(1, 2, 0).reshape(3 * neb, B)
+        hit = self._polygon_scan(cand_k, rsoa_dev, jnp.asarray(lines),
+                                 qs, qe, ne=neb)
+        out = np.asarray(hit)[:B] > 0
+        exc = self._excluded_host[us]
+        if exc.any():
+            for i in np.nonzero(exc)[0]:
+                out[i] = bool(points_in_polygon_region(
+                    self._coords_host[us[i]][None], bboxes[i], hps[i])[0])
+        return out
 
 
 def _unsupported_msg(index, what: str) -> str:

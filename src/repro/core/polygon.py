@@ -3,22 +3,31 @@
 "Without loss of generality, this paper assumes an axis-aligned rectangle
 for querying. However, the proposed method can be easily extended to
 handle other types of geometric objects, e.g., polygons."  This module
-makes that concrete for 2DReach: the R-tree probe runs with the
-polygon's bounding box (the MBR machinery is unchanged), candidate hits
-are then filtered by exact point-in-convex-polygon half-plane tests —
-all vectorised.
+makes that concrete for 2DReach with a *canonical* region predicate that
+every engine evaluates identically:
 
-    ans = polygon_query(index, u, vertices)      # (k, 2) CCW convex hull
+* a polygon is canonicalised once into its outward-rounded float32
+  bounding box plus CCW half-planes ``A*x + B*y <= C`` (coefficients
+  derived in float64, stored float32);
+* a point is inside the region iff it passes the bbox test *and* every
+  half-plane, all comparisons and arithmetic in float32 — the same ops
+  the Pallas leaf-scan kernel runs, so host, device and the NumPy
+  oracle are bit-identical by construction (see ``repro.queries``).
+
+The R-tree machinery is untouched: the probe runs with the bounding box
+(prefilter), candidates are postfiltered by the half-planes — and the
+batched engines push that postfilter into the leaf scan itself.
+
+    ans = polygon_query(index, u, vertices)      # (k, 2) convex hull
 """
 
 from __future__ import annotations
 
-from typing import Iterable
+from typing import Optional
 
 import numpy as np
 
 from .oracle import reachable_mask
-from .rtree import query_host_collect
 from .two_d_reach import TwoDReachIndex
 
 
@@ -33,7 +42,11 @@ def _ccw(vertices: np.ndarray) -> np.ndarray:
 
 def points_in_convex_polygon(pts: np.ndarray, vertices: np.ndarray
                              ) -> np.ndarray:
-    """(n, 2) points inside/on a convex polygon (any vertex order)."""
+    """(n, 2) points inside/on a convex polygon (any vertex order).
+
+    Float64 cross-product form with a small tolerance — kept for callers
+    that want the geometric test; the query path uses the canonical
+    float32 half-plane form below (``points_in_polygon_region``)."""
     v = _ccw(vertices)
     pts = np.asarray(pts, dtype=np.float64).reshape(-1, 2)
     inside = np.ones(len(pts), dtype=bool)
@@ -45,35 +58,104 @@ def points_in_convex_polygon(pts: np.ndarray, vertices: np.ndarray
     return inside
 
 
+def round_bounds_outward(lo: np.ndarray, hi: np.ndarray):
+    """Float64 lo/hi bound arrays -> float32 rounded *outward*: any
+    bound the round-to-nearest downcast moved inward is nudged one ulp
+    out (nextafter toward ±inf), so the f32 box always contains the f64
+    box.  The shared primitive behind every conservative f32 region
+    (polygon bboxes, the kNN driver's search boxes)."""
+    lo = np.asarray(lo, dtype=np.float64)
+    hi = np.asarray(hi, dtype=np.float64)
+    lo32 = lo.astype(np.float32)
+    hi32 = hi.astype(np.float32)
+    lo32 = np.where(lo32.astype(np.float64) > lo,
+                    np.nextafter(lo32, np.float32(-np.inf)), lo32)
+    hi32 = np.where(hi32.astype(np.float64) < hi,
+                    np.nextafter(hi32, np.float32(np.inf)), hi32)
+    return lo32, hi32
+
+
 def polygon_bbox(vertices: np.ndarray) -> np.ndarray:
-    v = np.asarray(vertices, dtype=np.float32).reshape(-1, 2)
-    return np.array(
-        [v[:, 0].min(), v[:, 1].min(), v[:, 0].max(), v[:, 1].max()],
-        dtype=np.float32,
+    """Outward-rounded float32 bounding box [xmin, ymin, xmax, ymax].
+
+    Min/max run in float64 *before* the float32 downcast and round
+    outward — a round-to-nearest cast can otherwise shrink the box past
+    a venue sitting exactly on the hull edge, and the R-tree prefilter
+    would drop a true hit.
+    """
+    v = np.asarray(vertices, dtype=np.float64).reshape(-1, 2)
+    lo32, hi32 = round_bounds_outward(v.min(axis=0), v.max(axis=0))
+    return np.array([lo32[0], lo32[1], hi32[0], hi32[1]], dtype=np.float32)
+
+
+# --------------------------------------------------------------------------
+# Canonical region form (shared by host paths, oracle and Pallas kernel)
+# --------------------------------------------------------------------------
+
+def convex_halfplanes(vertices: np.ndarray,
+                      pad_to: Optional[int] = None) -> np.ndarray:
+    """(3, E) float32 half-planes of a convex polygon: row 0 = A, row 1
+    = B, row 2 = C with inside ⟺ ``A*x + B*y <= C``.
+
+    Coefficients are derived in float64 from the CCW edge normals
+    (A = by - ay, B = ax - bx, C = A*ax + B*ay) and stored float32 —
+    the *evaluation* is float32 everywhere, which is what makes host,
+    oracle and kernel answers bit-identical.  ``pad_to`` appends inert
+    half-planes (A = B = 0, C = +inf: 0*x + 0*y = 0 <= inf for any
+    finite point) so batches bucket to a common edge count.
+    """
+    v = _ccw(vertices)
+    E = len(v)
+    if E < 3:
+        raise ValueError(f"polygon needs >= 3 vertices, got {E}")
+    nxt = np.roll(v, -1, axis=0)
+    A = nxt[:, 1] - v[:, 1]
+    B = v[:, 0] - nxt[:, 0]
+    C = A * v[:, 0] + B * v[:, 1]
+    hp = np.stack([A, B, C]).astype(np.float32)
+    if pad_to is not None:
+        if pad_to < E:
+            raise ValueError(f"pad_to={pad_to} < {E} polygon edges")
+        pad = np.zeros((3, pad_to - E), dtype=np.float32)
+        pad[2] = np.inf
+        hp = np.concatenate([hp, pad], axis=1)
+    return hp
+
+
+def points_in_polygon_region(pts: np.ndarray, bbox: np.ndarray,
+                             halfplanes: np.ndarray) -> np.ndarray:
+    """(n,) bool — the canonical float32 region test: inside the bbox
+    AND on the inner side of every half-plane.  Mirrors the Pallas
+    kernel op for op (f32 multiply, f32 add, compare), so the engines
+    agree bit for bit."""
+    pts = np.asarray(pts, dtype=np.float32).reshape(-1, 2)
+    x, y = pts[:, 0], pts[:, 1]
+    ok = (
+        (x >= bbox[0]) & (x <= bbox[2]) & (y >= bbox[1]) & (y <= bbox[3])
     )
+    hp = np.asarray(halfplanes, dtype=np.float32)
+    for e in range(hp.shape[1]):
+        ok = ok & ((hp[0, e] * x + hp[1, e] * y) <= hp[2, e])
+    return ok
 
 
 def polygon_query(index: TwoDReachIndex, u: int, vertices) -> bool:
-    """RangeReach with a convex polygon region (Alg. 2 + exact filter)."""
-    bbox = polygon_bbox(vertices)
-    if index.excluded[u]:
-        return bool(points_in_convex_polygon(
-            index.coords[u][None], vertices)[0])
-    tid = int(index.lookup_tree(np.array([u]))[0])
-    if tid < 0:
-        return False
-    # bbox prefilter through the R-tree, exact half-plane postfilter
-    cand = query_host_collect(index.forest, tid, bbox)
-    if len(cand) == 0:
-        return False
-    return bool(points_in_convex_polygon(
-        index.coords[cand], vertices).any())
+    """RangeReach with a convex polygon region (Alg. 2 + exact filter).
+
+    Scalar convenience wrapper over the batched subsystem
+    (:func:`repro.queries.polygon_reach_host`) — one query, host path.
+    """
+    from ..queries import polygon_reach_host  # deferred: queries imports core
+
+    return bool(polygon_reach_host(index, np.array([u]), [vertices])[0])
 
 
 def polygon_oracle(graph, u: int, vertices) -> bool:
+    """BFS ground truth under the canonical region predicate."""
     seen = reachable_mask(graph, u)
     ids = np.nonzero(seen & graph.spatial_mask)[0]
     if len(ids) == 0:
         return False
-    return bool(points_in_convex_polygon(
-        graph.coords[ids], vertices).any())
+    return bool(points_in_polygon_region(
+        graph.coords[ids], polygon_bbox(vertices),
+        convex_halfplanes(vertices)).any())

@@ -6,11 +6,16 @@ from .pipeline import ShardInfo, din_batches, lm_batches, molecule_batches
 from .queries import (
     DEGREE_BUCKETS,
     DEGREE_DEFAULT,
+    KNN_DEFAULT_K,
+    POLYGON_EDGE_VALUES,
+    POLYGON_EDGES_DEFAULT,
     REGION_EXTENT_DEFAULT,
     REGION_EXTENT_VALUES,
     SELECTIVITY_VALUES,
     STREAM_OP_KINDS,
     apply_stream_op,
+    knn_workload,
+    polygon_workload,
     streaming_workload,
     workload,
 )

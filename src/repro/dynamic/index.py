@@ -278,8 +278,7 @@ class DynamicIndex:
         with self._lock:
             self.stats["n_queries"] += B
             overlay = self._overlay
-            if us.size and (us.min() < 0 or us.max() >= overlay.n_nodes):
-                raise IndexError("query vertex out of range")
+            self._check_query_range(us)
             ans = np.zeros(B, dtype=bool)
             base_mask = us < overlay.n_base
             if base_mask.any():
@@ -324,6 +323,298 @@ class DynamicIndex:
 
     def query(self, u: int, rect) -> bool:
         return bool(self.query_batch(np.array([u]), np.array([rect]))[0])
+
+    # -- analytics query classes (repro.queries over base ∪ overlay) ----
+    #
+    # Each class decomposes like the boolean query: a base probe through
+    # the static index (device engine when configured), an overlay
+    # expansion yielding the extra entry components whose base reach only
+    # delta edges open, and the staged-venue side.  Staged venues are
+    # disjoint from base venues (staging holds only vertices that were
+    # not spatial in the base snapshot), so *counts add* across the two
+    # sides; multiple base probes can overlap, so whenever entry probes
+    # exist the base side switches to an uncapped *collect union*
+    # (exact dedup) instead of adding counts.  kNN heap-merges the base
+    # candidates against the staged side.
+
+    def _require_2dreach(self, what: str) -> None:
+        if not self.method.startswith("2dreach"):
+            raise ValueError(
+                f"no {what!r} query class for DynamicIndex over method "
+                f"{self.method!r}: the analytics classes serve the "
+                f"2DReach variants only")
+
+    def _check_query_range(self, us: np.ndarray) -> None:
+        if us.size and (us.min() < 0
+                        or us.max() >= self._overlay.n_nodes):
+            raise IndexError("query vertex out of range")
+
+    def _staged_arrays(self):
+        st = self._overlay.staging
+        return (np.asarray(st.ids, dtype=np.int64), st.coords_of())
+
+    def _staged_reached_mask(self, sid: np.ndarray, reached, new_reached
+                             ) -> np.ndarray:
+        n_base = self._overlay.n_base
+        keep = np.zeros(len(sid), dtype=bool)
+        base = sid < n_base
+        if base.any():
+            keep[base] = np.isin(self._comp[sid[base]], reached)
+        for j in np.nonzero(~base)[0]:
+            keep[j] = int(sid[j]) in new_reached
+        return keep
+
+    def _merge_probes(self, u: int, is_base: bool):
+        """(expansion, extra entry probes) for one query vertex — the
+        entry list minus the component the step-1 base probe covers."""
+        reached, new_reached, entries = self._expand_from(int(u))
+        cu = int(self._comp[u]) if is_base else -1
+        extra = [int(t) for t in entries if int(self._comp[t]) != cu]
+        return reached, new_reached, extra
+
+    def _base_analytics(self, method: str):
+        """Bound base-probe callable: the device engine's batched class
+        when the engine exposes it, the host descent otherwise (the
+        cluster ShardedEngine serves boolean only)."""
+        from ..queries import host as qhost
+
+        eng = self._base_engine
+        if eng is not None and hasattr(eng, method):
+            return getattr(eng, method)
+        return {
+            "count_batch": lambda us, rects: qhost.range_count_host(
+                self._index, us, rects),
+            "collect_batch": lambda us, rects, k: qhost.range_collect_host(
+                self._index, us, rects, k),
+            "polygon_batch": lambda us, polys: qhost.polygon_reach_host(
+                self._index, us, polys),
+        }[method]
+
+    def count_batch(self, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
+        """Exact RangeCount over the mutated graph: (B,) int64."""
+        self._require_2dreach("count")
+        from ..queries.host import _point_in_rect, collect_csr_host
+
+        us = np.asarray(us, dtype=np.int64)
+        B = len(us)
+        rects = np.asarray(rects, dtype=np.float32).reshape(B, 4)
+        with self._lock:
+            self.stats["n_queries"] += B
+            overlay = self._overlay
+            self._check_query_range(us)
+            ans = np.zeros(B, dtype=np.int64)
+            base_mask = us < overlay.n_base
+            if base_mask.any():
+                ans[base_mask] = self._base_analytics("count_batch")(
+                    us[base_mask], rects[base_mask])
+            if overlay.is_empty():
+                return ans
+            sid, scoord = self._staged_arrays()
+            for i in range(B):
+                reached, new_reached, extra = self._merge_probes(
+                    int(us[i]), bool(base_mask[i]))
+                st = np.zeros(0, dtype=np.int64)
+                if len(sid):
+                    inr = _point_in_rect(scoord, rects[i][None])
+                    st = sid[inr & self._staged_reached_mask(
+                        sid, reached, new_reached)]
+                if not extra:
+                    ans[i] += len(st)     # staged ∩ base venues = ∅
+                    continue
+                probes = ([int(us[i])] if base_mask[i] else []) + extra
+                _, ids = collect_csr_host(
+                    self._index, np.asarray(probes, dtype=np.int64),
+                    np.tile(rects[i], (len(probes), 1)))
+                ans[i] = len(np.unique(ids)) + len(st)
+            return ans
+
+    def collect_batch(self, us: np.ndarray, rects: np.ndarray, k: int):
+        """Exact RangeCollect over the mutated graph (K smallest ids,
+        exact totals, overflow flags)."""
+        self._require_2dreach("collect")
+        from ..queries.host import _point_in_rect, collect_csr_host
+        from ..queries.program import CollectResult
+
+        us = np.asarray(us, dtype=np.int64)
+        B = len(us)
+        k = int(k)
+        if k < 1:
+            raise ValueError(f"collect needs k >= 1, got {k}")
+        rects = np.asarray(rects, dtype=np.float32).reshape(B, 4)
+        with self._lock:
+            self.stats["n_queries"] += B
+            overlay = self._overlay
+            self._check_query_range(us)
+            ids = np.full((B, k), -1, dtype=np.int32)
+            counts = np.zeros(B, dtype=np.int64)
+            base_mask = us < overlay.n_base
+            if base_mask.any():
+                br = self._base_analytics("collect_batch")(
+                    us[base_mask], rects[base_mask], k)
+                ids[base_mask] = br.ids
+                counts[base_mask] = br.counts
+            if overlay.is_empty():
+                return CollectResult(ids=ids, counts=counts,
+                                     overflow=counts > k)
+            sid, scoord = self._staged_arrays()
+            for i in range(B):
+                reached, new_reached, extra = self._merge_probes(
+                    int(us[i]), bool(base_mask[i]))
+                st = np.zeros(0, dtype=np.int64)
+                if len(sid):
+                    inr = _point_in_rect(scoord, rects[i][None])
+                    st = sid[inr & self._staged_reached_mask(
+                        sid, reached, new_reached)]
+                if not extra and len(st) == 0:
+                    continue
+                if not extra:
+                    # K smallest of (base K-smallest ∪ staged) = the
+                    # union's K smallest; totals add (disjoint sides)
+                    row = np.sort(np.concatenate(
+                        [ids[i][ids[i] >= 0].astype(np.int64), st]))[:k]
+                    counts[i] += len(st)
+                else:
+                    probes = ([int(us[i])] if base_mask[i] else []) + extra
+                    _, base_ids = collect_csr_host(
+                        self._index, np.asarray(probes, dtype=np.int64),
+                        np.tile(rects[i], (len(probes), 1)))
+                    merged = np.unique(np.concatenate(
+                        [base_ids.astype(np.int64), st]))
+                    counts[i] = len(merged)
+                    row = merged[:k]
+                ids[i] = -1
+                ids[i, : len(row)] = row
+            return CollectResult(ids=ids, counts=counts, overflow=counts > k)
+
+    def knn_batch(self, us: np.ndarray, points: np.ndarray, k: int):
+        """Exact KNNReach over the mutated graph: the k nearest
+        reachable venues by (dist², id), heap-merging base-probe
+        candidates with the staged-venue side."""
+        self._require_2dreach("knn")
+        from ..queries.knn import _pt_d2, knn_reach_host
+        from ..queries.program import KNNResult
+
+        us = np.asarray(us, dtype=np.int64)
+        B = len(us)
+        k = int(k)
+        if k < 1:
+            raise ValueError(f"knn needs k >= 1, got {k}")
+        points = np.asarray(points, dtype=np.float32).reshape(B, 2)
+        with self._lock:
+            self.stats["n_queries"] += B
+            overlay = self._overlay
+            self._check_query_range(us)
+            res = KNNResult(
+                ids=np.full((B, k), -1, dtype=np.int32),
+                dist2=np.full((B, k), np.inf, dtype=np.float64),
+            )
+            base_mask = us < overlay.n_base
+            eng = self._base_engine
+            use_eng = eng is not None and hasattr(eng, "knn_batch")
+
+            def base_knn(pu, pp):
+                if use_eng:
+                    return eng.knn_batch(pu, pp, k)
+                return knn_reach_host(self._index, pu, pp, k)
+
+            if base_mask.any() and overlay.is_empty():
+                br = base_knn(us[base_mask], points[base_mask])
+                res.ids[base_mask] = br.ids
+                res.dist2[base_mask] = br.dist2
+                return res
+            sid, scoord = self._staged_arrays()
+            # one batched base probe covering every (query, entry) pair
+            probe_qi, probe_us = [], []
+            probe_rows: List[List[int]] = [[] for _ in range(B)]
+            ctxs = []
+            for i in range(B):
+                reached, new_reached, extra = self._merge_probes(
+                    int(us[i]), bool(base_mask[i]))
+                ctxs.append((reached, new_reached, extra))
+                mine = ([int(us[i])] if base_mask[i] else []) + extra
+                for t in mine:
+                    probe_rows[i].append(len(probe_us))
+                    probe_qi.append(i)
+                    probe_us.append(t)
+            if probe_us:
+                br = base_knn(np.asarray(probe_us, dtype=np.int64),
+                              points[np.asarray(probe_qi)])
+            for i in range(B):
+                cand_ids, cand_d2 = [], []
+                for j in probe_rows[i]:
+                    keep = br.ids[j] >= 0
+                    cand_ids.append(br.ids[j][keep].astype(np.int64))
+                    cand_d2.append(br.dist2[j][keep])
+                reached, new_reached, _ = ctxs[i]
+                if len(sid):
+                    keep = self._staged_reached_mask(
+                        sid, reached, new_reached)
+                    if keep.any():
+                        cand_ids.append(sid[keep])
+                        cand_d2.append(_pt_d2(scoord[keep], points[i]))
+                if not cand_ids:
+                    continue
+                ci = np.concatenate(cand_ids)
+                cd = np.concatenate(cand_d2)
+                ci, first = np.unique(ci, return_index=True)  # dedup probes
+                cd = cd[first]
+                order = np.lexsort((ci, cd))[:k]
+                res.ids[i, : len(order)] = ci[order]
+                res.dist2[i, : len(order)] = cd[order]
+            return res
+
+    def polygon_batch(self, us: np.ndarray, polygons) -> np.ndarray:
+        """Exact convex-polygon RangeReach over the mutated graph."""
+        self._require_2dreach("polygon")
+        from ..core.polygon import (
+            convex_halfplanes,
+            points_in_polygon_region,
+            polygon_bbox,
+        )
+
+        us = np.asarray(us, dtype=np.int64)
+        B = len(us)
+        if len(polygons) != B:
+            raise ValueError(f"{len(polygons)} polygons for {B} queries")
+        with self._lock:
+            self.stats["n_queries"] += B
+            overlay = self._overlay
+            self._check_query_range(us)
+            ans = np.zeros(B, dtype=bool)
+            base_mask = us < overlay.n_base
+            base_poly = self._base_analytics("polygon_batch")
+            if base_mask.any():
+                ans[base_mask] = base_poly(
+                    us[base_mask], [polygons[i]
+                                    for i in np.nonzero(base_mask)[0]])
+            if overlay.is_empty():
+                return ans
+            sid, scoord = self._staged_arrays()
+            # one batched base probe for every (query, entry) pair, as
+            # the boolean path does with extra_qi/extra_u
+            extra_qi, extra_us, extra_polys = [], [], []
+            for i in range(B):
+                if ans[i]:
+                    continue
+                reached, new_reached, extra = self._merge_probes(
+                    int(us[i]), bool(base_mask[i]))
+                if len(sid):
+                    keep = self._staged_reached_mask(
+                        sid, reached, new_reached)
+                    if keep.any() and points_in_polygon_region(
+                            scoord[keep], polygon_bbox(polygons[i]),
+                            convex_halfplanes(polygons[i])).any():
+                        ans[i] = True
+                        continue
+                for t in extra:
+                    extra_qi.append(i)
+                    extra_us.append(t)
+                    extra_polys.append(polygons[i])
+            if extra_us:
+                got = base_poly(
+                    np.asarray(extra_us, dtype=np.int64), extra_polys)
+                np.logical_or.at(ans, np.asarray(extra_qi), got)
+            return ans
 
     # -- compaction -----------------------------------------------------
 

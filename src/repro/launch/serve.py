@@ -23,6 +23,13 @@ percentiles (p50/p95/p99) — batch-amortised for the batched engines,
 true per-request submit→resolve latency for the cluster frontend.  The
 cluster arm additionally asserts the steady-state no-recompile
 contract after a warm pass.
+
+``--query-class count|collect|knn|polygon`` serves one of the
+analytics classes (:mod:`repro.queries`) instead of boolean RangeReach
+— host or device engine, answers oracle-gated and (device)
+bit-identical to host:
+
+    python -m repro.launch.serve --query-class knn --engine device --k 10
 """
 
 from __future__ import annotations
@@ -157,6 +164,96 @@ def _serve_cluster(index, us, rects, args):
         fe.close()
 
 
+def _serve_query_class(index, g, args):
+    """Analytics query-class serving (count / collect / knn / polygon)
+    through ``core.api.run_queries`` — host or device engine, answers
+    gated against the BFS oracle and (device) against the host path."""
+    from ..core import run_queries
+    from ..core.oracle import (
+        knn_reach_oracle,
+        polygon_reach_oracle,
+        range_collect_oracle,
+        range_count_oracle,
+    )
+    from ..data import knn_workload, polygon_workload
+    from ..queries import QueryProgram
+
+    if args.engine not in ("host", "device"):
+        raise SystemExit(
+            f"--query-class {args.query_class} serves on --engine "
+            f"host|device (cluster serving is boolean RangeReach only)")
+    n = args.queries
+    kind = args.query_class
+    points = polys = rects = None
+    if kind == "knn":
+        us, points = knn_workload(g, n, seed=1)
+    elif kind == "polygon":
+        us, polys = polygon_workload(g, n, extent_ratio=args.extent, seed=1)
+    else:
+        us, rects = workload(g, n_queries=n, extent_ratio=args.extent,
+                             seed=1)
+
+    def prog(lo, hi):
+        if kind == "knn":
+            return QueryProgram.knn(us[lo:hi], points[lo:hi], args.k)
+        if kind == "polygon":
+            return QueryProgram.polygon(us[lo:hi], polys[lo:hi])
+        if kind == "count":
+            return QueryProgram.count(us[lo:hi], rects[lo:hi])
+        return QueryProgram.collect(us[lo:hi], rects[lo:hi], args.k)
+
+    host = run_queries(index, prog(0, n), engine="host")
+    if args.verify:
+        kv = min(args.verify, n)
+        for b in range(kv):
+            u = int(us[b])
+            if kind == "count":
+                assert host[b] == range_count_oracle(g, u, rects[b])
+            elif kind == "collect":
+                want = range_collect_oracle(g, u, rects[b])
+                assert host.counts[b] == len(want)
+                assert (host.row(b) == want[: args.k]).all()
+            elif kind == "knn":
+                oi, _ = knn_reach_oracle(g, u, points[b], args.k)
+                assert (host.row(b) == oi).all()
+            else:
+                assert host[b] == polygon_reach_oracle(g, u, polys[b])
+        print(f"[serve] verified {kv} {kind} queries vs BFS oracle")
+    if args.engine == "device":
+        dev = run_queries(index, prog(0, n), engine="device")
+        if kind in ("count", "polygon"):
+            ok = (dev == host).all()
+        elif kind == "collect":
+            ok = ((dev.ids == host.ids).all()
+                  and (dev.counts == host.counts).all()
+                  and (dev.overflow == host.overflow).all())
+        else:
+            ok = ((dev.ids == host.ids).all()
+                  and (dev.dist2 == host.dist2).all())
+        assert ok, f"device {kind} answers diverge from host"
+        print(f"[serve] device {kind} answers bit-identical to host")
+
+    def run(lo, hi):
+        return run_queries(index, prog(lo, hi), engine=args.engine)
+
+    run(0, min(args.batch, n))                 # warmup / compile
+    if n % args.batch:
+        run(n - n % args.batch, n)             # ... and the ragged tail
+    lats = np.zeros(n, dtype=np.float64)
+    total = 0.0
+    for lo in range(0, n, args.batch):
+        hi = min(lo + args.batch, n)
+        t0 = time.perf_counter()
+        run(lo, hi)
+        dt = time.perf_counter() - t0
+        lats[lo:hi] = dt / (hi - lo)
+        total += dt
+    pct = _percentiles(lats)
+    print(f"[serve] {args.engine} {kind}: {n} queries in "
+          f"{total * 1e3:.1f} ms ({total / n * 1e6:.2f} us/query mean), "
+          f"{_fmt_pct(pct)}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="yelp")
@@ -167,6 +264,12 @@ def main():
     ap.add_argument("--engine", default="host",
                     choices=("host", "wavefront", "kernel", "device",
                              "cluster"))
+    ap.add_argument("--query-class", default="reach", dest="query_class",
+                    choices=("reach", "count", "collect", "knn", "polygon"),
+                    help="query class to serve (see repro.queries); "
+                         "non-reach classes run on host|device engines")
+    ap.add_argument("--k", type=int, default=10,
+                    help="collect cap / knn neighbour count")
     ap.add_argument("--batch", type=int, default=256,
                     help="serving batch size (keep it a power of two "
                          "to reuse the engines' compiled buckets)")
@@ -189,6 +292,10 @@ def main():
     index = build_index(g, args.method)
     print(f"[serve] built {args.method} in {time.perf_counter() - t0:.2f}s; "
           f"size {index_nbytes(index)['total'] / 1e6:.1f} MB")
+
+    if args.query_class != "reach":
+        _serve_query_class(index, g, args)
+        return
 
     us, rects = workload(g, n_queries=args.queries,
                          extent_ratio=args.extent, seed=1)

@@ -1,0 +1,40 @@
+"""Geosocial analytics query subsystem — beyond boolean RangeReach.
+
+The paper answers one sentence: ``bool RangeReach(u, rect)``.  Its
+footnote 2 ("the proposed method can be easily extended to handle other
+types of geometric objects") and the GeoReach/TopCom framing of spatial
+reachability as one member of a query *family* motivate four exact
+analytics classes over every 2DReach variant:
+
+* **RangeCount**    — how many reachable venues intersect the region;
+* **RangeCollect**  — materialise the K smallest reachable venue ids in
+  the region (exact totals + overflow flags);
+* **KNNReach**      — the k nearest reachable venues to a point (host
+  best-first branch-and-bound / device radius-doubling over
+  count+collect);
+* **polygon RangeReach** — convex-polygon regions, the half-plane
+  postfilter pushed into the leaf scan.
+
+Every class has a NumPy oracle (:mod:`repro.core.oracle`), a host path
+(this package) and a compile-once device path
+(:class:`~repro.core.engine.QueryEngine` methods over the
+:mod:`repro.kernels.range_query.analytics` kernels) that answer
+bit-identically.  Entry point: ``core.api.run_queries(index, program)``
+with a :class:`QueryProgram`.
+"""
+
+from .host import (
+    collect_csr_host,
+    polygon_reach_host,
+    range_collect_host,
+    range_count_host,
+)
+from .knn import knn_radius_doubling, knn_reach_host, outward_rect
+from .program import QUERY_KINDS, CollectResult, KNNResult, QueryProgram
+
+__all__ = [
+    "QUERY_KINDS", "CollectResult", "KNNResult", "QueryProgram",
+    "collect_csr_host", "polygon_reach_host", "range_collect_host",
+    "range_count_host",
+    "knn_radius_doubling", "knn_reach_host", "outward_rect",
+]

@@ -1,0 +1,169 @@
+"""KNNReach — k nearest *reachable* venues to a query point.
+
+Two engines, one canonical answer (the exact k nearest by ``(dist²,
+vertex id)`` ascending, distances float64 over the float32 coords):
+
+* **host** (:func:`knn_reach_host`) — classic best-first branch-and-
+  bound over the packed R-tree (``core.rtree.query_host_knn``): a
+  priority queue of nodes ordered by mindist² lower bounds, popped
+  until no subtree can beat the running kth distance.
+
+* **device** (:func:`knn_radius_doubling`) — a radius-doubling loop
+  over the engine's compile-once RangeCount/RangeCollect: grow a square
+  region around the query point until it counts >= k reachable venues
+  (or provably covers the whole venue extent), bound the kth distance
+  by the box diagonal, then collect *every* venue inside the bounding
+  disk's box and select the exact top-k by true distance.  All boxes
+  are rounded outward (float64 -> float32 nextafter) so the candidate
+  superset provably contains the true top-k; the final NumPy selection
+  makes the answer bit-identical to the host descent.
+
+Both resolve the Alg. 2 spatial-sink special case first: an excluded
+query vertex reaches exactly itself.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.polygon import round_bounds_outward
+from ..core.rtree import query_host_knn
+from ..core.two_d_reach import TwoDReachIndex
+from .program import KNNResult
+
+_MAX_DOUBLINGS = 128
+
+
+def outward_rect(lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """(B, 2) float64 lo/hi -> (B, 4) float32 rects rounded outward
+    (:func:`repro.core.polygon.round_bounds_outward`), so the f32 box
+    always contains the intended f64 box."""
+    lo32, hi32 = round_bounds_outward(lo, hi)
+    return np.concatenate([lo32, hi32], axis=1).astype(np.float32)
+
+
+def _pt_d2(coords: np.ndarray, p: np.ndarray) -> np.ndarray:
+    """Canonical squared distances: float64 over float32 coords, x term
+    then y term — the exact op order of the R-tree descent."""
+    dx = coords[:, 0].astype(np.float64) - float(p[0])
+    dy = coords[:, 1].astype(np.float64) - float(p[1])
+    return dx * dx + dy * dy
+
+
+def _empty(B: int, k: int) -> KNNResult:
+    return KNNResult(
+        ids=np.full((B, k), -1, dtype=np.int32),
+        dist2=np.full((B, k), np.inf, dtype=np.float64),
+    )
+
+
+def knn_reach_host(index: TwoDReachIndex, us: np.ndarray,
+                   points: np.ndarray, k: int) -> KNNResult:
+    """Host KNNReach: per-query best-first branch-and-bound descent."""
+    us = np.asarray(us, dtype=np.int64)
+    B = len(us)
+    k = int(k)
+    if k < 1:
+        raise ValueError(f"knn needs k >= 1, got {k}")
+    points = np.asarray(points, dtype=np.float32).reshape(B, 2)
+    res = _empty(B, k)
+    exc = index.excluded[us]
+    for b in range(B):
+        if exc[b]:
+            res.ids[b, 0] = us[b]
+            res.dist2[b, 0] = _pt_d2(
+                index.coords[us[b]][None], points[b])[0]
+            continue
+        tid = int(index.lookup_tree(us[b:b + 1])[0])
+        ids, d2 = query_host_knn(index.forest, tid, points[b], k)
+        res.ids[b, : len(ids)] = ids
+        res.dist2[b, : len(d2)] = d2
+    return res
+
+
+def knn_radius_doubling(engine, us: np.ndarray, points: np.ndarray,
+                        k: int) -> KNNResult:
+    """Device KNNReach over a :class:`~repro.core.engine.QueryEngine`'s
+    count/collect kernels (see module docstring)."""
+    us = np.asarray(us, dtype=np.int64)
+    B = len(us)
+    k = int(k)
+    if k < 1:
+        raise ValueError(f"knn needs k >= 1, got {k}")
+    points = np.asarray(points, dtype=np.float32).reshape(B, 2)
+    res = _empty(B, k)
+    if B == 0:
+        return res
+    exc = engine._excluded_host[us]
+    for b in np.nonzero(exc)[0]:
+        res.ids[b, 0] = us[b]
+        res.dist2[b, 0] = _pt_d2(
+            engine._coords_host[us[b]][None], points[b])[0]
+    rest = np.nonzero(~exc)[0]
+    ext = engine._extent_host
+    if rest.size == 0 or ext is None:
+        return res       # no venues at all — every tree probe is empty
+
+    # ---- phase 1: double the count box until it holds k venues -------
+    n = len(rest)
+    p = points[rest].astype(np.float64)
+    span = max(float(ext[2] - ext[0]), float(ext[3] - ext[1]), 1e-6)
+    r = np.full(n, span / 2 ** 16, dtype=np.float64)
+    resolved = np.zeros(n, dtype=bool)
+    final_rects = np.zeros((n, 4), dtype=np.float32)
+    for _ in range(_MAX_DOUBLINGS):
+        rects = outward_rect(p - r[:, None], p + r[:, None])
+        counts = engine.count_batch(us[rest], rects)
+        covers = (
+            (rects[:, 0].astype(np.float64) <= ext[0])
+            & (rects[:, 1].astype(np.float64) <= ext[1])
+            & (rects[:, 2].astype(np.float64) >= ext[2])
+            & (rects[:, 3].astype(np.float64) >= ext[3])
+        )
+        newly = ~resolved & ((counts >= k) | covers)
+        if newly.any():
+            idx = np.nonzero(newly)[0]
+            cov = idx[covers[idx]]
+            # a covering box already holds the whole venue set
+            final_rects[cov] = rects[cov]
+            cnt = idx[~covers[idx]]
+            if cnt.size:
+                # kth distance <= diagonal of the box's true half-widths
+                # (from the f32 bounds actually counted, so the bound
+                # survives the outward rounding)
+                hwx = np.maximum(p[cnt, 0] - rects[cnt, 0],
+                                 rects[cnt, 2].astype(np.float64) - p[cnt, 0])
+                hwy = np.maximum(p[cnt, 1] - rects[cnt, 1],
+                                 rects[cnt, 3].astype(np.float64) - p[cnt, 1])
+                R = np.sqrt(hwx * hwx + hwy * hwy)
+                final_rects[cnt] = outward_rect(
+                    p[cnt] - R[:, None], p[cnt] + R[:, None])
+            resolved |= newly
+        if resolved.all():
+            break
+        r = np.where(resolved, r, r * 2)
+    else:
+        raise RuntimeError("kNN radius doubling failed to converge")
+
+    # ---- phase 2: collect every candidate in the bounding box --------
+    # collect totals are exact even when capped, so one overflow is
+    # enough to jump the cap straight to the largest box population;
+    # the cap rides a per-engine high-water mark so it only ratchets up
+    # and a smaller later batch never traces a new collect shape
+    kcap = max(getattr(engine, "_knn_kcap_hwm", 1), k)
+    col = engine.collect_batch(us[rest], final_rects, kcap)
+    if col.overflow.any():
+        kcap = max(kcap, int(col.counts.max()))
+        col = engine.collect_batch(us[rest], final_rects, kcap)
+    engine._knn_kcap_hwm = kcap
+
+    # ---- exact final selection (shared with the host path) -----------
+    for j, b in enumerate(rest):
+        cand = col.row(j)
+        if cand.size == 0:
+            continue
+        d2 = _pt_d2(engine._coords_host[cand], points[b])
+        order = np.lexsort((cand, d2))[:k]
+        res.ids[b, : len(order)] = cand[order]
+        res.dist2[b, : len(order)] = d2[order]
+    return res

@@ -1,0 +1,552 @@
+"""The repro.queries analytics subsystem: count / collect / kNN-Reach /
+polygon regions — oracle-checked across the three 2DReach variants,
+host vs device bit-identity, edge cases, kernel units, the dynamic
+overlay merges, and the compile-once contract."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import QueryEngine, build_2dreach, run_queries
+from repro.core.engine import engine_for
+from repro.core.graph import make_graph
+from repro.core.oracle import (
+    knn_reach_oracle,
+    polygon_reach_oracle,
+    range_collect_oracle,
+    range_count_oracle,
+)
+from repro.core.polygon import (
+    convex_halfplanes,
+    points_in_polygon_region,
+    polygon_bbox,
+    polygon_query,
+)
+from repro.data import (
+    get_dataset,
+    knn_workload,
+    polygon_workload,
+    workload,
+)
+from repro.kernels.range_query.analytics import (
+    ID_SENTINEL,
+    collect_scan_ref,
+    count_scan_ref,
+    polygon_scan_ref,
+)
+from repro.kernels.range_query.kernel import TB, TP
+from repro.queries import (
+    QueryProgram,
+    knn_reach_host,
+    polygon_reach_host,
+    range_collect_host,
+    range_count_host,
+)
+
+VARIANTS = ("base", "comp", "pointer")
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return get_dataset("yelp", scale=0.05)
+
+
+@pytest.fixture(scope="module")
+def indexes(graph):
+    return {v: build_2dreach(graph, variant=v) for v in VARIANTS}
+
+
+@pytest.fixture(scope="module")
+def engines(indexes):
+    return {v: QueryEngine(idx) for v, idx in indexes.items()}
+
+
+def _polygons(g, n, seed, n_edges=5):
+    _, polys = polygon_workload(g, n, n_edges=n_edges, seed=seed)
+    return polys
+
+
+def _assert_collect_equal(a, b):
+    assert (a.ids == b.ids).all()
+    assert (a.counts == b.counts).all()
+    assert (a.overflow == b.overflow).all()
+
+
+def _assert_knn_equal(a, b):
+    assert (a.ids == b.ids).all()
+    assert (a.dist2 == b.dist2).all()
+
+
+# ------------------------------------------------------------- exactness
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_count_oracle_and_device(graph, indexes, engines, variant):
+    idx, eng = indexes[variant], engines[variant]
+    for seed in range(3):
+        us, rects = workload(graph, 100, extent_ratio=0.05, seed=seed)
+        host = range_count_host(idx, us, rects)
+        want = np.array([range_count_oracle(graph, int(u), r)
+                         for u, r in zip(us, rects)])
+        assert (host == want).all()
+        dev = eng.count_batch(us, rects)
+        assert dev.dtype == np.int64 and (dev == host).all()
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("k", [1, 3, 16])
+def test_collect_oracle_and_device(graph, indexes, engines, variant, k):
+    idx, eng = indexes[variant], engines[variant]
+    us, rects = workload(graph, 100, extent_ratio=0.05, seed=k)
+    host = range_collect_host(idx, us, rects, k)
+    dev = eng.collect_batch(us, rects, k)
+    _assert_collect_equal(host, dev)
+    for b in range(len(us)):
+        want = range_collect_oracle(graph, int(us[b]), rects[b])
+        assert host.counts[b] == len(want)
+        assert (host.row(b) == want[:k]).all()   # K smallest, ascending
+        assert host.overflow[b] == (len(want) > k)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_knn_oracle_and_device(graph, indexes, engines, variant):
+    idx, eng = indexes[variant], engines[variant]
+    us, points = knn_workload(graph, 64, seed=7)
+    for k in (1, 5):
+        host = knn_reach_host(idx, us, points, k)
+        dev = eng.knn_batch(us, points, k)
+        _assert_knn_equal(host, dev)
+        for b in range(len(us)):
+            oi, od2 = knn_reach_oracle(graph, int(us[b]), points[b], k)
+            assert (host.row(b) == oi).all()
+            assert (host.dist2[b, : len(od2)] == od2).all()
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_polygon_oracle_and_device(graph, indexes, engines, variant):
+    idx, eng = indexes[variant], engines[variant]
+    us, _ = workload(graph, 80, extent_ratio=0.05, seed=3)
+    polys = _polygons(graph, 80, seed=4)
+    host = polygon_reach_host(idx, us, polys)
+    want = np.array([polygon_reach_oracle(graph, int(u), p)
+                     for u, p in zip(us, polys)])
+    assert (host == want).all()
+    dev = eng.polygon_batch(us, polys)
+    assert (dev == host).all()
+    assert want.any(), "workload should produce some polygon hits"
+
+
+def test_polygon_mixed_edge_counts(graph, indexes, engines):
+    """Batches mixing polygon sizes bucket to one edge count and stay
+    exact (inert half-plane padding)."""
+    idx, eng = indexes["comp"], engines["comp"]
+    rng = np.random.default_rng(9)
+    us, _ = workload(graph, 30, extent_ratio=0.05, seed=9)
+    polys = []
+    for b in range(30):
+        polys.append(_polygons(graph, 1, seed=100 + b,
+                               n_edges=int(rng.integers(3, 9)))[0])
+    host = polygon_reach_host(idx, us, polys)
+    assert (eng.polygon_batch(us, polys) == host).all()
+    for b in range(len(us)):
+        assert host[b] == polygon_reach_oracle(graph, int(us[b]), polys[b])
+
+
+# ------------------------------------------------------------- edge cases
+def _tiny_graph():
+    # 0 -> 1 (venue), 2 isolated user, 3 isolated venue, 4 excluded-ish
+    edges = np.array([[0, 1], [4, 1]], dtype=np.int64)
+    coords = np.array([[0, 0], [1, 1], [0, 0], [5, 5], [0, 0]], np.float32)
+    spatial = np.array([False, True, False, True, False])
+    return make_graph(5, edges, coords, spatial)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_edge_cases_all_classes(variant):
+    """Empty trees (tid -1), excluded spatial-sink query vertices and
+    isolated venues answer correctly on every class."""
+    g = _tiny_graph()
+    idx = build_2dreach(g, variant=variant)
+    eng = QueryEngine(idx)
+    us = np.array([0, 2, 3, 1])
+    rects = np.array([[0.5, 0.5, 1.5, 1.5]] * 4, np.float32)
+    # count
+    want_c = np.array([range_count_oracle(g, int(u), r)
+                       for u, r in zip(us, rects)])
+    assert (range_count_host(idx, us, rects) == want_c).all()
+    assert (eng.count_batch(us, rects) == want_c).all()
+    assert want_c[0] == 1 and want_c[1] == 0
+    # collect
+    host = range_collect_host(idx, us, rects, 2)
+    _assert_collect_equal(host, eng.collect_batch(us, rects, 2))
+    assert host.row(0).tolist() == [1] and host.row(1).size == 0
+    # knn: vertex 3 (isolated venue) is excluded under comp/pointer and
+    # reaches only itself; vertex 2 reaches nothing
+    pts = np.zeros((4, 2), np.float32)
+    hk = knn_reach_host(idx, us, pts, 2)
+    _assert_knn_equal(hk, eng.knn_batch(us, pts, 2))
+    for b in range(4):
+        oi, _ = knn_reach_oracle(g, int(us[b]), pts[b], 2)
+        assert (hk.row(b) == oi).all()
+    assert hk.row(1).size == 0 and hk.row(2).tolist() == [3]
+    # polygon
+    tri = np.array([[0.5, 0.5], [1.5, 0.5], [1.0, 1.5]], np.float32)
+    polys = [tri] * 4
+    hp = polygon_reach_host(idx, us, polys)
+    assert (eng.polygon_batch(us, polys) == hp).all()
+    for b in range(4):
+        assert hp[b] == polygon_reach_oracle(g, int(us[b]), polys[b])
+
+
+def test_knn_duplicate_coordinate_ties():
+    """Venues stacked on identical coordinates tie in distance; the
+    canonical (dist², id) order resolves them identically on host,
+    device and oracle."""
+    n, nv = 20, 8
+    coords = np.zeros((n, 2), np.float32)
+    coords[:nv] = np.array([1.0, 1.0], np.float32)   # all venues stacked
+    coords[2] = [1.0, 1.0]
+    coords[4:nv] = [[2.0, 2.0]] * (nv - 4)
+    spatial = np.zeros(n, bool)
+    spatial[:nv] = True
+    edges = np.stack([np.arange(nv, n),
+                      np.arange(nv, n) % nv], axis=1)
+    # every user reaches every venue through a chain
+    chain = np.stack([np.arange(nv, n - 1), np.arange(nv + 1, n)], axis=1)
+    to_all = np.stack([np.full(nv, nv), np.arange(nv)], axis=1)
+    g = make_graph(n, np.concatenate([edges, chain, to_all]), coords, spatial)
+    for variant in VARIANTS:
+        idx = build_2dreach(g, variant=variant)
+        eng = QueryEngine(idx)
+        us = np.array([nv, nv + 1, n - 1])
+        pts = np.array([[1.0, 1.0]] * 3, np.float32)
+        for k in (2, 4, nv):
+            host = knn_reach_host(idx, us, pts, k)
+            _assert_knn_equal(host, eng.knn_batch(us, pts, k))
+            for b in range(3):
+                oi, _ = knn_reach_oracle(g, int(us[b]), pts[b], k)
+                assert (host.row(b) == oi).all(), (variant, k, b)
+                # ties broken by ascending id
+                same = host.dist2[b] == host.dist2[b, 0]
+                ids = host.ids[b][same & (host.ids[b] >= 0)]
+                assert (np.diff(ids) > 0).all()
+
+
+def test_collect_overflow_flags(graph, indexes, engines):
+    """K-overflow: a rect holding more venues than K flags overflow and
+    still returns the K smallest ids."""
+    idx, eng = indexes["comp"], engines["comp"]
+    ext = graph.spatial_extent()
+    big = np.array([[ext[0], ext[1], ext[2], ext[3]]], np.float32)
+    us, _ = workload(graph, 64, extent_ratio=0.05, seed=1)
+    counts = range_count_host(idx, us, np.tile(big, (len(us), 1)))
+    u = us[np.argmax(counts)]
+    total = counts.max()
+    assert total > 3, "need a query vertex reaching >3 venues"
+    host = range_collect_host(idx, np.array([u]), big, 3)
+    dev = eng.collect_batch(np.array([u]), big, 3)
+    _assert_collect_equal(host, dev)
+    assert host.overflow[0] and host.counts[0] == total
+    want = range_collect_oracle(graph, int(u), big[0])
+    assert (host.row(0) == want[:3]).all()
+
+
+def test_empty_batches(indexes, engines):
+    idx, eng = indexes["comp"], engines["comp"]
+    z = np.zeros(0, np.int64)
+    zr = np.zeros((0, 4), np.float32)
+    zp = np.zeros((0, 2), np.float32)
+    assert eng.count_batch(z, zr).shape == (0,)
+    assert range_count_host(idx, z, zr).shape == (0,)
+    assert eng.collect_batch(z, zr, 3).ids.shape == (0, 3)
+    assert eng.knn_batch(z, zp, 3).ids.shape == (0, 3)
+    assert eng.polygon_batch(z, []).shape == (0,)
+
+
+# ------------------------------------------------------------- polygon bbox
+def test_polygon_bbox_outward_rounding():
+    """Regression: a venue exactly on the hull edge whose coordinate is
+    not float32-representable must survive the bbox prefilter — the old
+    min-after-downcast could shrink the box past it."""
+    x = np.float64(0.1) + 1e-9           # between two float32 neighbours
+    v = np.array([[x, 0.0], [x, 2.0], [3.0, 1.0]], np.float64)
+    bbox = polygon_bbox(v)
+    assert np.float64(bbox[0]) <= x and np.float64(bbox[2]) >= 3.0
+    # the venue sits exactly on the hull's left edge at the f32 coord
+    vx = np.float32(x)
+    assert bbox[0] <= vx, "outward rounding must keep the edge venue"
+    # end-to-end: the venue is the only reachable hit
+    coords = np.array([[0, 0], [vx, 1.0]], np.float32)
+    g = make_graph(2, np.array([[0, 1]]), coords,
+                   np.array([False, True]))
+    idx = build_2dreach(g, variant="comp")
+    # polygon whose left edge passes through the venue
+    assert polygon_query(idx, 0, v)
+    assert polygon_reach_oracle(g, 0, v)
+    eng = QueryEngine(idx)
+    assert eng.polygon_batch(np.array([0]), [v])[0]
+
+
+def test_polygon_region_predicate_consistency():
+    """The canonical predicate is shared verbatim: host helper == kernel
+    ref on random points/planes."""
+    rng = np.random.default_rng(2)
+    pts = (rng.random((200, 2)) * 4 - 2).astype(np.float32)
+    poly = _polygons(make_graph(
+        4, np.zeros((0, 2), np.int64),
+        np.array([[-2, -2], [2, 2], [0, 0], [1, 1]], np.float32),
+        np.ones(4, bool)), 1, seed=5)[0]
+    bbox = polygon_bbox(poly)
+    hp = convex_halfplanes(poly, pad_to=8)
+    want = points_in_polygon_region(pts, bbox, hp)
+    esoa = np.empty((4, 256), np.float32)
+    esoa[:2] = np.inf
+    esoa[2:] = -np.inf
+    esoa[:, :200] = np.concatenate([pts, pts], axis=1).T
+    lines = np.tile(hp.reshape(-1, 1), (1, TB)).astype(np.float32)
+    rsoa = np.tile(bbox.reshape(4, 1), (1, TB)).astype(np.float32)
+    got = np.asarray(polygon_scan_ref(
+        jnp.asarray(esoa), jnp.asarray(rsoa), jnp.asarray(lines),
+        jnp.zeros(TB, jnp.int32), jnp.full(TB, 200, jnp.int32), ne=8))
+    assert bool(got[0]) == bool(want.any())
+
+
+# ------------------------------------------------------------- kernels
+@pytest.mark.parametrize("P,B", [(1, 8), (130, 16), (700, 8)])
+def test_count_collect_kernels_vs_ref(P, B):
+    from repro.core.engine import compact_candidates
+    from repro.kernels.range_query.analytics import (
+        collect_scan_pallas,
+        count_scan_pallas,
+    )
+    from repro.kernels.range_query.descent import (
+        build_tile_pyramid,
+        prune_tiles_pallas,
+    )
+
+    rng = np.random.default_rng(P + B)
+    pts = (rng.random((P, 2)) * 10).astype(np.float32)
+    Pp = max(TP, -(-P // TP) * TP)
+    esoa = np.empty((4, Pp), np.float32)
+    esoa[:2] = np.inf
+    esoa[2:] = -np.inf
+    esoa[:, :P] = np.concatenate([pts, pts], axis=1).T
+    ids = np.full((1, Pp), ID_SENTINEL, np.int32)
+    ids[0, :P] = rng.permutation(P).astype(np.int32)
+    fine, coarse, nt = build_tile_pyramid(esoa, dim=2)
+    c = (rng.random((B, 2)) * 10).astype(np.float32)
+    r = (rng.random((B, 2)) * 3).astype(np.float32)
+    rsoa = np.concatenate([c - r, c + r], axis=1).T.astype(np.float32)
+    qs = rng.integers(0, P, size=B).astype(np.int32)
+    qe = np.minimum(qs + rng.integers(0, P + 1, size=B), P).astype(np.int32)
+    mask = prune_tiles_pallas(fine, coarse, rsoa, qs, qe, interpret=True)
+    cand, _ = compact_candidates(jnp.asarray(mask), nt)
+    got_c = np.asarray(count_scan_pallas(
+        cand, jnp.asarray(esoa), jnp.asarray(rsoa),
+        jnp.asarray(qs), jnp.asarray(qe), interpret=True))
+    want_c = np.asarray(count_scan_ref(
+        jnp.asarray(esoa), jnp.asarray(rsoa),
+        jnp.asarray(qs), jnp.asarray(qe)))
+    assert (got_c == want_c).all()
+    mat = np.asarray(collect_scan_pallas(
+        cand, jnp.asarray(esoa), jnp.asarray(ids), jnp.asarray(rsoa),
+        jnp.asarray(qs), jnp.asarray(qe), interpret=True))
+    ref = np.asarray(collect_scan_ref(
+        jnp.asarray(esoa), jnp.asarray(ids), jnp.asarray(rsoa),
+        jnp.asarray(qs), jnp.asarray(qe)))
+    for b in range(B):
+        got_ids = np.sort(mat[b][mat[b] != ID_SENTINEL])
+        want_ids = np.sort(ref[b][ref[b] != ID_SENTINEL])
+        assert (got_ids == want_ids).all(), b
+        assert len(got_ids) == want_c[b]   # duplicate-tile padding masked
+
+
+# ------------------------------------------------------------- dispatch
+def test_run_queries_dispatch(graph, indexes):
+    idx = indexes["comp"]
+    us, rects = workload(graph, 32, extent_ratio=0.05, seed=0)
+    prog = QueryProgram.count(us, rects)
+    assert (run_queries(idx, prog, engine="host")
+            == run_queries(idx, prog, engine="device")).all()
+    with pytest.raises(ValueError, match="host|device"):
+        run_queries(idx, prog, engine="cluster")
+    from repro.core.api import build_index
+
+    geo = build_index(graph, "georeach")
+    with pytest.raises(ValueError, match="GeoReachIndex"):
+        run_queries(geo, prog, engine="host")
+    # reach works on every method through batch_query
+    reach = QueryProgram.reach(us, rects)
+    assert (run_queries(geo, reach) == idx.query_batch(us, rects)).all()
+    with pytest.raises(ValueError):
+        QueryProgram.collect(us, rects, 0)
+    with pytest.raises(ValueError):
+        QueryProgram.polygon(us, [np.zeros((2, 2))] * len(us))
+
+
+def test_batch_query_device_fallback_warns_or_raises(graph):
+    from repro.core.api import build_index, batch_query
+
+    geo = build_index(graph, "georeach")
+    us, rects = workload(graph, 8, extent_ratio=0.05, seed=0)
+    import repro.core.api as api_mod
+
+    api_mod._FALLBACK_WARNED.discard("GeoReachIndex")
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        batch_query(geo, us, rects, engine="device")
+    # one-time: a second call stays silent
+    import warnings as _w
+
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        batch_query(geo, us, rects, engine="device")
+    with pytest.raises(ValueError, match="GeoReachIndex"):
+        batch_query(geo, us, rects, engine="device", required=True)
+
+
+# ------------------------------------------------------------- compile-once
+def test_analytics_no_steady_state_recompiles(graph, indexes):
+    idx = indexes["pointer"]
+    eng = engine_for(idx)
+    polys_all = _polygons(graph, 128, seed=6)
+    # warm every class across the batch buckets used below
+    for seed, B in [(0, 16), (1, 100), (2, 128)]:
+        us, rects = workload(graph, B, extent_ratio=0.05, seed=seed)
+        pts = rects[:, :2]
+        eng.count_batch(us, rects)
+        eng.collect_batch(us, rects, 8)
+        eng.knn_batch(us, pts, 8)
+        eng.polygon_batch(us, list(polys_all[:B]))
+    warm = eng.n_compiles
+    for seed, B in [(10, 16), (11, 77), (12, 128)]:
+        us, rects = workload(graph, B, extent_ratio=0.05, seed=seed)
+        pts = rects[:, :2]
+        assert (eng.count_batch(us, rects)
+                == range_count_host(idx, us, rects)).all()
+        _assert_collect_equal(eng.collect_batch(us, rects, 8),
+                              range_collect_host(idx, us, rects, 8))
+        _assert_knn_equal(eng.knn_batch(us, pts, 8),
+                          knn_reach_host(idx, us, pts, 8))
+        assert (eng.polygon_batch(us, list(polys_all[:B]))
+                == polygon_reach_host(idx, us, list(polys_all[:B]))).all()
+    assert eng.n_compiles == warm, "analytics steady state retraced"
+
+
+# ------------------------------------------------------------- dynamic
+def test_dynamic_analytics_stream_two_swaps():
+    """A mutating stream with >= 2 compaction swaps: every class stays
+    exact vs the BFS oracles on the mutated graph throughout."""
+    from repro.core import build_dynamic_index
+    from repro.data import apply_stream_op, streaming_workload
+    from repro.dynamic import CompactionPolicy
+
+    g = get_dataset("yelp", scale=0.05)
+    dyn = build_dynamic_index(
+        g, "2dreach-comp", engine="device",
+        policy=CompactionPolicy(max_overlay_edges=30, background=False))
+    rng = np.random.default_rng(0)
+    checks = 0
+    for step, op in enumerate(streaming_workload(
+            g, n_steps=260, seed=13, p_query=0.2, p_edge=0.4,
+            p_vertex=0.2, p_spatial=0.2)):
+        apply_stream_op(dyn, op)
+        if step % 65 != 64:
+            continue
+        gm = dyn.snapshot_graph()
+        vu, vr = workload(gm, 16, extent_ratio=0.05, seed=step)
+        vu[:3] = rng.integers(g.n_nodes, gm.n_nodes, 3)  # post-snapshot us
+        pts = vr[:, :2]
+        polys = _polygons(gm, 16, seed=step)
+        cnt = dyn.count_batch(vu, vr)
+        col = dyn.collect_batch(vu, vr, 4)
+        knn = dyn.knn_batch(vu, pts, 5)
+        pol = dyn.polygon_batch(vu, polys)
+        for b in range(len(vu)):
+            u = int(vu[b])
+            assert cnt[b] == range_count_oracle(gm, u, vr[b]), (step, b)
+            want = range_collect_oracle(gm, u, vr[b])
+            assert col.counts[b] == len(want)
+            assert (col.row(b) == want[:4]).all()
+            oi, _ = knn_reach_oracle(gm, u, pts[b], 5)
+            assert (knn.row(b) == oi).all(), (step, b)
+            assert pol[b] == polygon_reach_oracle(gm, u, polys[b]), (step, b)
+        checks += 1
+    assert checks >= 3
+    assert dyn.stats["n_compactions"] >= 2, \
+        "stream must cross at least two compaction swaps"
+
+
+def test_dynamic_analytics_rejects_non_2dreach():
+    from repro.core import build_dynamic_index
+
+    g = get_dataset("yelp", scale=0.05)
+    dyn = build_dynamic_index(g, "georeach")
+    us = np.zeros(1, np.int64)
+    rects = np.zeros((1, 4), np.float32)
+    for call in (lambda: dyn.count_batch(us, rects),
+                 lambda: dyn.collect_batch(us, rects, 2),
+                 lambda: dyn.knn_batch(us, rects[:, :2], 2),
+                 lambda: dyn.polygon_batch(us, [np.eye(3, 2)])):
+        with pytest.raises(ValueError, match="georeach"):
+            call()
+
+
+def test_dynamic_analytics_range_check(graph):
+    """Out-of-range query vertices raise the same clean IndexError the
+    boolean path raises, on every analytics class."""
+    from repro.core import build_dynamic_index
+
+    dyn = build_dynamic_index(graph, "2dreach-comp")
+    dyn.add_edge(0, 1)   # non-empty overlay
+    bad = np.array([dyn.n_nodes + 5])
+    rects = np.zeros((1, 4), np.float32)
+    for call in (lambda: dyn.count_batch(bad, rects),
+                 lambda: dyn.collect_batch(bad, rects, 2),
+                 lambda: dyn.knn_batch(bad, rects[:, :2], 2),
+                 lambda: dyn.polygon_batch(bad, [np.eye(3, 2)])):
+        with pytest.raises(IndexError, match="out of range"):
+            call()
+
+
+def test_run_queries_dynamic_dispatch(graph):
+    from repro.core import build_dynamic_index
+
+    dyn = build_dynamic_index(graph, "2dreach-comp")
+    dyn.add_edge(0, 1)
+    us, rects = workload(graph, 16, extent_ratio=0.05, seed=2)
+    got = run_queries(dyn, QueryProgram.count(us, rects))
+    assert (got == dyn.count_batch(us, rects)).all()
+    col = run_queries(dyn, QueryProgram.collect(us, rects, 3))
+    assert col.ids.shape == (16, 3)
+    # reach through a wrapper serves its own (mutated-graph) answer
+    reach = QueryProgram.reach(us, rects)
+    assert (run_queries(dyn, reach) == dyn.query_batch(us, rects)).all()
+    # engine='device' on a host-configured wrapper must not silently
+    # serve host answers
+    with pytest.raises(ValueError, match="engine='host'"):
+        run_queries(dyn, reach, engine="device")
+    dyn_dev = build_dynamic_index(graph, "2dreach-comp", engine="device")
+    assert (run_queries(dyn_dev, reach, engine="device")
+            == dyn.query_batch(us, rects)).all()
+    assert (run_queries(dyn_dev, QueryProgram.count(us, rects),
+                        engine="device")
+            == dyn_dev.count_batch(us, rects)).all()
+    # a device-configured wrapper IS the device path for batch_query —
+    # no fallback warning, no required=True rejection
+    import warnings as _w
+
+    from repro.core.api import batch_query
+
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        got = batch_query(dyn_dev, us, rects, engine="device",
+                          required=True)
+    assert (got == dyn_dev.query_batch(us, rects)).all()
+    # a cluster wrapper serves boolean reach but its analytics base
+    # probes would silently run on host — run_queries must reject that
+    dyn_cl = build_dynamic_index(graph, "2dreach-comp", engine="cluster",
+                                 n_shards=1)
+    assert (run_queries(dyn_cl, reach, engine="device")
+            == dyn.query_batch(us, rects)).all()
+    with pytest.raises(ValueError, match="cluster"):
+        run_queries(dyn_cl, QueryProgram.count(us, rects),
+                    engine="device")
