@@ -36,6 +36,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro import obs
 from repro.core import QueryEngine, build_2dreach, condense, scc_np
 from repro.core import engine as engine_mod
 from repro.core.reachability import closure_np
@@ -103,13 +104,26 @@ def bench_config(name: str, scale: float, n_check: int = 512) -> Dict:
             f"{name} {variant}: device answers differ from host"
         cold_stats = _stage_dict(cold.stats)
         del cold
+        # warm build under span recording: the obs substage totals
+        # (morton sort / segmented-MBR / tile pyramid inside t_forest)
+        # ride along with the coarse t_* stage dict
+        was = obs.enabled()
+        obs.enable()
+        sub0 = obs.stage_totals("build.")
         warm = build_2dreach(g, variant=variant, backend="device")
+        sub1 = obs.stage_totals("build.")
+        if not was:
+            obs.disable()
+        substage_us = {
+            k: round(sub1.get(k, 0.0) - sub0.get(k, 0.0), 1)
+            for k in sub1 if sub1.get(k, 0.0) > sub0.get(k, 0.0)}
         row["variants"][variant] = {
             "entries": int(len(host.forest.entries)),
             "trees": int(host.stats["distinct_rtrees"]),
             "host": _stage_dict(host.stats),
             "device_cold": cold_stats,
             "device_warm": _stage_dict(warm.stats),
+            "device_warm_substage_us": substage_us,
         }
         if variant == "comp":
             # zero-copy handoff gate: serving the device build adopts
@@ -144,8 +158,10 @@ def bench_summary(rows: List[Dict]) -> Dict:
             "speedup": host_cf / max(dev_cf, 1e-12),
             "host_total_s": v["host"]["t_total"],
             "device_warm_total_s": v["device_warm"]["t_total"],
+            "device_warm_substage_us": v.get("device_warm_substage_us"),
         }
     return {
+        "schema_version": 2,
         "unit": "seconds per build stage",
         "configs": [
             {"dataset": r["dataset"], "scale": r["scale"],

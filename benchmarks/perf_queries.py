@@ -23,6 +23,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro import obs
 from repro.core import build_2dreach
 from repro.core.engine import engine_for
 from repro.data import get_dataset, knn_workload, polygon_workload, workload
@@ -102,10 +103,23 @@ def class_sweep(dataset="gowalla", scale=0.5, n_q=2000, k=10,
         compiles0 = eng.n_compiles
         t_host = _t(host_fn, repeats=repeats)
         t_dev = _t(dev_fn, repeats=repeats)
+        # one instrumented device pass after the timed one: per-stage
+        # span attribution without skewing device_us_per_q
+        was = obs.enabled()
+        obs.enable()
+        sub0 = obs.stage_totals("engine.")
+        dev_fn()
+        sub1 = obs.stage_totals("engine.")
+        if not was:
+            obs.disable()
+        stage_us = {k2: round(sub1.get(k2, 0.0) - sub0.get(k2, 0.0), 3)
+                    for k2 in sub1
+                    if sub1.get(k2, 0.0) > sub0.get(k2, 0.0)}
         rows.append(dict(
             query_class=kind, variant=variant, n_queries=n_q, k=k,
             host_us_per_q=t_host / n_q * 1e6,
             device_us_per_q=t_dev / n_q * 1e6,
+            device_stage_us=stage_us,
             steady_state_recompiles=eng.n_compiles - compiles0,
         ))
     rows.append(dict(query_class="_all", variant=variant, n_queries=n_q,
@@ -122,10 +136,12 @@ def bench_summary(rows: List[Dict]) -> Dict:
         classes[r["query_class"]] = {
             "host_us_per_q": r["host_us_per_q"],
             "device_us_per_q": r["device_us_per_q"],
+            "device_stage_us": r.get("device_stage_us"),
         }
     total_rec = int(sum(r["steady_state_recompiles"] for r in rows
                         if r["query_class"] != "_all"))
     return {
+        "schema_version": 2,
         "unit": "us_per_query",
         "classes": classes,
         "device_bit_identical_to_host": True,   # asserted before timing

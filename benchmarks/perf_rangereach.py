@@ -31,6 +31,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro import obs
 from repro.cluster import ShardedEngine
 from repro.core import QueryEngine, build_2dreach, query_host, query_jax_wavefront
 from repro.data import get_dataset, workload
@@ -63,8 +64,25 @@ def _lat_pct(call, n, batch=LAT_BATCH) -> Dict[str, float]:
     tail's jit shape) live in ``repro.launch.serve.serve_chunked``.
     """
     _, lats, _ = serve_chunked(call, n, batch)
-    return {f"lat_p{p}_us": float(np.percentile(lats, p) * 1e6)
-            for p in (50, 95, 99)}
+    return obs.latency_percentiles(np.asarray(lats) * 1e6,
+                                   prefix="lat_p", suffix="_us")
+
+
+def _stage_profile(run, prefix, cost_fn=None):
+    """One instrumented pass *after* the timed one: per-stage span
+    totals (µs) plus the kernel cost model, recorded outside the timed
+    loop so span overhead never skews ``us_per_q``."""
+    was = obs.enabled()
+    obs.enable()
+    before = obs.stage_totals(prefix)
+    run()
+    after = obs.stage_totals(prefix)
+    if not was:
+        obs.disable()
+    stage = {k: round(after.get(k, 0.0) - before.get(k, 0.0), 3)
+             for k in after
+             if after.get(k, 0.0) > before.get(k, 0.0)}
+    return stage, (cost_fn() if cost_fn is not None else None)
 
 
 def engine_sweep(dataset="gowalla", scale=0.5, n_q=2000,
@@ -126,16 +144,20 @@ def engine_sweep(dataset="gowalla", scale=0.5, n_q=2000,
         recompiles = eng.n_compiles - compiles0
         retranspositions = rq_ops.SOA_BUILDS - soa0
         batches = eng.stats["batches"] - 1  # minus pre-gate warm batch
+        tiles_pb = (eng.stats["tiles_scanned"] - tiles0) / max(batches, 1)
+        grid_pb = (eng.stats["tiles_grid"] - grid0) / max(batches, 1)
+        full_pb = (eng.stats["tiles_full_scan"] - full0) / max(batches, 1)
+        stage_us, cost = _stage_profile(
+            lambda: eng.query_batch(us, rects), "engine.",
+            lambda: obs.engine_cost_model(eng))
         rows.append(dict(
             engine="device", fanout=fanout, capacity=None,
             us_per_q=dt / n_q * 1e6, depth=idx.forest.depth,
             n_leaf_tiles=eng.n_tiles,
-            tiles_scanned_per_batch=(
-                (eng.stats["tiles_scanned"] - tiles0) / max(batches, 1)),
-            tiles_grid_per_batch=(
-                (eng.stats["tiles_grid"] - grid0) / max(batches, 1)),
-            tiles_full_scan_per_batch=(
-                (eng.stats["tiles_full_scan"] - full0) / max(batches, 1)),
+            stage_us=stage_us, cost_model=cost,
+            tiles_scanned_per_batch=tiles_pb,
+            tiles_grid_per_batch=grid_pb,
+            tiles_full_scan_per_batch=full_pb,
             steady_state_recompiles=recompiles,
             steady_state_retranspositions=retranspositions,
             **_lat_pct(lambda lo, hi: eng.query_batch(
@@ -151,10 +173,14 @@ def engine_sweep(dataset="gowalla", scale=0.5, n_q=2000,
         compiles0 = ceng.n_compiles
         soa0 = rq_ops.SOA_BUILDS
         dt = _t(lambda: ceng.query_batch(us, rects), repeats=repeats)
+        cstage_us, ccost = _stage_profile(
+            lambda: ceng.query_batch(us, rects), "cluster.",
+            lambda: obs.engine_cost_model(ceng))
         rows.append(dict(
             engine="cluster", fanout=fanout, capacity=None,
             us_per_q=dt / n_q * 1e6, depth=idx.forest.depth,
             n_shards=ceng.n_shards,
+            stage_us=cstage_us, cost_model=ccost,
             n_devices=int(ceng.mesh.shape["data"]),
             shard_balance=ceng.partition.balance(),
             shard_queries=ceng.shard_queries.tolist(),
@@ -218,9 +244,24 @@ def bench_summary(engine_rows: List[Dict]) -> Dict:
     scanned = sum(r["tiles_scanned_per_batch"] for r in device)
     grid = sum(r["tiles_grid_per_batch"] for r in device)
     full = sum(r["tiles_full_scan_per_batch"] for r in device)
+
+    def _winner_stages(rows):
+        if not rows:
+            return None
+        w = min(rows, key=lambda r: r["us_per_q"])
+        return {"stage_us": w.get("stage_us"),
+                "cost_model": w.get("cost_model")}
+
     return {
+        "schema_version": 2,
         "unit": "us_per_query (best over structural params)",
         "engines": best,
+        # per-stage host-span attribution + kernel cost model of the
+        # best device / cluster configurations (additive in v2)
+        "per_stage": {
+            "device": _winner_stages(device),
+            "cluster": _winner_stages(cluster),
+        },
         "latency_percentiles_us": pct,
         "cluster_engine": {
             "n_shards": cluster[0]["n_shards"] if cluster else None,

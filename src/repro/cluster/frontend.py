@@ -27,11 +27,15 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import Future, InvalidStateError
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from ..kernels.range_query.kernel import TB
+from ..obs import metrics as obs_metrics
+from ..obs import querylog as obs_querylog
+from ..obs import span
+from ..obs.tracer import TRACER as _TRACER
 
 
 class Frontend:
@@ -44,10 +48,29 @@ class Frontend:
                a power of two to reuse the engine's compiled buckets).
     max_delay: flush when the oldest pending request is this old (s).
     max_queue: bounded-queue capacity; ``submit`` blocks above it.
+    metrics:   a :class:`repro.obs.Registry` for the frontend's gauges
+               (queue depth, batch occupancy), counters (flushes by
+               reason, deadline misses, backpressure blocks) and wait /
+               lateness histograms; defaults to the global registry.
+    query_log: a :class:`repro.obs.QueryLog` receiving one structured
+               record per served request; ``None`` uses the global log
+               when ``repro.obs`` is enabled (and skips logging when it
+               is not, keeping the disabled fast path flat).
+    clock:     monotonic time source (seconds) — injectable so load
+               tests drive deadlines deterministically with a fake
+               clock instead of sleeping.
+    deadline_grace: lateness tolerance (s) before a flush that starts
+               after ``enqueue + max_delay`` counts as a deadline miss;
+               defaults to ``max_delay / 4`` (absorbs timer wakeup
+               jitter without hiding real scheduler stalls).
     """
 
     def __init__(self, engine, max_batch: int = 256,
-                 max_delay: float = 2e-3, max_queue: int = 8192):
+                 max_delay: float = 2e-3, max_queue: int = 8192,
+                 metrics: Optional["obs_metrics.Registry"] = None,
+                 query_log: Optional["obs_querylog.QueryLog"] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 deadline_grace: Optional[float] = None):
         if max_batch < 1 or max_queue < max_batch:
             raise ValueError(
                 f"need 1 <= max_batch <= max_queue, got "
@@ -56,6 +79,12 @@ class Frontend:
         self.max_batch = int(max_batch)
         self.max_delay = float(max_delay)
         self.max_queue = int(max_queue)
+        self.metrics = metrics if metrics is not None else obs_metrics.REGISTRY
+        self._query_log = query_log
+        self._clock = clock if clock is not None else time.monotonic
+        self.deadline_grace = (float(deadline_grace)
+                               if deadline_grace is not None
+                               else self.max_delay / 4.0)
         self._cond = threading.Condition()
         self._rect_len = None                 # fixed by the first submit
         self._pending: List[tuple] = []       # (u, rect, future, t_enq)
@@ -66,6 +95,21 @@ class Frontend:
             "n_requests": 0, "n_batches": 0, "n_flush_full": 0,
             "n_flush_deadline": 0, "n_flush_forced": 0,
             "batched_queries": 0, "max_pending_seen": 0,
+            "n_deadline_misses": 0, "n_submit_blocked": 0,
+        }
+        m = self.metrics
+        self._g_depth = m.gauge("frontend.queue_depth")
+        self._g_occupancy = m.gauge("frontend.batch_occupancy")
+        self._g_inflight = m.gauge("frontend.inflight")
+        self._c_requests = m.counter("frontend.requests")
+        self._c_misses = m.counter("frontend.deadline_misses")
+        self._c_blocked = m.counter("frontend.submit_blocked")
+        self._h_wait = m.histogram("frontend.queue_wait_us")
+        self._h_lateness = m.histogram("frontend.flush_lateness_us")
+        self._h_batch = m.histogram("frontend.batch_size")
+        self._flush_counters = {
+            r: m.counter(f"frontend.{r}")
+            for r in ("n_flush_full", "n_flush_deadline", "n_flush_forced")
         }
         self._thread = threading.Thread(
             target=self._run, name="rangereach-frontend", daemon=True)
@@ -89,14 +133,21 @@ class Frontend:
                 raise ValueError(
                     f"rect has {len(rect)} coords, expected "
                     f"{self._rect_len}")
-            while len(self._pending) >= self.max_queue and not self._closed:
-                self._cond.wait()
+            if len(self._pending) >= self.max_queue and not self._closed:
+                self.stats["n_submit_blocked"] += 1
+                self._c_blocked.inc()
+                while (len(self._pending) >= self.max_queue
+                       and not self._closed):
+                    self._cond.wait()
             if self._closed:
                 raise RuntimeError("Frontend is closed")
-            self._pending.append((int(u), rect, fut, time.monotonic()))
+            self._pending.append((int(u), rect, fut, self._clock()))
             self.stats["n_requests"] += 1
+            self._c_requests.inc()
+            depth = len(self._pending)
+            self._g_depth.set(depth)
             self.stats["max_pending_seen"] = max(
-                self.stats["max_pending_seen"], len(self._pending))
+                self.stats["max_pending_seen"], depth)
             self._cond.notify_all()
         return fut
 
@@ -166,7 +217,7 @@ class Frontend:
                     if self._pending:
                         n = len(self._pending)
                         deadline = self._pending[0][3] + self.max_delay
-                        now = time.monotonic()
+                        now = self._clock()
                         if n >= self.max_batch:
                             reason = "n_flush_full"
                             break
@@ -184,22 +235,36 @@ class Frontend:
                         self._cond.wait()
                 batch = self._pending[: self.max_batch]
                 del self._pending[: self.max_batch]
+                # flush lateness: how far past the oldest request's
+                # deadline this batch starts serving; beyond the grace
+                # it is a deadline miss (the scheduler could not keep
+                # the latency SLO — usually an inflight batch ahead)
+                lateness = max(0.0, self._clock() - deadline)
+                self._g_depth.set(len(self._pending))
                 if not self._pending:
                     self._force = False
                 self._inflight = True
+                self._g_inflight.set(1)
                 self._cond.notify_all()       # queue space freed
+            self._h_lateness.record(lateness * 1e6)
+            if lateness > self.deadline_grace:
+                self.stats["n_deadline_misses"] += 1
+                self._c_misses.inc()
             self._serve(batch, reason)
             with self._cond:
                 self._inflight = False
+                self._g_inflight.set(0)
                 self._cond.notify_all()
 
     def _serve(self, batch: List[tuple], reason: str) -> None:
         try:
             # assembly inside the latch too: no input may ever kill the
             # scheduler thread and strand the batch's futures
-            us = np.array([b[0] for b in batch], dtype=np.int64)
-            rects = np.stack([b[1] for b in batch])
-            ans = self.engine.query_batch(us, rects)
+            with span("frontend.flush", cat="frontend", n=len(batch),
+                      reason=reason):
+                us = np.array([b[0] for b in batch], dtype=np.int64)
+                rects = np.stack([b[1] for b in batch])
+                ans = self.engine.query_batch(us, rects)
         except BaseException as e:  # latch the error onto every future
             for _, _, fut, _ in batch:
                 try:
@@ -210,8 +275,31 @@ class Frontend:
         self.stats["n_batches"] += 1
         self.stats[reason] += 1
         self.stats["batched_queries"] += len(batch)
-        for (_, _, fut, _), a in zip(batch, ans):
+        self._flush_counters[reason].inc()
+        self._h_batch.record(len(batch))
+        self._g_occupancy.set(len(batch) / self.max_batch)
+        now = self._clock()
+        for (_, _, fut, t_enq), a in zip(batch, ans):
+            self._h_wait.record((now - t_enq) * 1e6)
             try:
                 fut.set_result(bool(a))
             except InvalidStateError:       # client cancelled meanwhile
                 pass
+        self._log_batch(us, rects, ans, batch, now)
+
+    def _log_batch(self, us, rects, ans, batch, now) -> None:
+        """Structured query-log records for a served batch — explicit
+        ``query_log`` always logs; otherwise the global log, only while
+        ``repro.obs`` is enabled."""
+        qlog = self._query_log
+        if qlog is None:
+            if not _TRACER.enabled:
+                return
+            qlog = obs_querylog.QUERY_LOG
+        shard_of = getattr(self.engine, "shard_of", None)
+        shards = (shard_of(us) if shard_of is not None
+                  else np.zeros(len(us), dtype=np.int64))
+        vclass = obs_querylog.vertex_class_of(self.engine, us)
+        lats = [now - b[3] for b in batch]
+        qlog.record_batch("reach", vclass, rects, shards, lats,
+                          np.asarray(ans).astype(np.int64))

@@ -33,6 +33,7 @@ identical SPMD everywhere and steady state still recompiles nothing.
 
 from __future__ import annotations
 
+import time
 from typing import Dict, Optional
 
 import numpy as np
@@ -58,6 +59,8 @@ from ..kernels.range_query.descent import (
 )
 from ..kernels.range_query.kernel import TB
 from ..launch.mesh import make_shard_mesh
+from ..obs import REGISTRY, span
+from ..obs.tracer import TRACER as _TRACER
 from .partition import partition_forest, shard_arenas
 
 _AXIS = "data"
@@ -138,6 +141,15 @@ class ShardedEngine:
             "tiles_scanned": 0, "tiles_grid": 0, "tiles_full_scan": 0,
         }
         self.shard_queries = np.zeros(n_shards, dtype=np.int64)
+        # per-shard hit counters ride next to the query routing counts:
+        # together they are the load signal the future query-log-driven
+        # repartitioner consumes (queries = routing pressure, hits =
+        # result pressure)
+        self.shard_hits = np.zeros(n_shards, dtype=np.int64)
+        # host-side mirrors for query-log classification/routing: the
+        # structured log records (vertex class, shard) per served query
+        self._excluded_host = index.excluded
+        self._lookup_tree_host = index.lookup_tree
         # candidate-capacity high-water mark: K only ever ratchets up, so
         # a smaller batch never traces a new K shape and lifetime scan
         # retraces are bounded by log2(n_tiles) per batch bucket.  A
@@ -225,37 +237,68 @@ class ShardedEngine:
         state; tests assert it via this introspection hook."""
         return int(self._prepare._cache_size() + self._scan._cache_size())
 
+    def shard_of(self, us: np.ndarray) -> np.ndarray:
+        """Host-side vertex -> owning shard (-1: excluded / no tree) —
+        the routing key the structured query log records."""
+        t = np.asarray(self._lookup_tree_host(np.asarray(us, np.int64)))
+        out = np.full(len(t), -1, dtype=np.int64)
+        ok = t >= 0
+        out[ok] = self.partition.tree_shard[t[ok]]
+        return out
+
     def query_batch(self, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
         """Batched RangeReach, bit-identical to the host path."""
         us = np.asarray(us, dtype=np.int64)
         B = len(us)
         if B == 0:
             return np.zeros(0, dtype=bool)
-        Bb, us_p, rsoa = pad_batch(us, rects, self.dim)
-        rsoa_dev = jnp.asarray(rsoa)
+        t0 = time.perf_counter()
+        with span("cluster.query_batch", cat="cluster", n=B):
+            with span("cluster.pad_batch", cat="cluster"):
+                Bb, us_p, rsoa = pad_batch(us, rects, self.dim)
+                rsoa_dev = jnp.asarray(rsoa)
 
-        forced, own, qs, qe, cand, cnt, mx = self._prepare(
-            self._fine, self._coarse, jnp.asarray(us_p), rsoa_dev
-        )
-        self._kb_hwm = max(self._kb_hwm,
-                           min(_bucket(max(int(mx), 1), 1), self.n_tiles))
-        kb = self._kb_hwm
-        hit = self._scan(
-            self._entries, cand[:, :, :kb], qs, qe, rsoa_dev
-        )
+            with span("cluster.route_prune", cat="cluster"):
+                forced, own, qs, qe, cand, cnt, mx = self._prepare(
+                    self._fine, self._coarse, jnp.asarray(us_p), rsoa_dev
+                )
+                # int(mx) blocks on the sharded prune + pmax round
+                self._kb_hwm = max(
+                    self._kb_hwm,
+                    min(_bucket(max(int(mx), 1), 1), self.n_tiles))
+            kb = self._kb_hwm
+            with span("cluster.scan", cat="cluster"):
+                hit = self._scan(
+                    self._entries, cand[:, :, :kb], qs, qe, rsoa_dev
+                )
 
-        S = self.n_shards
-        self.stats["batches"] += 1
-        self.stats["queries"] += B
-        self.stats["tiles_scanned"] += int(np.asarray(cnt).sum())
-        self.stats["tiles_grid"] += (Bb // TB) * kb * S
-        self.stats["tiles_full_scan"] += (Bb // TB) * self.n_tiles * S
-        # routing stats over the *real* lanes only (padding reuses
-        # vertex 0, which routes to a real shard but answers nothing)
-        own_b = np.asarray(own)[:B]
-        self.shard_queries += np.bincount(
-            own_b[own_b >= 0], minlength=S).astype(np.int64)
-        out = (np.asarray(hit) > 0) | np.asarray(forced)
+            S = self.n_shards
+            self.stats["batches"] += 1
+            self.stats["queries"] += B
+            self.stats["tiles_scanned"] += int(np.asarray(cnt).sum())
+            self.stats["tiles_grid"] += (Bb // TB) * kb * S
+            self.stats["tiles_full_scan"] += (Bb // TB) * self.n_tiles * S
+            with span("cluster.sync", cat="cluster"):
+                # routing stats over the *real* lanes only (padding
+                # reuses vertex 0, which routes to a real shard but
+                # answers nothing)
+                own_b = np.asarray(own)[:B]
+                out = (np.asarray(hit) > 0) | np.asarray(forced)
+            routed = own_b >= 0
+            self.shard_queries += np.bincount(
+                own_b[routed], minlength=S).astype(np.int64)
+            self.shard_hits += np.bincount(
+                own_b[routed & out[:B]], minlength=S).astype(np.int64)
+        if _TRACER.enabled:
+            dt_us = (time.perf_counter() - t0) * 1e6
+            REGISTRY.histogram("cluster.batch_us").record(dt_us)
+            REGISTRY.gauge("cluster.n_compiles").set(self.n_compiles)
+            for s in np.nonzero(np.bincount(own_b[routed],
+                                            minlength=S))[0]:
+                REGISTRY.counter(f"cluster.shard{s}.queries").inc(
+                    int((own_b == s).sum()))
+                REGISTRY.counter(f"cluster.shard{s}.hits").inc(
+                    int((routed & out[:B] & (own_b == s)).sum()))
         return out[:B]
 
     def query(self, u: int, rect) -> bool:

@@ -85,9 +85,37 @@ def build_dynamic_index(graph: GeosocialGraph, method: str, policy=None, **kw):
     return DynamicIndex(graph, method, policy=policy, **kw)
 
 
-# index types batch_query has already warned about falling back to the
-# host path for (one warning per type, not one per batch)
+# (reason, index type) pairs batch_query has already warned about
+# falling back to the host path for — one warning per distinct cause,
+# not one per batch and not one globally: an unsupported index type and
+# a wrapper that was *constructed* for host serving are different
+# operator mistakes and each deserves its own (single) warning.  Every
+# fallback, warned or not, increments the ``api.host_fallback.<reason>``
+# metric so dashboards see the full count.
 _FALLBACK_WARNED = set()
+FALLBACK_REASONS = ("unsupported-index", "wrapper-host-engine")
+
+
+def _warn_host_fallback(index, reason: str) -> None:
+    from ..obs import REGISTRY  # deferred: keep api importable early
+
+    name = type(index).__name__
+    REGISTRY.counter(f"api.host_fallback.{reason}").inc()
+    key = (reason, name)
+    if key in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add(key)
+    if reason == "wrapper-host-engine":
+        detail = (f"{name} was constructed with engine='host', so its "
+                  f"query_batch serves the host path; construct it with "
+                  f"engine='device' for device base probes")
+    else:
+        detail = (f"no device QueryEngine for {name}; falling back to "
+                  f"the host path")
+    warnings.warn(
+        f"batch_query(engine='device') [{reason}]: {detail} (pass "
+        f"required=True to make this an error)",
+        RuntimeWarning, stacklevel=3)
 
 
 def batch_query(index, us: np.ndarray, rects: np.ndarray,
@@ -98,10 +126,11 @@ def batch_query(index, us: np.ndarray, rects: np.ndarray,
     ``engine="device"`` routes 2DReach indexes through the
     compile-once :class:`~repro.core.engine.QueryEngine` (uploaded and
     memoised on first use); index types without a device engine fall
-    back to the host path with a one-time ``RuntimeWarning`` — or, with
-    ``required=True``, raise a ``ValueError`` naming the index, so a
-    benchmark asking for the device engine can never silently measure
-    the host path.
+    back to the host path with one ``RuntimeWarning`` per distinct
+    (reason, index type) cause — counted per fallback under the
+    ``api.host_fallback.<reason>`` metric — or, with ``required=True``,
+    raise a ``ValueError`` naming the index, so a benchmark asking for
+    the device engine can never silently measure the host path.
     ``engine="cluster"`` routes through the sharded multi-device
     :class:`~repro.cluster.ShardedEngine` (forest partitioned over the
     mesh, memoised on first use); cluster serving is an explicit opt-in,
@@ -113,21 +142,17 @@ def batch_query(index, us: np.ndarray, rects: np.ndarray,
         eng = engine_for(index)
         if eng is not None:
             return eng.query_batch(np.asarray(us), np.asarray(rects))
-        if getattr(index, "engine", "host") != "host":
+        wrapped = getattr(index, "engine", None)
+        if wrapped is not None and wrapped != "host":
             # a wrapper (DynamicIndex) already configured for device or
             # cluster base serving: its own query_batch IS the device
             # path, not a fallback
             return index.query_batch(np.asarray(us), np.asarray(rects))
         if required:
             engine_for(index, required=True)  # raises, naming the index
-        key = type(index).__name__
-        if key not in _FALLBACK_WARNED:
-            _FALLBACK_WARNED.add(key)
-            warnings.warn(
-                f"batch_query(engine='device'): no device QueryEngine for "
-                f"{key}; falling back to the host path (pass required=True "
-                f"to make this an error)",
-                RuntimeWarning, stacklevel=2)
+        _warn_host_fallback(
+            index, "wrapper-host-engine" if wrapped == "host"
+            else "unsupported-index")
     elif engine == "cluster":
         from ..cluster import sharded_engine_for  # deferred: imports core
 

@@ -42,6 +42,7 @@ cluster engine (:mod:`repro.cluster`) serves the same structures:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -62,6 +63,8 @@ from ..kernels.range_query.descent import (
 )
 from ..kernels.range_query.kernel import TB, TP
 from ..kernels.range_query.ops import forest_soa
+from ..obs import CounterDict, REGISTRY, span
+from ..obs.tracer import TRACER as _TRACER
 from .polygon import convex_halfplanes, points_in_polygon_region, polygon_bbox
 from .two_d_reach import TwoDReachIndex
 
@@ -99,8 +102,11 @@ def _popcount32_jnp(x: jax.Array) -> jax.Array:
 # ``device_adoptions`` counts arenas adopted zero-copy from a
 # ``build_forest_device`` handoff.  Benchmarks and tests assert that
 # serving a device-built index — including every DynamicIndex compaction
-# swap — bumps only the adoption counter.
-UPLOAD_COUNTERS: Dict[str, int] = {"host_uploads": 0, "device_adoptions": 0}
+# swap — bumps only the adoption counter.  The values live in the
+# ``repro.obs`` metrics registry (``engine.upload.*``); this dict-shaped
+# view keeps the legacy ``UPLOAD_COUNTERS[...]`` surface working.
+UPLOAD_COUNTERS = CounterDict(
+    "engine.upload.", ("host_uploads", "device_adoptions"))
 
 class PointerSide:
     """Device-resident vertex→tree lookup side of a 2DReach index.
@@ -178,14 +184,16 @@ class TileArena:
     def upload(cls, esoa: np.ndarray, off: np.ndarray,
                dim: int) -> "TileArena":
         UPLOAD_COUNTERS["host_uploads"] += 1
-        fine, coarse, nt = build_tile_pyramid(esoa, dim)
-        return cls(
-            entries=jnp.asarray(esoa),
-            fine=jnp.asarray(fine),
-            coarse=jnp.asarray(coarse),
-            entry_off=jnp.asarray(off, jnp.int32),
-            n_tiles=nt,
-        )
+        with span("engine.soa_upload", cat="build",
+                  nbytes=int(esoa.nbytes)):
+            fine, coarse, nt = build_tile_pyramid(esoa, dim)
+            return cls(
+                entries=jnp.asarray(esoa),
+                fine=jnp.asarray(fine),
+                coarse=jnp.asarray(coarse),
+                entry_off=jnp.asarray(off, jnp.int32),
+                n_tiles=nt,
+            )
 
     @classmethod
     def for_forest(cls, forest, dim: int) -> "TileArena":
@@ -417,13 +425,18 @@ class QueryEngine:
         qs, qe, cand_k)`` with ``cand_k`` already sliced to the K
         bucket."""
         B = len(us)
-        Bb, us_p, rsoa = pad_batch(us, rects, self.dim)
-        rsoa_dev = jnp.asarray(rsoa)
-        forced, qs, qe, cand, cnt, mx = self._prepare(
-            jnp.asarray(us_p), rsoa_dev
-        )
-        self._kb_hwm = max(self._kb_hwm,
-                           min(_bucket(max(int(mx), 1), 1), self.n_tiles))
+        with span("engine.pad_batch", cat="engine"):
+            Bb, us_p, rsoa = pad_batch(us, rects, self.dim)
+            rsoa_dev = jnp.asarray(rsoa)
+        with span("engine.route_prune", cat="engine", batch=B):
+            forced, qs, qe, cand, cnt, mx = self._prepare(
+                jnp.asarray(us_p), rsoa_dev
+            )
+            # int(mx) blocks on the device prune, so the span really
+            # covers lookup + prune + candidate compaction
+            self._kb_hwm = max(
+                self._kb_hwm,
+                min(_bucket(max(int(mx), 1), 1), self.n_tiles))
         kb = self._kb_hwm
         self.stats["batches"] += 1
         self.stats["queries"] += B
@@ -435,6 +448,17 @@ class QueryEngine:
         self.stats["tiles_full_scan"] += (Bb // TB) * self.n_tiles
         return Bb, rsoa_dev, forced, qs, qe, cand[:, :kb]
 
+    def _obs_batch(self, kind: str, B: int, t0: float) -> None:
+        """Gated per-batch registry recording (enabled-only: one
+        histogram append + two updates per *batch*, nothing per query)."""
+        if not _TRACER.enabled:
+            return
+        dt_us = (time.perf_counter() - t0) * 1e6
+        REGISTRY.histogram("engine.batch_us").record(dt_us)
+        REGISTRY.histogram(f"engine.{kind}.query_us").record(dt_us / max(B, 1))
+        REGISTRY.counter(f"engine.{kind}.queries").inc(B)
+        REGISTRY.gauge("engine.n_compiles").set(self.n_compiles)
+
     def query_batch(self, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
         """Batched RangeReach, same contract as ``TwoDReachIndex
         .query_batch`` (and bit-identical to it)."""
@@ -442,9 +466,15 @@ class QueryEngine:
         B = len(us)
         if B == 0:
             return np.zeros(0, dtype=bool)
-        _, rsoa_dev, forced, qs, qe, cand_k = self._route_prune(us, rects)
-        hit = self._scan(cand_k, rsoa_dev, qs, qe)
-        out = np.asarray(hit).astype(bool) | np.asarray(forced)
+        t0 = time.perf_counter()
+        with span("engine.query_batch", cat="engine", n=B):
+            _, rsoa_dev, forced, qs, qe, cand_k = self._route_prune(
+                us, rects)
+            with span("engine.scan", cat="engine"):
+                hit = self._scan(cand_k, rsoa_dev, qs, qe)
+            with span("engine.sync", cat="engine"):
+                out = np.asarray(hit).astype(bool) | np.asarray(forced)
+        self._obs_batch("reach", B, t0)
         return out[:B]
 
     def query(self, u: int, rect) -> bool:
@@ -460,12 +490,19 @@ class QueryEngine:
         B = len(us)
         if B == 0:
             return np.zeros(0, dtype=np.int64)
-        _, rsoa_dev, forced, qs, qe, cand_k = self._route_prune(us, rects)
-        counts = self._count_scan(cand_k, rsoa_dev, qs, qe)
-        # forced: an excluded (spatial-sink) query vertex reaches exactly
-        # itself — its tree probe counted nothing (empty slice)
-        out = (np.asarray(counts).astype(np.int64)
-               + np.asarray(forced).astype(np.int64))
+        t0 = time.perf_counter()
+        with span("engine.count_batch", cat="engine", n=B):
+            _, rsoa_dev, forced, qs, qe, cand_k = self._route_prune(
+                us, rects)
+            with span("engine.scan", cat="engine"):
+                counts = self._count_scan(cand_k, rsoa_dev, qs, qe)
+            # forced: an excluded (spatial-sink) query vertex reaches
+            # exactly itself — its tree probe counted nothing (empty
+            # slice)
+            with span("engine.sync", cat="engine"):
+                out = (np.asarray(counts).astype(np.int64)
+                       + np.asarray(forced).astype(np.int64))
+        self._obs_batch("count", B, t0)
         return out[:B]
 
     def collect_batch(self, us: np.ndarray, rects: np.ndarray, k: int):
@@ -485,9 +522,14 @@ class QueryEngine:
                 counts=np.zeros(0, np.int64),
                 overflow=np.zeros(0, bool),
             )
-        _, rsoa_dev, forced, qs, qe, cand_k = self._route_prune(us, rects)
-        mat = self._collect_scan(cand_k, rsoa_dev, qs, qe)
-        top, cnt = self._collect_post(mat, kc=_bucket(k, 1))
+        t0 = time.perf_counter()
+        with span("engine.collect_batch", cat="engine", n=B):
+            _, rsoa_dev, forced, qs, qe, cand_k = self._route_prune(
+                us, rects)
+            with span("engine.scan", cat="engine"):
+                mat = self._collect_scan(cand_k, rsoa_dev, qs, qe)
+                top, cnt = self._collect_post(mat, kc=_bucket(k, 1))
+        self._obs_batch("collect", B, t0)
         top = np.asarray(top)[:B]
         counts = np.asarray(cnt).astype(np.int64)[:B]
         ids = np.full((B, k), ID_SENTINEL, dtype=np.int32)
@@ -508,7 +550,8 @@ class QueryEngine:
         bit-identical to the host best-first descent."""
         from ..queries.knn import knn_radius_doubling  # deferred: no cycle
 
-        return knn_radius_doubling(self, us, points, k)
+        with span("engine.knn_batch", cat="engine", n=len(us), k=k):
+            return knn_radius_doubling(self, us, points, k)
 
     def polygon_batch(self, us: np.ndarray, polygons) -> np.ndarray:
         """Batched convex-polygon RangeReach: the half-plane postfilter
@@ -520,19 +563,26 @@ class QueryEngine:
             return np.zeros(0, dtype=bool)
         if len(polygons) != B:
             raise ValueError(f"{len(polygons)} polygons for {B} queries")
-        bboxes = np.stack([polygon_bbox(p) for p in polygons])
-        ne = max(len(np.asarray(p).reshape(-1, 2)) for p in polygons)
-        neb = _bucket(ne, 4)
-        hps = np.stack([convex_halfplanes(p, pad_to=neb) for p in polygons])
-        Bb, rsoa_dev, _, qs, qe, cand_k = self._route_prune(us, bboxes)
-        # (B, 3, neb) -> (3*neb, Bb); padded batch lanes get inert
-        # half-planes (A=B=0, C=+inf) to match their impossible rects
-        lines = np.zeros((3 * neb, Bb), dtype=np.float32)
-        lines[2 * neb:] = np.inf
-        lines[:, :B] = hps.transpose(1, 2, 0).reshape(3 * neb, B)
-        hit = self._polygon_scan(cand_k, rsoa_dev, jnp.asarray(lines),
-                                 qs, qe, ne=neb)
-        out = np.asarray(hit)[:B] > 0
+        t0 = time.perf_counter()
+        with span("engine.polygon_batch", cat="engine", n=B):
+            bboxes = np.stack([polygon_bbox(p) for p in polygons])
+            ne = max(len(np.asarray(p).reshape(-1, 2)) for p in polygons)
+            neb = _bucket(ne, 4)
+            hps = np.stack(
+                [convex_halfplanes(p, pad_to=neb) for p in polygons])
+            Bb, rsoa_dev, _, qs, qe, cand_k = self._route_prune(us, bboxes)
+            # (B, 3, neb) -> (3*neb, Bb); padded batch lanes get inert
+            # half-planes (A=B=0, C=+inf) to match their impossible rects
+            lines = np.zeros((3 * neb, Bb), dtype=np.float32)
+            lines[2 * neb:] = np.inf
+            lines[:, :B] = hps.transpose(1, 2, 0).reshape(3 * neb, B)
+            with span("engine.scan", cat="engine"):
+                hit = self._polygon_scan(cand_k, rsoa_dev,
+                                         jnp.asarray(lines),
+                                         qs, qe, ne=neb)
+            with span("engine.sync", cat="engine"):
+                out = np.asarray(hit)[:B] > 0
+        self._obs_batch("polygon", B, t0)
         exc = self._excluded_host[us]
         if exc.any():
             for i in np.nonzero(exc)[0]:

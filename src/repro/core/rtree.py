@@ -41,6 +41,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
+from ..obs import span
+
 
 DEFAULT_FANOUT = 16
 
@@ -451,63 +453,67 @@ def build_forest_device(
     np.cumsum(counts, out=entry_off[1:])
 
     # ---- device sort: morton encode + bucketed (tree, code) key sort ----
-    Pp = max(TP, -(-P // TP) * TP)
-    soa_ext = jnp.concatenate([
-        jnp.asarray(np.ascontiguousarray(boxes.T)),
-        jnp.asarray(np_inert_plane(dim, 1)),   # padding gather target
-    ], axis=1)                                              # (2*dim, P+1)
-    if P:
-        with enable_x64():
-            key = _morton_key_jit(
-                soa_ext[:, :P],
-                jnp.asarray(extent[:dim], jnp.float64),
-                jnp.asarray(extent[dim:], jnp.float64),
-            )
-            order = _bucketed_tree_sort(key, entry_off, counts)
-        # one gather builds the permuted AND padded serving plane
-        order_pad = jnp.concatenate([
-            order, jnp.full((Pp - P,), P, jnp.int32)])
-        plane = soa_ext[:, order_pad]                       # (2*dim, Pp)
-        ids_host = np.asarray(jnp.asarray(ids)[order])
-    else:
-        plane = jnp.asarray(np_inert_plane(dim, Pp))
-        ids_host = ids
-    boxes_host = np.ascontiguousarray(np.asarray(plane[:, :P]).T)
+    with span("build.forest.morton_sort", cat="build", entries=int(P)):
+        Pp = max(TP, -(-P // TP) * TP)
+        soa_ext = jnp.concatenate([
+            jnp.asarray(np.ascontiguousarray(boxes.T)),
+            jnp.asarray(np_inert_plane(dim, 1)),   # padding gather target
+        ], axis=1)                                          # (2*dim, P+1)
+        if P:
+            with enable_x64():
+                key = _morton_key_jit(
+                    soa_ext[:, :P],
+                    jnp.asarray(extent[:dim], jnp.float64),
+                    jnp.asarray(extent[dim:], jnp.float64),
+                )
+                order = _bucketed_tree_sort(key, entry_off, counts)
+            # one gather builds the permuted AND padded serving plane
+            order_pad = jnp.concatenate([
+                order, jnp.full((Pp - P,), P, jnp.int32)])
+            plane = soa_ext[:, order_pad]                   # (2*dim, Pp)
+            ids_host = np.asarray(jnp.asarray(ids)[order])
+        else:
+            plane = jnp.asarray(np_inert_plane(dim, Pp))
+            ids_host = ids
+        boxes_host = np.ascontiguousarray(np.asarray(plane[:, :P]).T)
 
     # ---- level loop: fused segmented-MBR reduction per R-tree level -----
     level_mbrs: List[np.ndarray] = []
     tree_off: List[np.ndarray] = []
     cur_soa = plane          # level 0 gathers only indices < P
     cur_counts = counts
-    while True:
-        node_counts = -(-cur_counts // fanout)  # ceil div; 0 stays 0
-        off = np.zeros(n_trees + 1, dtype=np.int64)
-        np.cumsum(node_counts, out=off[1:])
-        n_nodes = int(off[-1])
-        if n_nodes:
-            child_off = np.zeros(n_trees + 1, dtype=np.int64)
-            np.cumsum(cur_counts, out=child_off[1:])
-            node_tree = np.repeat(np.arange(n_trees), node_counts)
-            local = _ragged_arange(node_counts)
-            starts = child_off[node_tree] + local * fanout
-            ends = np.minimum(starts + fanout, child_off[node_tree + 1])
-            mbr_soa = level_mbr(cur_soa, starts, ends, fanout, dim,
-                                kernel=kernel, interpret=interpret)
-        else:
-            mbr_soa = jnp.zeros((2 * dim, 0), jnp.float32)
-        level_mbrs.append(
-            np.ascontiguousarray(np.asarray(mbr_soa[:, :n_nodes]).T))
-        tree_off.append(off)
-        if np.all(node_counts <= 1):
-            break
-        cur_soa = mbr_soa   # padded tail rows are inert, never addressed
-        cur_counts = node_counts
+    with span("build.forest.mbr_reduce", cat="build", entries=int(P)):
+        while True:
+            node_counts = -(-cur_counts // fanout)  # ceil div; 0 stays 0
+            off = np.zeros(n_trees + 1, dtype=np.int64)
+            np.cumsum(node_counts, out=off[1:])
+            n_nodes = int(off[-1])
+            if n_nodes:
+                child_off = np.zeros(n_trees + 1, dtype=np.int64)
+                np.cumsum(cur_counts, out=child_off[1:])
+                node_tree = np.repeat(np.arange(n_trees), node_counts)
+                local = _ragged_arange(node_counts)
+                starts = child_off[node_tree] + local * fanout
+                ends = np.minimum(
+                    starts + fanout, child_off[node_tree + 1])
+                mbr_soa = level_mbr(cur_soa, starts, ends, fanout, dim,
+                                    kernel=kernel, interpret=interpret)
+            else:
+                mbr_soa = jnp.zeros((2 * dim, 0), jnp.float32)
+            level_mbrs.append(
+                np.ascontiguousarray(np.asarray(mbr_soa[:, :n_nodes]).T))
+            tree_off.append(off)
+            if np.all(node_counts <= 1):
+                break
+            cur_soa = mbr_soa  # padded tail rows are inert, never used
+            cur_counts = node_counts
 
     # ---- device serving arrays (the zero-copy engine handoff) ----------
-    fine, coarse, nt = tile_pyramid_device(
-        plane, dim, tp=TP, tpt=TPT, group=COARSE_GROUP,
-        kernel=kernel, interpret=interpret,
-    )
+    with span("build.forest.pyramid", cat="build", entries=int(P)):
+        fine, coarse, nt = tile_pyramid_device(
+            plane, dim, tp=TP, tpt=TPT, group=COARSE_GROUP,
+            kernel=kernel, interpret=interpret,
+        )
 
     forest = RTreeForest(
         dim=dim,

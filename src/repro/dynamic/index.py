@@ -48,6 +48,7 @@ import numpy as np
 from ..core.condensation import condense
 from ..core.graph import GeosocialGraph, build_csr, make_graph
 from ..core.scc import scc_np
+from ..obs import span
 from .compaction import CompactionPolicy, Compactor
 from .overlay import DeltaOverlay
 
@@ -179,9 +180,10 @@ class DynamicIndex:
     def _base_probe(self, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
         """Static-base probe — the device engine when enabled (and the
         wrapped method has one), the host path otherwise."""
-        if self._base_engine is not None:
-            return self._base_engine.query_batch(us, rects)
-        return self._index.query_batch(us, rects)
+        with span("dynamic.base_probe", cat="dynamic", n=len(us)):
+            if self._base_engine is not None:
+                return self._base_engine.query_batch(us, rects)
+            return self._index.query_batch(us, rects)
 
     # ------------------------------------------------------------------
     # public surface
@@ -275,7 +277,7 @@ class DynamicIndex:
         us = np.asarray(us, dtype=np.int64)
         B = len(us)
         rects = np.asarray(rects, dtype=np.float32).reshape(B, 4)
-        with self._lock:
+        with self._lock, span("dynamic.query_batch", cat="dynamic", n=B):
             self.stats["n_queries"] += B
             overlay = self._overlay
             self._check_query_range(us)
@@ -289,30 +291,33 @@ class DynamicIndex:
                 return ans
             extra_qi: List[int] = []
             extra_u: List[int] = []
-            for i in range(B):
-                if ans[i]:
-                    continue
-                reached, new_reached, entries = self._expand_from(int(us[i]))
-                # staging probe: any staged venue in R whose component
-                # (or post-snapshot vertex) was reached?
-                cand = overlay.staging.candidates_in(rects[i])
-                if cand.size:
-                    cb = cand[cand < overlay.n_base]
-                    if cb.size and np.isin(self._comp[cb], reached).any():
-                        ans[i] = True
+            with span("dynamic.overlay", cat="dynamic", n=B):
+                for i in range(B):
+                    if ans[i]:
                         continue
-                    if any(int(w) in new_reached
-                           for w in cand[cand >= overlay.n_base]):
-                        ans[i] = True
-                        continue
-                # entry components: base reach opened by delta edges.
-                # comp(u)'s own probe already ran in step 1 — skip it.
-                cu = int(self._comp[us[i]]) if base_mask[i] else -1
-                for t in entries:
-                    if int(self._comp[t]) == cu:
-                        continue
-                    extra_qi.append(i)
-                    extra_u.append(t)
+                    reached, new_reached, entries = self._expand_from(
+                        int(us[i]))
+                    # staging probe: any staged venue in R whose
+                    # component (or post-snapshot vertex) was reached?
+                    cand = overlay.staging.candidates_in(rects[i])
+                    if cand.size:
+                        cb = cand[cand < overlay.n_base]
+                        if cb.size and np.isin(
+                                self._comp[cb], reached).any():
+                            ans[i] = True
+                            continue
+                        if any(int(w) in new_reached
+                               for w in cand[cand >= overlay.n_base]):
+                            ans[i] = True
+                            continue
+                    # entry components: base reach opened by delta edges.
+                    # comp(u)'s own probe already ran in step 1 — skip it.
+                    cu = int(self._comp[us[i]]) if base_mask[i] else -1
+                    for t in entries:
+                        if int(self._comp[t]) == cu:
+                            continue
+                        extra_qi.append(i)
+                        extra_u.append(t)
             if extra_u:
                 got = self._base_probe(
                     np.asarray(extra_u, dtype=np.int64),
@@ -803,14 +808,16 @@ class DynamicIndex:
     def _build_static(self, snapshot: GeosocialGraph):
         from ..core.api import build_index
 
-        index = build_index(snapshot, self.method, **self._build_kw)
-        substrate = self._build_reach_substrate(snapshot)
+        with span("dynamic.compaction_build", cat="dynamic",
+                  n=snapshot.n_nodes):
+            index = build_index(snapshot, self.method, **self._build_kw)
+            substrate = self._build_reach_substrate(snapshot)
         return index, substrate
 
     def _finish_compaction(self, snapshot, built, cut: int,
                            t_build: float) -> None:
         index, substrate = built
-        with self._lock:
+        with self._lock, span("dynamic.compaction_swap", cat="dynamic"):
             tail = self._oplog[cut:]
             self._install_base(snapshot, index, substrate)
             self._oplog = []

@@ -15,11 +15,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ...obs import REGISTRY, span
 from .kernel import TB, TP, range_query_pallas
 from .ref import range_query_ref
 
 # Number of host-side forest transpositions performed since import —
 # benchmarks read this to assert the steady-state count stays flat.
+# (Mirrored into the obs registry as "range_query.soa_builds"; the int
+# stays because benches read module state directly across reloads.)
 SOA_BUILDS = 0
 
 
@@ -30,14 +33,17 @@ def forest_to_soa(forest) -> Tuple[np.ndarray, np.ndarray]:
     """
     global SOA_BUILDS
     SOA_BUILDS += 1
-    dim = forest.dim
-    P = len(forest.entries)
-    Pp = max(TP, ((P + TP - 1) // TP) * TP)
-    soa = np.empty((2 * dim, Pp), dtype=np.float32)
-    soa[:dim, :] = 1.0
-    soa[dim:, :] = 0.0
-    if P:
-        soa[:, :P] = forest.entries.T
+    REGISTRY.counter("range_query.soa_builds").inc()
+    with span("build.soa_transpose", cat="build",
+              entries=int(len(forest.entries))):
+        dim = forest.dim
+        P = len(forest.entries)
+        Pp = max(TP, ((P + TP - 1) // TP) * TP)
+        soa = np.empty((2 * dim, Pp), dtype=np.float32)
+        soa[:dim, :] = 1.0
+        soa[dim:, :] = 0.0
+        if P:
+            soa[:, :P] = forest.entries.T
     return soa, forest.entry_off.astype(np.int32)
 
 

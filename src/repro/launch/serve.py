@@ -40,14 +40,17 @@ import time
 
 import numpy as np
 
+from .. import obs
 from ..core import batch_query, build_index, index_nbytes
 from ..data import get_dataset, workload
 
 
 def _percentiles(lat_s: np.ndarray) -> dict:
-    """{p50, p95, p99} per-query latency in microseconds."""
+    """{p50, p95, p99} per-query latency in microseconds — through the
+    one Histogram implementation (``repro.obs``), exact on a replayed
+    sample."""
     lat_us = np.asarray(lat_s, dtype=np.float64) * 1e6
-    return {f"p{p}": float(np.percentile(lat_us, p)) for p in (50, 95, 99)}
+    return obs.latency_percentiles(lat_us)
 
 
 def _fmt_pct(pct: dict) -> str:
@@ -283,8 +286,19 @@ def main():
                     help="cluster frontend deadline flush (ms)")
     ap.add_argument("--verify", type=int, default=64,
                     help="queries to verify against the BFS oracle")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable repro.obs span/metric recording and "
+                         "dump trace.json / metrics.json / "
+                         "querylog.jsonl after serving")
+    ap.add_argument("--obs-dir", default="results/obs",
+                    help="directory for the --obs artifacts")
+    ap.add_argument("--obs-profile", default="",
+                    help="logdir for an opt-in jax.profiler device "
+                         "trace of the timed pass (TensorBoard format)")
     args = ap.parse_args()
 
+    if args.obs:
+        obs.enable()
     g = get_dataset(args.dataset, scale=args.scale)
     print(f"[serve] dataset {args.dataset} x{args.scale}: "
           f"{g.n_nodes} nodes, {g.n_edges} edges, {g.n_spatial} venues")
@@ -294,7 +308,12 @@ def main():
           f"size {index_nbytes(index)['total'] / 1e6:.1f} MB")
 
     if args.query_class != "reach":
-        _serve_query_class(index, g, args)
+        with obs.device_trace(args.obs_profile,
+                              enabled=bool(args.obs_profile)):
+            t_q0 = time.perf_counter()
+            _serve_query_class(index, g, args)
+            t_q1 = time.perf_counter()
+        _obs_report(args, t_q0, t_q1)
         return
 
     us, rects = workload(g, n_queries=args.queries,
@@ -316,48 +335,69 @@ def main():
     )
     # host reference answers, for the arms that verify against them
     host = None if host_arm else batch_query(index, us, rects)
-    if args.engine == "cluster":
-        ans, lats, dt = _serve_cluster(index, us, rects, args)
-    elif host_arm:
-        ans, lats, dt = _serve_batched(
-            lambda ub, rb: batch_query(index, ub, rb), us, rects,
-            args.batch)
-    elif args.engine == "device":
-        from ..core import engine_for
+    with obs.device_trace(args.obs_profile, enabled=bool(args.obs_profile)):
+        t_q0 = time.perf_counter()
+        with obs.span(f"serve.{args.engine}_pass", cat="serve", n=len(us)):
+            if args.engine == "cluster":
+                ans, lats, dt = _serve_cluster(index, us, rects, args)
+            elif host_arm:
+                ans, lats, dt = _serve_batched(
+                    lambda ub, rb: batch_query(index, ub, rb), us, rects,
+                    args.batch)
+            elif args.engine == "device":
+                from ..core import engine_for
 
-        eng = engine_for(index, required=True)
-        ans, lats, dt = _serve_batched(eng.query_batch, us, rects,
-                                       args.batch)
-        print(f"[serve] device engine: {eng.n_compiles} compiled shapes, "
-              f"{eng.stats['tiles_scanned']}/"
-              f"{eng.stats['tiles_full_scan']} leaf tiles scanned "
-              f"(vs full leaf scan)")
-    else:
-        if args.engine == "wavefront":
-            from ..core import query_jax_wavefront
+                eng = engine_for(index, required=True)
+                ans, lats, dt = _serve_batched(eng.query_batch, us, rects,
+                                               args.batch)
+                print(f"[serve] device engine: {eng.n_compiles} compiled "
+                      f"shapes, {eng.stats['tiles_scanned']}/"
+                      f"{eng.stats['tiles_full_scan']} leaf tiles scanned "
+                      f"(vs full leaf scan)")
+            else:
+                if args.engine == "wavefront":
+                    from ..core import query_jax_wavefront
 
-            def fn(ub, rb):
-                return query_jax_wavefront(
-                    index.forest, index.lookup_tree(ub), rb)[0]
-        else:
-            from ..kernels.range_query.ops import range_query_forest
+                    def fn(ub, rb):
+                        return query_jax_wavefront(
+                            index.forest, index.lookup_tree(ub), rb)[0]
+                else:
+                    from ..kernels.range_query.ops import range_query_forest
 
-            def fn(ub, rb):
-                return range_query_forest(
-                    index.forest, index.lookup_tree(ub), rb)
-        ans, lats, dt = _serve_batched(fn, us, rects, args.batch)
-        # wavefront/kernel probe trees only — mask the Alg. 2
-        # spatial-sink special case the full pipeline handles
-        exc = getattr(index, "excluded", None)
-        m = ~exc[us] if exc is not None else np.ones(len(us), bool)
-        assert (ans[m] == host[m]).all(), "engine mismatch"
-        ans = host
+                    def fn(ub, rb):
+                        return range_query_forest(
+                            index.forest, index.lookup_tree(ub), rb)
+                ans, lats, dt = _serve_batched(fn, us, rects, args.batch)
+                # wavefront/kernel probe trees only — mask the Alg. 2
+                # spatial-sink special case the full pipeline handles
+                exc = getattr(index, "excluded", None)
+                m = ~exc[us] if exc is not None else np.ones(len(us), bool)
+                assert (ans[m] == host[m]).all(), "engine mismatch"
+                ans = host
+        t_q1 = time.perf_counter()
     if args.engine in ("device", "cluster"):
         assert (ans == host).all(), f"{args.engine} engine mismatch"
     pct = _percentiles(lats)
     print(f"[serve] {args.engine}: {len(us)} queries in {dt * 1e3:.1f} ms "
           f"({dt / len(us) * 1e6:.2f} us/query mean), "
           f"{_fmt_pct(pct)}, {int(np.sum(ans))} positive")
+    _obs_report(args, t_q0, t_q1)
+
+
+def _obs_report(args, t_q0: float, t_q1: float) -> None:
+    """--obs epilogue: span coverage of the timed pass, the top stage
+    totals, and the trace/metrics/querylog artifact dump."""
+    if not args.obs:
+        return
+    cov = obs.coverage(t_q0, t_q1)
+    totals = sorted(obs.stage_totals().items(),
+                    key=lambda kv: kv[1], reverse=True)
+    top = ", ".join(f"{k} {v / 1e3:.1f}ms" for k, v in totals[:6])
+    print(f"[serve] obs: span coverage {cov * 100:.1f}% of the timed "
+          f"pass; top stages: {top}")
+    paths = obs.dump(args.obs_dir)
+    print(f"[serve] obs: wrote {paths['trace']} (chrome://tracing), "
+          f"{paths['metrics']}, {paths['querylog']}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,146 @@
+"""Structured query log: the durable record of what was actually served.
+
+Every served query can append one bounded-memory record — vertex class,
+query class, log2 rect-area bucket, owning shard, latency, result
+cardinality — the direct input for the planned result cache (cache key =
+``(vertex_class, rect_bucket)``) and query-log-driven hot-shard
+repartitioning (shard load = records per shard).  The log is a
+ring buffer (oldest records drop once ``capacity`` is reached, with a
+drop counter, never unbounded growth) plus always-cheap aggregate
+counters that survive ring eviction; ``to_jsonl`` exports the retained
+window for offline analysis.
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import math
+import threading
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+FIELDS = ("t", "query_class", "vertex_class", "rect_bucket", "shard",
+          "latency_us", "cardinality")
+
+
+def rect_bucket(rect) -> int:
+    """log2 bucket of the rect's area — the workload-skew key.
+
+    Degenerate (zero-area) rects bucket to -64; buckets clamp to
+    [-63, 63] so the key space stays enumerable for cache sizing.
+    """
+    r = np.asarray(rect, dtype=np.float64).ravel()
+    dim = len(r) // 2
+    area = 1.0
+    for a in range(dim):
+        area *= max(float(r[dim + a] - r[a]), 0.0)
+    if area <= 0.0:
+        return -64
+    return int(np.clip(math.floor(math.log2(area)), -63, 63))
+
+
+def vertex_class_of(index_like, us) -> np.ndarray:
+    """Coarse per-vertex classes from whatever the serving object
+    exposes: ``sink`` (excluded spatial sink — Alg. 2's special case),
+    ``user`` (routed through a tree probe), ``unknown`` otherwise."""
+    us = np.asarray(us, dtype=np.int64)
+    exc = getattr(index_like, "_excluded_host", None)
+    if exc is None:
+        exc = getattr(index_like, "excluded", None)
+    if exc is None:
+        return np.full(len(us), "unknown", dtype=object)
+    out = np.full(len(us), "user", dtype=object)
+    out[np.asarray(exc)[us]] = "sink"
+    return out
+
+
+class QueryLog:
+    """Bounded ring of per-query records + eviction-proof aggregates."""
+
+    def __init__(self, capacity: int = 65536):
+        self.capacity = int(capacity)
+        self._lock = threading.Lock()
+        self._ring: collections.deque = collections.deque(maxlen=self.capacity)
+        self.total = 0
+        self.by_class: Dict[str, int] = {}
+        self.by_shard: Dict[int, int] = {}
+
+    def record(self, query_class: str, vertex_class: str, rect_b: int,
+               shard: int, latency_s: float, cardinality: int,
+               t: Optional[float] = None) -> None:
+        rec = (t if t is not None else time.time(), query_class,
+               vertex_class, int(rect_b), int(shard),
+               float(latency_s) * 1e6, int(cardinality))
+        with self._lock:
+            self._ring.append(rec)
+            self.total += 1
+            self.by_class[query_class] = self.by_class.get(query_class, 0) + 1
+            self.by_shard[rec[4]] = self.by_shard.get(rec[4], 0) + 1
+
+    def record_batch(self, query_class: str, vertex_classes, rects,
+                     shards, latencies_s, cardinalities) -> None:
+        """Vectorised append for a served batch (one lock per record,
+        shared wall timestamp)."""
+        now = time.time()
+        shards = np.asarray(shards)
+        lats = np.asarray(latencies_s, dtype=np.float64)
+        cards = np.asarray(cardinalities)
+        for i in range(len(lats)):
+            self.record(query_class, str(vertex_classes[i]),
+                        rect_bucket(rects[i]), int(shards[i]),
+                        float(lats[i]), int(cards[i]), t=now)
+
+    # -- introspection --------------------------------------------------
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._ring)
+
+    @property
+    def dropped(self) -> int:
+        """Records evicted from the ring (aggregates still count them)."""
+        with self._lock:
+            return self.total - len(self._ring)
+
+    def records(self) -> list:
+        with self._lock:
+            return list(self._ring)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            n = len(self._ring)
+            lat = np.fromiter((r[5] for r in self._ring), dtype=np.float64,
+                              count=n)
+            out = {
+                "retained": n,
+                "total": self.total,
+                "dropped": self.total - n,
+                "capacity": self.capacity,
+                "by_class": dict(self.by_class),
+                "by_shard": {str(k): v
+                             for k, v in sorted(self.by_shard.items())},
+            }
+        if n:
+            out["latency_us"] = {
+                f"p{p}": float(np.percentile(lat, p)) for p in (50, 95, 99)}
+        return out
+
+    def to_jsonl(self, path: str) -> str:
+        """Export the retained window, one JSON object per line."""
+        with open(path, "w") as f:
+            for rec in self.records():
+                f.write(json.dumps(dict(zip(FIELDS, rec))) + "\n")
+        return path
+
+    def clear(self) -> None:
+        with self._lock:
+            self._ring.clear()
+            self.total = 0
+            self.by_class = {}
+            self.by_shard = {}
+
+
+QUERY_LOG = QueryLog()

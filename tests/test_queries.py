@@ -390,7 +390,8 @@ def test_batch_query_device_fallback_warns_or_raises(graph):
     us, rects = workload(graph, 8, extent_ratio=0.05, seed=0)
     import repro.core.api as api_mod
 
-    api_mod._FALLBACK_WARNED.discard("GeoReachIndex")
+    api_mod._FALLBACK_WARNED.discard(
+        ("unsupported-index", "GeoReachIndex"))
     with pytest.warns(RuntimeWarning, match="falling back"):
         batch_query(geo, us, rects, engine="device")
     # one-time: a second call stays silent
