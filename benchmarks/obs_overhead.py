@@ -32,6 +32,7 @@ import numpy as np
 from repro import obs
 from repro.core import QueryEngine, build_2dreach
 from repro.data import get_dataset, workload
+from repro.resilience.faults import INJECTOR, FaultPlan, fault_point, inject
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT = os.path.join(ROOT, "results", "obs_overhead.json")
@@ -78,6 +79,30 @@ def hooks_per_batch(eng, us, rects) -> int:
     return n + 1          # + the gated _obs_batch metrics block
 
 
+def disabled_fault_point_cost_s() -> float:
+    """Per-call seconds of a disabled ``fault_point()`` — the same
+    single-attribute-check promise the obs spans make."""
+    assert not INJECTOR.enabled
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        for _i in range(SPAN_CALLS):
+            fault_point("overhead.probe")
+        best = min(best, (time.perf_counter() - t0) / SPAN_CALLS)
+    return best
+
+
+def fault_hooks_per_batch(eng, us, rects) -> int:
+    """Fault-point crossings one engine batch makes, counted by running
+    a batch with an *empty* plan installed (every hit is a no-op but
+    still counted by the injector)."""
+    with inject(FaultPlan()):
+        n0 = INJECTOR.hits_total
+        eng.query_batch(us, rects)
+        n = INJECTOR.hits_total - n0
+    return n
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -95,14 +120,20 @@ def main():
     per_batch = batch_time_s(eng, us, rects)
     hooks = hooks_per_batch(eng, us, rects)
     overhead = hooks * per_hook / per_batch
+    fp_hook = disabled_fault_point_cost_s()
+    fp_hooks = fault_hooks_per_batch(eng, us, rects)
+    fp_overhead = fp_hooks * fp_hook / per_batch
 
     report = {
         "disabled_span_cost_ns": per_hook * 1e9,
         "hooks_per_batch": hooks,
         "batch_time_us_disabled": per_batch * 1e6,
         "disabled_overhead_fraction": overhead,
+        "disabled_fault_point_cost_ns": fp_hook * 1e9,
+        "fault_hooks_per_batch": fp_hooks,
+        "disabled_fault_overhead_fraction": fp_overhead,
         "gate": GATE,
-        "passed": bool(overhead < GATE),
+        "passed": bool(overhead < GATE and fp_overhead < GATE),
     }
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
@@ -111,6 +142,10 @@ def main():
     assert overhead < GATE, (
         f"disabled obs instrumentation costs {overhead * 100:.2f}% of a "
         f"batch ({hooks} hooks x {per_hook * 1e9:.0f}ns vs "
+        f"{per_batch * 1e6:.0f}us) — over the {GATE * 100:.0f}% gate")
+    assert fp_overhead < GATE, (
+        f"disabled fault hooks cost {fp_overhead * 100:.2f}% of a batch "
+        f"({fp_hooks} hooks x {fp_hook * 1e9:.0f}ns vs "
         f"{per_batch * 1e6:.0f}us) — over the {GATE * 100:.0f}% gate")
 
 

@@ -191,6 +191,43 @@ def engine_sweep(dataset="gowalla", scale=0.5, n_q=2000,
     return rows
 
 
+def degraded_arm(dataset="gowalla", scale=0.5, n_q=2000, fanout=16,
+                 repeats=5) -> Dict:
+    """Host-fallback latency under forced degradation (``--degraded``).
+
+    Trips the resilient wrapper's breaker so every query takes the
+    exact host descent, the path a dead device degrades to — recording
+    what the SLO costs when the accelerator is gone.  Answers are
+    asserted bit-identical to the healthy device path first."""
+    from repro.resilience import BreakerPolicy, ResilientEngine
+
+    g = get_dataset(dataset, scale=scale)
+    us, rects = workload(g, n_q, extent_ratio=0.05, seed=5)
+    idx = build_2dreach(g, variant="comp", fanout=fanout)
+    res = ResilientEngine(
+        QueryEngine(idx), idx,
+        breaker=BreakerPolicy(reset_timeout_s=float("inf")))
+    healthy = res.query_batch(us, rects)
+    dt_dev = _t(lambda: res.query_batch(us, rects), repeats=repeats)
+    res.trip()                        # breaker never half-opens again
+    got = res.query_batch(us, rects)
+    exact = bool((got == healthy).all())
+    assert exact, "degraded answers drifted from the device path"
+    dt_host = _t(lambda: res.query_batch(us, rects), repeats=repeats)
+    pct = _lat_pct(lambda lo, hi: res.query_batch(us[lo:hi],
+                                                  rects[lo:hi]), n_q)
+    deg_hist = res._h_degraded.snapshot()
+    return dict(
+        fanout=fanout, n_q=n_q, exact=exact,
+        healthy_us_per_q=dt_dev / n_q * 1e6,
+        degraded_us_per_q=dt_host / n_q * 1e6,
+        degradation_x=dt_host / dt_dev if dt_dev else None,
+        fallback_batches=int(res.stats["fallback_batches"]),
+        fallback_queries=int(res.stats["fallback_queries"]),
+        degraded_hist_count=int(deg_hist["count"]),
+        **pct)
+
+
 def closure_sweep(scales=(0.1, 0.25, 0.5)) -> List[Dict]:
     """Build-side: per-level scatter-OR vs bitset-matmul fixpoint."""
     from repro.core import condense, scc_np
@@ -292,6 +329,10 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale subset for CI: one fanout/"
                          "capacity, small dataset, no closure sweep")
+    ap.add_argument("--degraded", action="store_true",
+                    help="also time the exact host-fallback path with "
+                         "the breaker tripped (additive 'degraded' "
+                         "field in BENCH_rangereach.json)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -301,11 +342,22 @@ def main():
     else:
         engines = engine_sweep()
         closure = closure_sweep()
+    degraded = None
+    if args.degraded:
+        degraded = (degraded_arm(dataset="yelp", scale=0.1, n_q=256,
+                                 repeats=2)
+                    if args.smoke else degraded_arm())
     out = {"engine_sweep": engines, "closure": closure}
+    if degraded is not None:
+        out["degraded"] = degraded
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
         json.dump(out, f, indent=1)
     summary = bench_summary(engines)
+    if degraded is not None:
+        # additive field: schema_version stays 2, consumers of the
+        # existing keys are unaffected
+        summary["degraded"] = degraded
     with open(BENCH_OUT, "w") as f:
         json.dump(summary, f, indent=1)
     for r in engines:
@@ -327,6 +379,10 @@ def main():
     assert all("p99" in v for v in
                summary["latency_percentiles_us"].values()), \
         "latency percentiles missing from the bench summary"
+    if degraded is not None:
+        assert degraded["exact"], "degraded arm must stay bit-identical"
+        assert degraded["fallback_queries"] > 0, \
+            "degraded arm never reached the host fallback"
 
 
 if __name__ == "__main__":

@@ -36,6 +36,13 @@ from ..obs import metrics as obs_metrics
 from ..obs import querylog as obs_querylog
 from ..obs import span
 from ..obs.tracer import TRACER as _TRACER
+from ..resilience.errors import (
+    DeadlineExceeded,
+    FrontendClosed,
+    Overloaded,
+    QueueFull,
+)
+from ..resilience.faults import fault_point
 
 
 class Frontend:
@@ -63,6 +70,20 @@ class Frontend:
                after ``enqueue + max_delay`` counts as a deadline miss;
                defaults to ``max_delay / 4`` (absorbs timer wakeup
                jitter without hiding real scheduler stalls).
+    slo:       default per-request deadline budget (s).  When a request
+               carries a budget (this default, or an explicit
+               ``deadline=`` on submit), admission control sheds it
+               with :class:`Overloaded` whenever the projected queue
+               wait (EWMA of recent batch service time × batches ahead,
+               plus the flush delay) already exceeds the budget —
+               failing fast beats queueing work that is doomed to
+               expire.  ``None`` (default) disables shedding.
+
+    Every *accepted* request resolves: with the exact answer, or with a
+    typed error (:class:`DeadlineExceeded` if its budget expired in the
+    queue, :class:`FrontendClosed` on ``close(drain=False)``, or the
+    engine's own exception latched onto the batch).  The scheduler
+    thread survives any engine failure.
     """
 
     def __init__(self, engine, max_batch: int = 256,
@@ -70,7 +91,8 @@ class Frontend:
                  metrics: Optional["obs_metrics.Registry"] = None,
                  query_log: Optional["obs_querylog.QueryLog"] = None,
                  clock: Optional[Callable[[], float]] = None,
-                 deadline_grace: Optional[float] = None):
+                 deadline_grace: Optional[float] = None,
+                 slo: Optional[float] = None):
         if max_batch < 1 or max_queue < max_batch:
             raise ValueError(
                 f"need 1 <= max_batch <= max_queue, got "
@@ -85,17 +107,22 @@ class Frontend:
         self.deadline_grace = (float(deadline_grace)
                                if deadline_grace is not None
                                else self.max_delay / 4.0)
+        self.slo = None if slo is None else float(slo)
         self._cond = threading.Condition()
         self._rect_len = None                 # fixed by the first submit
-        self._pending: List[tuple] = []       # (u, rect, future, t_enq)
+        # (u, rect, future, t_enq, t_deadline | None)
+        self._pending: List[tuple] = []
         self._inflight = False
         self._closed = False
         self._force = False
+        self._ewma_batch_s = 0.0              # recent batch service time
         self.stats: Dict[str, float] = {
             "n_requests": 0, "n_batches": 0, "n_flush_full": 0,
             "n_flush_deadline": 0, "n_flush_forced": 0,
             "batched_queries": 0, "max_pending_seen": 0,
             "n_deadline_misses": 0, "n_submit_blocked": 0,
+            "n_shed": 0, "n_queue_full_timeouts": 0,
+            "n_deadline_dropped": 0,
         }
         m = self.metrics
         self._g_depth = m.gauge("frontend.queue_depth")
@@ -104,6 +131,9 @@ class Frontend:
         self._c_requests = m.counter("frontend.requests")
         self._c_misses = m.counter("frontend.deadline_misses")
         self._c_blocked = m.counter("frontend.submit_blocked")
+        self._c_shed = m.counter("frontend.shed")
+        self._c_queue_full = m.counter("frontend.queue_full_timeouts")
+        self._c_dl_dropped = m.counter("frontend.deadline_dropped")
         self._h_wait = m.histogram("frontend.queue_wait_us")
         self._h_lateness = m.histogram("frontend.flush_lateness_us")
         self._h_batch = m.histogram("frontend.batch_size")
@@ -119,11 +149,22 @@ class Frontend:
     # client surface
     # ------------------------------------------------------------------
 
-    def submit(self, u: int, rect) -> "Future[bool]":
+    def submit(self, u: int, rect, timeout: Optional[float] = None,
+               deadline: Optional[float] = None) -> "Future[bool]":
         """Enqueue one request; returns a future resolving to the answer.
-        Blocks while the queue is at capacity (backpressure)."""
+
+        Blocks while the queue is at capacity (backpressure); with
+        ``timeout=`` the block is bounded and expiry raises
+        :class:`QueueFull` instead.  ``deadline=`` is this request's
+        budget in seconds from now (default: the frontend ``slo``);
+        requests whose budget expires while queued resolve to
+        :class:`DeadlineExceeded`, and requests whose budget is already
+        doomed by the projected queue wait are shed up front with
+        :class:`Overloaded`.  Raises :class:`FrontendClosed` after
+        :meth:`close`."""
         fut: Future = Future()
         rect = np.asarray(rect, dtype=np.float32).ravel()
+        budget = self.slo if deadline is None else float(deadline)
         with self._cond:
             # reject shape mismatches in the caller's thread — a ragged
             # rect must never reach batch assembly on the scheduler
@@ -133,15 +174,37 @@ class Frontend:
                 raise ValueError(
                     f"rect has {len(rect)} coords, expected "
                     f"{self._rect_len}")
+            if self._closed:
+                raise FrontendClosed("Frontend is closed")
+            if budget is not None and budget < self._projected_wait():
+                self.stats["n_shed"] += 1
+                self._c_shed.inc()
+                raise Overloaded(
+                    f"projected queue wait {self._projected_wait():.4f}s "
+                    f"exceeds deadline budget {budget:.4f}s")
             if len(self._pending) >= self.max_queue and not self._closed:
                 self.stats["n_submit_blocked"] += 1
                 self._c_blocked.inc()
+                t_end = (None if timeout is None
+                         else self._clock() + float(timeout))
                 while (len(self._pending) >= self.max_queue
                        and not self._closed):
-                    self._cond.wait()
+                    if t_end is None:
+                        self._cond.wait()
+                        continue
+                    rem = t_end - self._clock()
+                    if rem <= 0:
+                        self.stats["n_queue_full_timeouts"] += 1
+                        self._c_queue_full.inc()
+                        raise QueueFull(
+                            f"queue still at capacity "
+                            f"({self.max_queue}) after {timeout}s")
+                    self._cond.wait(timeout=rem)
             if self._closed:
-                raise RuntimeError("Frontend is closed")
-            self._pending.append((int(u), rect, fut, self._clock()))
+                raise FrontendClosed("Frontend is closed")
+            t_enq = self._clock()
+            t_dl = None if budget is None else t_enq + budget
+            self._pending.append((int(u), rect, fut, t_enq, t_dl))
             self.stats["n_requests"] += 1
             self._c_requests.inc()
             depth = len(self._pending)
@@ -150,6 +213,14 @@ class Frontend:
                 self.stats["max_pending_seen"], depth)
             self._cond.notify_all()
         return fut
+
+    def _projected_wait(self) -> float:
+        """Expected queue wait for a request arriving now (held lock):
+        the flush delay plus one EWMA batch service time per batch that
+        must drain first (inflight + queued-ahead + its own)."""
+        batches_ahead = (1 if self._inflight else 0) \
+            + len(self._pending) // self.max_batch + 1
+        return self.max_delay + batches_ahead * self._ewma_batch_s
 
     def submit_many(self, us: Sequence[int], rects,
                     timeout: Optional[float] = None) -> np.ndarray:
@@ -188,12 +259,34 @@ class Frontend:
                 break
             b <<= 1
 
-    def close(self, timeout: Optional[float] = None) -> None:
-        """Serve everything pending, then stop the scheduler thread."""
+    def close(self, timeout: Optional[float] = None,
+              drain: bool = True) -> None:
+        """Stop accepting requests and stop the scheduler thread.
+
+        ``drain=True`` (default) serves everything pending first;
+        ``drain=False`` fails every pending future with
+        :class:`FrontendClosed` and stops as soon as any inflight batch
+        finishes — either way no accepted future is left unresolved."""
+        failed: List[tuple] = []
         with self._cond:
             self._closed = True
+            if not drain:
+                failed = self._pending[:]
+                self._pending.clear()
+                self._g_depth.set(0)
             self._cond.notify_all()
+        if failed:
+            self._fail_batch(
+                failed, FrontendClosed("Frontend closed without drain"))
         self._thread.join(timeout=timeout)
+
+    @staticmethod
+    def _fail_batch(batch: List[tuple], exc: BaseException) -> None:
+        for item in batch:
+            try:
+                item[2].set_exception(exc)
+            except InvalidStateError:       # client cancelled meanwhile
+                pass
 
     def __enter__(self) -> "Frontend":
         return self
@@ -250,27 +343,57 @@ class Frontend:
             if lateness > self.deadline_grace:
                 self.stats["n_deadline_misses"] += 1
                 self._c_misses.inc()
-            self._serve(batch, reason)
+            t_serve = self._clock()
+            try:
+                self._serve(batch, reason)
+            except BaseException as e:  # noqa: BLE001 — last-resort latch
+                # _serve latches engine errors itself; this guard means
+                # even a failure in its own bookkeeping cannot strand
+                # futures or kill the scheduler thread
+                self._fail_batch(batch, e)
             with self._cond:
+                dt = self._clock() - t_serve
+                self._ewma_batch_s = (dt if self._ewma_batch_s == 0.0
+                                      else 0.2 * dt
+                                      + 0.8 * self._ewma_batch_s)
                 self._inflight = False
                 self._g_inflight.set(0)
                 self._cond.notify_all()
 
     def _serve(self, batch: List[tuple], reason: str) -> None:
+        # budget-expired requests are dropped at the flush boundary —
+        # serving them would spend engine time on answers nobody can
+        # use within their SLO
+        now = self._clock()
+        expired = [b for b in batch
+                   if b[4] is not None and now > b[4]]
+        if expired:
+            batch = [b for b in batch
+                     if b[4] is None or now <= b[4]]
+            self.stats["n_deadline_dropped"] += len(expired)
+            self._c_dl_dropped.inc(len(expired))
+            self._fail_batch(expired, DeadlineExceeded(
+                "deadline budget expired while queued"))
+            if not batch:
+                return
         try:
             # assembly inside the latch too: no input may ever kill the
             # scheduler thread and strand the batch's futures
             with span("frontend.flush", cat="frontend", n=len(batch),
                       reason=reason):
+                fault_point("frontend.queue_stall", n=len(batch))
                 us = np.array([b[0] for b in batch], dtype=np.int64)
                 rects = np.stack([b[1] for b in batch])
-                ans = self.engine.query_batch(us, rects)
+                fault_point("frontend.flush", n=len(batch))
+                if getattr(self.engine, "supports_deadline", False):
+                    dls = [b[4] - now for b in batch if b[4] is not None]
+                    ans = self.engine.query_batch(
+                        us, rects,
+                        deadline=min(dls) if dls else None)
+                else:
+                    ans = self.engine.query_batch(us, rects)
         except BaseException as e:  # latch the error onto every future
-            for _, _, fut, _ in batch:
-                try:
-                    fut.set_exception(e)
-                except InvalidStateError:   # client cancelled meanwhile
-                    pass
+            self._fail_batch(batch, e)
             return
         self.stats["n_batches"] += 1
         self.stats[reason] += 1
@@ -279,7 +402,7 @@ class Frontend:
         self._h_batch.record(len(batch))
         self._g_occupancy.set(len(batch) / self.max_batch)
         now = self._clock()
-        for (_, _, fut, t_enq), a in zip(batch, ans):
+        for (_, _, fut, t_enq, _), a in zip(batch, ans):
             self._h_wait.record((now - t_enq) * 1e6)
             try:
                 fut.set_result(bool(a))

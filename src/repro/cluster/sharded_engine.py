@@ -61,6 +61,7 @@ from ..kernels.range_query.kernel import TB
 from ..launch.mesh import make_shard_mesh
 from ..obs import REGISTRY, span
 from ..obs.tracer import TRACER as _TRACER
+from ..resilience.faults import fault_point
 from .partition import partition_forest, shard_arenas
 
 _AXIS = "data"
@@ -252,6 +253,7 @@ class ShardedEngine:
         B = len(us)
         if B == 0:
             return np.zeros(0, dtype=bool)
+        fault_point("cluster.query_batch", n=B)
         t0 = time.perf_counter()
         with span("cluster.query_batch", cat="cluster", n=B):
             with span("cluster.pad_batch", cat="cluster"):

@@ -65,6 +65,7 @@ from ..kernels.range_query.kernel import TB, TP
 from ..kernels.range_query.ops import forest_soa
 from ..obs import CounterDict, REGISTRY, span
 from ..obs.tracer import TRACER as _TRACER
+from ..resilience.faults import fault_point
 from .polygon import convex_halfplanes, points_in_polygon_region, polygon_bbox
 from .two_d_reach import TwoDReachIndex
 
@@ -425,6 +426,7 @@ class QueryEngine:
         qs, qe, cand_k)`` with ``cand_k`` already sliced to the K
         bucket."""
         B = len(us)
+        fault_point("engine.route_prune", n=B)
         with span("engine.pad_batch", cat="engine"):
             Bb, us_p, rsoa = pad_batch(us, rects, self.dim)
             rsoa_dev = jnp.asarray(rsoa)
@@ -466,6 +468,7 @@ class QueryEngine:
         B = len(us)
         if B == 0:
             return np.zeros(0, dtype=bool)
+        fault_point("engine.query_batch", n=B)
         t0 = time.perf_counter()
         with span("engine.query_batch", cat="engine", n=B):
             _, rsoa_dev, forced, qs, qe, cand_k = self._route_prune(

@@ -49,6 +49,7 @@ from ..core.condensation import condense
 from ..core.graph import GeosocialGraph, build_csr, make_graph
 from ..core.scc import scc_np
 from ..obs import span
+from ..resilience.faults import fault_point
 from .compaction import CompactionPolicy, Compactor
 from .overlay import DeltaOverlay
 
@@ -810,33 +811,60 @@ class DynamicIndex:
 
         with span("dynamic.compaction_build", cat="dynamic",
                   n=snapshot.n_nodes):
+            fault_point("dynamic.compaction.build", n=snapshot.n_nodes)
             index = build_index(snapshot, self.method, **self._build_kw)
+            fault_point("dynamic.compaction.mid_build")
             substrate = self._build_reach_substrate(snapshot)
         return index, substrate
+
+    #: everything the swap rebinds — a crash anywhere inside the swap
+    #: restores exactly these (plus a stats copy), so a failed
+    #: compaction leaves the index serving the pre-swap state
+    _SWAP_ATTRS = (
+        "_graph", "_index", "_comp", "_d", "_dag_indptr", "_dag_adj",
+        "_comp_rep", "_overlay", "_stamp_arr", "_stamp", "_cache",
+        "_base_engine", "_oplog",
+    )
 
     def _finish_compaction(self, snapshot, built, cut: int,
                            t_build: float) -> None:
         index, substrate = built
         with self._lock, span("dynamic.compaction_swap", cat="dynamic"):
+            fault_point("dynamic.compaction.pre_swap")
+            saved = {a: getattr(self, a) for a in self._SWAP_ATTRS}
+            saved_stats = dict(self.stats)
             tail = self._oplog[cut:]
-            self._install_base(snapshot, index, substrate)
-            self._oplog = []
-            self.stats["n_compactions"] += 1
-            self.stats["t_compaction_total"] += t_build
-            self.stats["t_last_compaction"] = t_build
-            self.stats["updates_since_compaction"] = 0
-            # replay mutations that raced the (background) build
-            self._replaying = True
             try:
-                for op in tail:
-                    if op[0] == "edge":
-                        self.add_edge(op[1], op[2])
-                    elif op[0] == "vertex":
-                        self.add_vertex(op[1])
-                    else:  # spatial
-                        self.add_spatial(op[1], (op[2], op[3]))
-            finally:
-                self._replaying = False
+                self._install_base(snapshot, index, substrate)
+                self._oplog = []
+                self.stats["n_compactions"] += 1
+                self.stats["t_compaction_total"] += t_build
+                self.stats["t_last_compaction"] = t_build
+                self.stats["updates_since_compaction"] = 0
+                fault_point("dynamic.compaction.mid_swap")
+                # replay mutations that raced the (background) build
+                self._replaying = True
+                try:
+                    fault_point("dynamic.compaction.replay", n=len(tail))
+                    for op in tail:
+                        if op[0] == "edge":
+                            self.add_edge(op[1], op[2])
+                        elif op[0] == "vertex":
+                            self.add_vertex(op[1])
+                        else:  # spatial
+                            self.add_spatial(op[1], (op[2], op[3]))
+                finally:
+                    self._replaying = False
+            except BaseException:
+                # atomic swap: every rebound attribute points back at
+                # the untouched pre-swap objects (the old overlay still
+                # holds the tail ops, the old op log still records
+                # them), so queries keep answering exactly
+                for a in self._SWAP_ATTRS:
+                    setattr(self, a, saved[a])
+                self.stats.clear()
+                self.stats.update(saved_stats)
+                raise
 
     def _compact_sync(self) -> None:
         snapshot, cut = self._begin_compaction()

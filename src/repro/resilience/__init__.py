@@ -1,0 +1,44 @@
+"""repro.resilience — fault-tolerant serving for the RangeReach stack.
+
+Four pieces, wired through engine → cluster → frontend → dynamic:
+
+* :mod:`~repro.resilience.faults` — deterministic, seedable fault
+  injection at named failure points (raise / bounded hang / latency
+  spike), a single attribute check when disabled;
+* :mod:`~repro.resilience.retry` — :class:`Deadline` budgets and
+  :class:`RetryPolicy` (exponential backoff, decorrelated jitter);
+* :mod:`~repro.resilience.breaker` — :class:`CircuitBreaker`
+  (closed → open → half-open with a single probe) per engine and per
+  shard;
+* :mod:`~repro.resilience.engine` — :class:`ResilientEngine`: retries
+  transient device failures, breaks on persistent ones, and degrades
+  **exactly** to the bit-identical host descent instead of failing.
+
+The global invariant (asserted by ``tests/test_chaos.py``): every
+request submitted to the stack resolves to the exact answer or one of
+the typed errors in :mod:`~repro.resilience.errors` — no hangs, no
+wrong answers.
+"""
+
+from .breaker import BreakerPolicy, CircuitBreaker
+from .engine import ResilientEngine
+from .errors import (
+    CircuitOpen,
+    DeadlineExceeded,
+    FrontendClosed,
+    InjectedFault,
+    Overloaded,
+    QueueFull,
+    ResilienceError,
+    ShardDropout,
+)
+from .faults import INJECTOR, FaultPlan, FaultSpec, fault_point, inject
+from .retry import Deadline, RetryPolicy
+
+__all__ = [
+    "BreakerPolicy", "CircuitBreaker", "CircuitOpen", "Deadline",
+    "DeadlineExceeded", "FaultPlan", "FaultSpec", "FrontendClosed",
+    "INJECTOR", "InjectedFault", "Overloaded", "QueueFull",
+    "ResilienceError", "ResilientEngine", "RetryPolicy", "ShardDropout",
+    "fault_point", "inject",
+]

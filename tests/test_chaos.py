@@ -1,0 +1,307 @@
+"""Chaos suite: the fault-tolerance invariant under injected failures.
+
+The invariant, end to end: **every submitted query resolves to the
+exact answer or a typed error — no hangs, no wrong answers** — while
+the fault injector raises, delays and stalls at the stack's named
+failure points on a deterministic seeded schedule.
+
+The big run (`test_chaos_invariant_bulk_faults`) pushes ≥ 500 injected
+faults through the resilient engine and checks exactness on every
+single answer; the frontend run layers admission control, queue
+deadlines and scheduler-latch faults on top; the compaction tests crash
+the swap at every stage boundary and verify the rollback leaves the
+dynamic index answering exactly.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import build_index, rangereach_oracle_batch
+from repro.core.engine import engine_for
+from repro.cluster import Frontend
+from repro.dynamic import NEVER, DynamicIndex
+from repro.obs.metrics import REGISTRY, Registry
+from repro.resilience import (
+    BreakerPolicy,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    Overloaded,
+    ResilienceError,
+    ResilientEngine,
+    RetryPolicy,
+    fault_point,
+    inject,
+)
+from repro.resilience.faults import INJECTOR
+from conftest import given, random_geosocial, random_queries, settings, st
+
+VARIANTS = ("2dreach", "2dreach-comp", "2dreach-pointer")
+
+COMPACTION_POINTS = (
+    "dynamic.compaction.build",
+    "dynamic.compaction.mid_build",
+    "dynamic.compaction.pre_swap",
+    "dynamic.compaction.mid_swap",
+    "dynamic.compaction.replay",
+)
+
+
+class SimDevice:
+    """Device-path stand-in: the exact host answer behind the engine's
+    fault point.  The real engines carry the same hook and the same
+    exactness contract (bit-identical to the host descent); the sim
+    keeps the chaos volume cheap and accelerator-independent."""
+
+    def __init__(self, index):
+        self.index = index
+        self.calls = 0
+
+    def query_batch(self, us, rects):
+        fault_point("engine.query_batch", n=len(us))
+        self.calls += 1
+        return self.index.query_batch(us, rects)
+
+
+def _fast_resilient(idx, dev, **kw):
+    kw.setdefault("retry",
+                  RetryPolicy(max_attempts=2, base_s=1e-6, cap_s=1e-5))
+    kw.setdefault("breaker",
+                  BreakerPolicy(failure_threshold=2, reset_timeout_s=0.0))
+    kw.setdefault("sleep", lambda s: None)
+    kw.setdefault("registry", Registry())
+    return ResilientEngine(dev, idx, **kw)
+
+
+@pytest.fixture(scope="module")
+def chaos_index():
+    rng = np.random.default_rng(42)
+    g = random_geosocial(rng, 200, 560)
+    idx = build_index(g, "2dreach")
+    us, rects = random_queries(rng, g, 400)
+    want = idx.query_batch(us, rects)
+    # the host index is itself oracle-exact (the invariant's anchor)
+    np.testing.assert_array_equal(
+        want, rangereach_oracle_batch(g, us, rects))
+    return idx, us, rects, want
+
+
+def test_chaos_invariant_bulk_faults(chaos_index):
+    """≥ 500 injected device faults; every answer exact, none lost."""
+    idx, us, rects, want = chaos_index
+    res = _fast_resilient(idx, SimDevice(idx))
+    plan = FaultPlan(
+        FaultSpec("engine.query_batch", kind="raise", p=0.6,
+                  max_fires=None),
+        seed=123)
+    injected_before = REGISTRY.counter("faults.injected").value
+    wrong = 0
+    n_batches = 650                     # ~0.93 fires/batch at p=0.6
+    with inject(plan):
+        for b in range(n_batches):
+            sel = np.arange(b * 4, b * 4 + 4) % len(us)
+            got = res.query_batch(us[sel], rects[sel])
+            wrong += int((got != want[sel]).sum())
+    assert wrong == 0
+    assert plan.total_fires >= 500, plan.total_fires
+    assert (REGISTRY.counter("faults.injected").value
+            >= injected_before + 500)
+    # both paths genuinely exercised
+    assert res.stats["device_batches"] > 0
+    assert res.stats["fallback_batches"] > 0
+    assert res.stats["retries"] > 0
+
+
+def test_chaos_frontend_end_to_end(chaos_index):
+    """Frontend + resilient engine under a mixed fault plan: every
+    future resolves (bounded wait) to the exact answer or a typed
+    error; the scheduler thread survives everything."""
+    idx, us, rects, want = chaos_index
+    res = _fast_resilient(idx, SimDevice(idx))
+    plan = FaultPlan(
+        FaultSpec("engine.query_batch", kind="raise", p=0.4,
+                  max_fires=None),
+        FaultSpec("engine.query_batch", kind="delay", p=0.1,
+                  delay_s=2e-4, max_fires=None),
+        # scheduler-latch faults: latched onto the batch futures as
+        # typed-but-injected errors, never a hang
+        FaultSpec("frontend.flush", kind="raise", p=0.05,
+                  max_fires=None),
+        FaultSpec("frontend.queue_stall", kind="delay", p=0.05,
+                  delay_s=2e-4, max_fires=None),
+        seed=77)
+    shed = served = typed = wrong = 0
+    with Frontend(res, max_batch=16, max_delay=5e-4, max_queue=512,
+                  metrics=Registry()) as fe:
+        with inject(plan):
+            futs = []
+            for i in range(len(us)):
+                try:
+                    # a few requests carry deadline budgets — some are
+                    # doomed on purpose and must shed or expire typed
+                    dl = 0.0 if i % 37 == 0 else (
+                        5.0 if i % 5 == 0 else None)
+                    futs.append((i, fe.submit(us[i], rects[i],
+                                              deadline=dl)))
+                except Overloaded:
+                    shed += 1
+            for i, fut in futs:
+                try:
+                    got = fut.result(timeout=30)   # bounded: no hangs
+                    served += 1
+                    wrong += int(got != bool(want[i]))
+                except (ResilienceError, InjectedFault):
+                    typed += 1
+        # faults gone: the surviving scheduler still serves exactly
+        assert fe.submit(us[0], rects[0]).result(timeout=30) \
+            == bool(want[0])
+    assert wrong == 0
+    assert served > 0
+    assert shed > 0                     # doomed budgets were shed
+    assert plan.total_fires > 0
+    assert served + typed == len(futs)  # every accepted future resolved
+
+
+def test_chaos_hang_is_bounded(chaos_index):
+    """A hang-kind fault stalls the device call until the plan's
+    release — the caller's thread is stuck *inside* the injected hang,
+    not lost; release ends it and the answer is still exact."""
+    idx, us, rects, want = chaos_index
+    res = _fast_resilient(idx, SimDevice(idx))
+    plan = FaultPlan(
+        FaultSpec("engine.query_batch", kind="hang", hang_s=30.0))
+    out = {}
+    with inject(plan):
+        def call():
+            out["got"] = res.query_batch(us[:8], rects[:8])
+
+        t = threading.Thread(target=call, daemon=True)
+        t.start()
+        t.join(timeout=0.1)
+        assert t.is_alive()             # genuinely stalled
+        plan.release.set()
+        t.join(timeout=30)
+        assert not t.is_alive(), "hang must end on release"
+    np.testing.assert_array_equal(out["got"], want[:8])
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_degraded_path_bit_identical_all_variants(variant):
+    """The degradation target equals the healthy device path bit for
+    bit on every 2DReach variant (PR 2/5 exactness makes the fallback
+    free of answer drift)."""
+    rng = np.random.default_rng(9)
+    g = random_geosocial(rng, 150, 420)
+    idx = build_index(g, variant)
+    us, rects = random_queries(rng, g, 96)
+    dev = engine_for(idx, required=True)
+    healthy = ResilientEngine(dev, idx, registry=Registry())
+    got_dev = healthy.query_batch(us, rects)
+    degraded = ResilientEngine(dev, idx, registry=Registry())
+    degraded.trip()
+    got_host = degraded.query_batch(us, rects)
+    np.testing.assert_array_equal(got_dev, got_host)
+    np.testing.assert_array_equal(
+        got_host, rangereach_oracle_batch(g, us, rects))
+    assert degraded.stats["fallback_batches"] == 1
+
+
+# ----------------------------------------------------------------------
+# crash-safe compaction
+# ----------------------------------------------------------------------
+
+
+def _mutated_dynamic(seed, n=50, m=140, n_ops=25):
+    rng = np.random.default_rng(seed)
+    g = random_geosocial(rng, n, m)
+    dyn = DynamicIndex(g, "2dreach", engine="host", policy=NEVER)
+    for _ in range(n_ops):
+        dyn.add_edge(int(rng.integers(0, n)), int(rng.integers(0, n)))
+    us, rects = random_queries(np.random.default_rng(seed + 1),
+                               dyn._materialise(), 48)
+    want = rangereach_oracle_batch(dyn._materialise(), us, rects)
+    return dyn, us, rects, want
+
+
+def _crash_compaction_at(point, seed):
+    dyn, us, rects, want = _mutated_dynamic(seed)
+    np.testing.assert_array_equal(dyn.query_batch(us, rects), want)
+    with inject(FaultPlan(FaultSpec(point, kind="raise"))):
+        with pytest.raises(InjectedFault):
+            dyn.compact(background=False)
+    # crash at any stage boundary: the pre-swap state is fully restored
+    assert dyn.stats["n_compactions"] == 0
+    np.testing.assert_array_equal(dyn.query_batch(us, rects), want)
+    # and the crashed compaction is retryable
+    assert dyn.compact(background=False)
+    assert dyn.stats["n_compactions"] == 1
+    assert dyn.overlay_size == 0
+    np.testing.assert_array_equal(dyn.query_batch(us, rects), want)
+
+
+@pytest.mark.parametrize("point", COMPACTION_POINTS)
+@pytest.mark.parametrize("seed", (3, 17))
+def test_compaction_crash_rolls_back(point, seed):
+    _crash_compaction_at(point, seed)
+
+
+@pytest.mark.parametrize("point", COMPACTION_POINTS)
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16))
+def test_compaction_crash_rolls_back_property(point, seed):
+    """Property form: any mutation history, any stage boundary — a
+    crashed swap never changes an answer."""
+    _crash_compaction_at(point, seed)
+
+
+def test_background_compaction_crash_latches_and_recovers():
+    dyn, us, rects, want = _mutated_dynamic(seed=29)
+    plan = FaultPlan(
+        FaultSpec("dynamic.compaction.mid_swap", kind="raise"))
+    with inject(plan):
+        assert dyn.compact(background=True)
+        with pytest.raises(RuntimeError):
+            dyn.join_compaction(timeout=60)
+    assert isinstance(dyn.compaction_error, InjectedFault)
+    # latched failure suppresses policy-driven retries...
+    assert not dyn.maybe_compact()
+    # ...but never corrupts answers
+    np.testing.assert_array_equal(dyn.query_batch(us, rects), want)
+    # explicit retry clears the latch and completes
+    assert dyn.compact(background=True)
+    dyn.join_compaction(timeout=60)
+    assert dyn.compaction_error is None
+    assert dyn.stats["n_compactions"] == 1
+    np.testing.assert_array_equal(dyn.query_batch(us, rects), want)
+
+
+def test_compaction_crash_rollback_with_racing_tail():
+    """Crash during the op-log replay of mutations that raced the
+    build: rollback restores the old overlay (which still carries the
+    raced ops), so nothing is lost or double-applied."""
+    dyn, us, rects, _ = _mutated_dynamic(seed=31)
+    cut_ops = len(dyn._oplog)
+    # stage a tail beyond the cut by compacting from a snapshot taken
+    # before these mutations: emulate via background build + mutations
+    snapshot, cut = dyn._begin_compaction()
+    built = dyn._build_static(snapshot)
+    rng = np.random.default_rng(5)
+    for _ in range(6):                  # race: mutations after the cut
+        dyn.add_edge(int(rng.integers(0, dyn.n_base)),
+                     int(rng.integers(0, dyn.n_base)))
+    want = rangereach_oracle_batch(dyn._materialise(), us, rects)
+    np.testing.assert_array_equal(dyn.query_batch(us, rects), want)
+    with inject(FaultPlan(
+            FaultSpec("dynamic.compaction.replay", kind="raise"))):
+        with pytest.raises(InjectedFault):
+            dyn._finish_compaction(snapshot, built, cut, 0.0)
+    assert len(dyn._oplog) == cut_ops + 6   # op log intact
+    np.testing.assert_array_equal(dyn.query_batch(us, rects), want)
+    # clean retry replays the tail exactly once
+    dyn._finish_compaction(snapshot, built, cut, 0.0)
+    np.testing.assert_array_equal(dyn.query_batch(us, rects), want)
+    assert INJECTOR.enabled is False

@@ -17,6 +17,12 @@ import pytest
 
 from repro.cluster import Frontend
 from repro.obs.metrics import Registry
+from repro.resilience import (
+    DeadlineExceeded,
+    FrontendClosed,
+    Overloaded,
+    QueueFull,
+)
 
 RECT = np.array([0.0, 0.0, 1.0, 1.0], dtype=np.float32)
 
@@ -204,3 +210,135 @@ def test_fake_clock_does_not_leak_into_default_frontend():
         got = fe.submit_many(np.arange(4), np.tile(RECT, (4, 1)))
     assert got.all()
     assert fe.stats["n_batches"] >= 1
+
+
+# ----------------------------------------------------------------------
+# typed errors: QueueFull, Overloaded, DeadlineExceeded, FrontendClosed
+# ----------------------------------------------------------------------
+
+
+def test_submit_timeout_raises_queue_full():
+    reg = Registry()
+    eng = BlockableEngine(block_first=True)
+    fe = Frontend(eng, max_batch=2, max_queue=2, max_delay=10.0,
+                  metrics=reg)
+    try:
+        fe.submit(0, RECT)
+        fe.submit(1, RECT)                 # full flush; engine blocks
+        assert eng.entered.wait(timeout=10)
+        fe.submit(2, RECT)
+        fe.submit(3, RECT)                 # queue at capacity
+        with pytest.raises(QueueFull):
+            fe.submit(4, RECT, timeout=0.05)
+        assert fe.stats["n_queue_full_timeouts"] == 1
+        assert reg.counter("frontend.queue_full_timeouts").value == 1
+        # a QueueFull submit left no residue: capacity frees, serving
+        # continues, and the shed request was simply never enqueued
+        eng.release.set()
+        assert fe.stats["n_requests"] == 4
+    finally:
+        fe.close()
+
+
+def test_overloaded_shed_on_doomed_deadline():
+    """A request whose budget cannot survive even the flush delay is
+    shed with Overloaded instead of queued to die."""
+    reg = Registry()
+    eng = BlockableEngine()
+    fe = Frontend(eng, max_batch=8, max_delay=0.5, max_queue=16,
+                  metrics=reg, slo=0.01)
+    try:
+        with pytest.raises(Overloaded):
+            fe.submit(0, RECT)             # default slo 10ms < 500ms
+        # an explicit generous deadline overrides the doomed default
+        fut = fe.submit(1, RECT, deadline=60.0)
+        fe.flush(timeout=10)
+        assert fut.result(timeout=10) is True
+        assert fe.stats["n_shed"] == 1
+        assert reg.counter("frontend.shed").value == 1
+    finally:
+        fe.close()
+
+
+def test_deadline_expired_in_queue_is_dropped_typed():
+    clock = FakeClock()
+    reg = Registry()
+    eng = BlockableEngine(block_first=True)
+    fe = Frontend(eng, max_batch=1, max_queue=8, max_delay=0.1,
+                  metrics=reg, clock=clock)
+    try:
+        fa = fe.submit(0, RECT)            # flushes alone; blocks engine
+        assert eng.entered.wait(timeout=10)
+        fb = fe.submit(1, RECT, deadline=0.5)
+        fc = fe.submit(2, RECT, deadline=50.0)
+        clock.advance(fe, 1.0)             # fb's budget expires queued
+        eng.release.set()
+        assert fa.result(timeout=10) is True
+        with pytest.raises(DeadlineExceeded):
+            fb.result(timeout=10)
+        assert fc.result(timeout=10) is True
+        assert fe.stats["n_deadline_dropped"] == 1
+        assert reg.counter("frontend.deadline_dropped").value == 1
+        # the dropped request never reached the engine
+        assert sum(len(c) for c in eng.calls) == 2
+    finally:
+        fe.close()
+
+
+def test_engine_exception_latches_and_scheduler_survives():
+    """An engine blow-up resolves exactly the affected batch's futures
+    with the error; the scheduler thread survives and keeps serving."""
+
+    class Exploding:
+        def __init__(self):
+            self.calls = 0
+
+        def query_batch(self, us, rects):
+            self.calls += 1
+            if self.calls == 1:
+                raise ValueError("device on fire")
+            return np.ones(len(np.asarray(us)), dtype=bool)
+
+    eng = Exploding()
+    with Frontend(eng, max_batch=2, max_delay=10.0) as fe:
+        fa = fe.submit(0, RECT)
+        fb = fe.submit(1, RECT)            # full flush -> boom
+        for f in (fa, fb):
+            with pytest.raises(ValueError):
+                f.result(timeout=10)
+        # same frontend, next batch: served fine by the live scheduler
+        fc = fe.submit(2, RECT)
+        fd = fe.submit(3, RECT)
+        assert fc.result(timeout=10) is True
+        assert fd.result(timeout=10) is True
+    assert eng.calls == 2
+
+
+def test_close_drain_false_fails_pending_typed():
+    eng = BlockableEngine(block_first=True)
+    fe = Frontend(eng, max_batch=2, max_queue=8, max_delay=10.0)
+    fa = fe.submit(0, RECT)
+    fb = fe.submit(1, RECT)                # full flush; engine blocks
+    assert eng.entered.wait(timeout=10)
+    fc = fe.submit(2, RECT)                # still queued
+    eng.release.set()
+    fe.close(timeout=10, drain=False)
+    # the inflight batch finished; the queued request failed typed
+    assert fa.result(timeout=10) is True
+    assert fb.result(timeout=10) is True
+    with pytest.raises(FrontendClosed):
+        fc.result(timeout=10)
+    with pytest.raises(FrontendClosed):
+        fe.submit(3, RECT)
+    # FrontendClosed subclasses RuntimeError: pre-existing callers that
+    # caught the old error keep working
+    with pytest.raises(RuntimeError):
+        fe.submit(4, RECT)
+
+
+def test_close_drain_true_still_serves_everything():
+    eng = BlockableEngine()
+    fe = Frontend(eng, max_batch=64, max_delay=10.0)
+    futs = [fe.submit(i, RECT) for i in range(5)]
+    fe.close(timeout=10)                   # drain=True default
+    assert all(f.result(timeout=10) is True for f in futs)

@@ -1,0 +1,411 @@
+"""Unit tests for the resilience primitives.
+
+Fault plans, deadline budgets, retry jitter, the circuit breaker state
+machine, and the resilient engine wrapper — all driven with fake clocks
+and injected rngs so every schedule is deterministic.  The end-to-end
+chaos invariant lives in ``test_chaos.py``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import build_index, rangereach_oracle_batch
+from repro.obs.metrics import Registry
+from repro.resilience import (
+    BreakerPolicy,
+    CircuitBreaker,
+    Deadline,
+    DeadlineExceeded,
+    FaultPlan,
+    FaultSpec,
+    INJECTOR,
+    InjectedFault,
+    ResilientEngine,
+    RetryPolicy,
+    ShardDropout,
+    fault_point,
+    inject,
+)
+from repro.resilience.breaker import CLOSED, HALF_OPEN, OPEN
+from conftest import random_geosocial, random_queries
+
+
+class Ticker:
+    """Manually advanced monotonic clock."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ----------------------------------------------------------------------
+# fault plans / injection
+# ----------------------------------------------------------------------
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec("p", kind="explode")
+    with pytest.raises(ValueError):
+        FaultSpec("p", p=1.5)
+
+
+def test_fault_point_disabled_is_noop():
+    assert not INJECTOR.enabled
+    fault_point("engine.query_batch", n=4)   # must not raise
+
+
+def test_plan_fires_deterministically():
+    def run(seed):
+        plan = FaultPlan(
+            FaultSpec("pt", kind="raise", p=0.5, max_fires=None),
+            seed=seed)
+        fired = []
+        with inject(plan):
+            for i in range(50):
+                try:
+                    fault_point("pt")
+                    fired.append(0)
+                except InjectedFault:
+                    fired.append(1)
+        return fired, plan.total_fires
+
+    a, na = run(7)
+    b, nb = run(7)
+    c, nc = run(8)
+    assert a == b and na == nb
+    assert a != c                       # different seed, different draw
+    assert 0 < na < 50                  # p=0.5 actually probabilistic
+
+
+def test_plan_after_and_max_fires():
+    plan = FaultPlan(FaultSpec("pt", after=2, max_fires=3))
+    hits, fires = 10, 0
+    with inject(plan):
+        for i in range(hits):
+            try:
+                fault_point("pt")
+            except InjectedFault as e:
+                fires += 1
+                assert i >= 2           # first two hits skipped
+                assert e.point == "pt"
+    assert fires == 3
+    assert plan.hits_at("pt") == hits
+    assert plan.fires_at("pt") == 3
+
+
+def test_injected_counters_land_in_registry():
+    from repro.obs.metrics import REGISTRY
+
+    before = REGISTRY.counter("faults.injected").value
+    with inject(FaultPlan(FaultSpec("pt.counted", max_fires=2))):
+        for _ in range(4):
+            try:
+                fault_point("pt.counted")
+            except InjectedFault:
+                pass
+    assert REGISTRY.counter("faults.injected").value == before + 2
+    assert REGISTRY.counter("faults.pt.counted").value >= 2
+
+
+def test_uninstall_releases_pending_hang():
+    import threading
+
+    plan = FaultPlan(FaultSpec("pt.hang", kind="hang", hang_s=60.0))
+    stalled = threading.Event()
+    done = threading.Event()
+
+    def worker():
+        stalled.set()
+        fault_point("pt.hang")          # blocks until release
+        done.set()
+
+    INJECTOR.install(plan)
+    try:
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        assert stalled.wait(timeout=10)
+        assert not done.wait(timeout=0.05)   # genuinely stalled
+    finally:
+        INJECTOR.uninstall()            # sets plan.release
+    assert done.wait(timeout=10), "uninstall must end the hang"
+
+
+# ----------------------------------------------------------------------
+# deadlines / retry
+# ----------------------------------------------------------------------
+
+
+def test_deadline_budget():
+    clk = Ticker()
+    dl = Deadline(1.0, clock=clk)
+    assert not dl.expired() and dl.remaining() == pytest.approx(1.0)
+    clk.t = 0.75
+    assert dl.remaining() == pytest.approx(0.25)
+    dl.check()                          # still inside budget
+    clk.t = 1.0
+    assert dl.expired()
+    with pytest.raises(DeadlineExceeded):
+        dl.check("probe")
+    assert Deadline.none().remaining() == np.inf
+    assert not Deadline(None).expired()
+
+
+def test_retry_backoff_bounded_and_deterministic():
+    pol = RetryPolicy(max_attempts=6, base_s=1e-3, cap_s=20e-3)
+    sched = pol.schedule(np.random.default_rng(3))
+    assert sched == pol.schedule(np.random.default_rng(3))
+    assert len(sched) == 5
+    prev = 0.0
+    for s in sched:
+        assert pol.base_s <= s <= pol.cap_s
+        assert s <= max(pol.base_s, 3.0 * prev) + 1e-12  # decorrelated
+        prev = s
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(base_s=2.0, cap_s=1.0)
+
+
+# ----------------------------------------------------------------------
+# circuit breaker
+# ----------------------------------------------------------------------
+
+
+def _breaker(clk, **kw):
+    return CircuitBreaker("t", BreakerPolicy(**kw), clock=clk,
+                          registry=Registry())
+
+
+def test_breaker_opens_after_threshold():
+    clk = Ticker()
+    br = _breaker(clk, failure_threshold=3, reset_timeout_s=5.0)
+    for _ in range(2):
+        assert br.allow()
+        br.record_failure()
+    assert br.state == CLOSED           # 2 < threshold
+    assert br.allow()
+    br.record_failure()
+    assert br.state == OPEN
+    assert not br.allow()               # open refuses outright
+
+
+def test_breaker_success_resets_failure_streak():
+    clk = Ticker()
+    br = _breaker(clk, failure_threshold=2)
+    br.record_failure()
+    br.record_success()                 # streak broken
+    br.record_failure()
+    assert br.state == CLOSED
+
+
+def test_breaker_half_open_probe_protocol():
+    clk = Ticker()
+    br = _breaker(clk, failure_threshold=1, reset_timeout_s=10.0)
+    br.record_failure()
+    assert br.state == OPEN
+    clk.t = 9.9
+    assert not br.allow()
+    clk.t = 10.0
+    assert br.state == HALF_OPEN
+    assert br.allow()                   # the single probe slot
+    assert not br.allow()               # concurrent caller refused
+    br.record_success()
+    assert br.state == CLOSED
+
+
+def test_breaker_probe_failure_reopens():
+    clk = Ticker()
+    br = _breaker(clk, failure_threshold=1, reset_timeout_s=1.0)
+    br.record_failure()
+    clk.t = 1.0
+    assert br.allow()
+    br.record_failure()                 # failed probe
+    assert br.state == OPEN
+    assert not br.allow()               # timeout restarted
+    clk.t = 2.0
+    assert br.allow()
+
+
+def test_breaker_release_frees_probe_slot():
+    clk = Ticker()
+    br = _breaker(clk, failure_threshold=1, reset_timeout_s=1.0)
+    br.record_failure()
+    clk.t = 1.0
+    assert br.allow()
+    br.release()                        # grant unused: no outcome
+    assert br.state == HALF_OPEN
+    assert br.allow()                   # slot available again
+
+
+def test_breaker_trip_and_policy_validation():
+    clk = Ticker()
+    br = _breaker(clk, reset_timeout_s=100.0)
+    br.trip()
+    assert br.state == OPEN and not br.allow()
+    with pytest.raises(ValueError):
+        BreakerPolicy(failure_threshold=0)
+    with pytest.raises(ValueError):
+        BreakerPolicy(reset_timeout_s=-1.0)
+
+
+# ----------------------------------------------------------------------
+# resilient engine
+# ----------------------------------------------------------------------
+
+
+class FlakyDevice:
+    """Delegates to the host index; raises on scheduled call numbers."""
+
+    def __init__(self, index, fail_calls=(), exc=None):
+        self.index = index
+        self.fail_calls = set(fail_calls)
+        self.exc = exc or InjectedFault("flaky")
+        self.calls = 0
+
+    def query_batch(self, us, rects):
+        self.calls += 1
+        if self.calls in self.fail_calls:
+            raise self.exc
+        return self.index.query_batch(us, rects)
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    rng = np.random.default_rng(11)
+    g = random_geosocial(rng, 120, 320)
+    idx = build_index(g, "2dreach")
+    us, rects = random_queries(rng, g, 64)
+    want = rangereach_oracle_batch(g, us, rects)
+    return idx, us, rects, want
+
+
+def _resilient(idx, dev, clk=None, **kw):
+    clk = clk or Ticker()
+    kw.setdefault("retry", RetryPolicy(max_attempts=3, base_s=1e-4,
+                                       cap_s=1e-3))
+    kw.setdefault("breaker", BreakerPolicy(failure_threshold=2,
+                                           reset_timeout_s=1.0))
+    return ResilientEngine(dev, idx, clock=clk, sleep=lambda s: None,
+                           registry=Registry(), **kw)
+
+
+def test_resilient_healthy_passthrough(small_index):
+    idx, us, rects, want = small_index
+    dev = FlakyDevice(idx)
+    res = _resilient(idx, dev)
+    got = res.query_batch(us, rects)
+    np.testing.assert_array_equal(got, want)
+    assert res.stats["device_batches"] == 1
+    assert res.stats["fallback_batches"] == 0
+    assert not res.degraded
+
+
+def test_resilient_retry_recovers_exactly(small_index):
+    idx, us, rects, want = small_index
+    dev = FlakyDevice(idx, fail_calls={1})      # first attempt fails
+    res = _resilient(idx, dev)
+    np.testing.assert_array_equal(res.query_batch(us, rects), want)
+    assert res.stats["retries"] == 1
+    assert res.stats["device_failures"] == 1
+    assert res.stats["fallback_batches"] == 0
+
+
+def test_resilient_exhaustion_degrades_exactly(small_index):
+    idx, us, rects, want = small_index
+    dev = FlakyDevice(idx, fail_calls=set(range(1, 100)))
+    res = _resilient(idx, dev)
+    np.testing.assert_array_equal(res.query_batch(us, rects), want)
+    assert res.stats["fallback_batches"] == 1
+    assert res.stats["fallback_queries"] == len(us)
+    # two consecutive failures opened the breaker
+    assert res.breaker.state == OPEN and res.degraded
+    # while open, queries go straight to host — no device calls at all
+    calls = dev.calls
+    np.testing.assert_array_equal(res.query_batch(us, rects), want)
+    assert dev.calls == calls
+
+
+def test_resilient_deadline_exhaustion_falls_back(small_index):
+    idx, us, rects, want = small_index
+    clk = Ticker()
+    dev = FlakyDevice(idx, fail_calls={1, 2, 3})
+
+    def sleep(s):
+        clk.t += s
+
+    res = ResilientEngine(
+        dev, idx, retry=RetryPolicy(max_attempts=5, base_s=0.4,
+                                    cap_s=0.4),
+        breaker=BreakerPolicy(failure_threshold=10),
+        clock=clk, sleep=sleep, registry=Registry())
+    got = res.query_batch(us, rects, deadline=0.5)
+    np.testing.assert_array_equal(got, want)
+    # one failure + one 0.4s backoff + one more failure exhausts 0.5s
+    assert res.stats["fallback_batches"] == 1
+    assert clk.t <= 0.5 + 1e-9          # never slept past the budget
+
+
+def test_resilient_trip_forces_degraded(small_index):
+    idx, us, rects, want = small_index
+    dev = FlakyDevice(idx)
+    res = _resilient(idx, dev)
+    res.trip()
+    np.testing.assert_array_equal(res.query_batch(us, rects), want)
+    assert dev.calls == 0 and res.degraded
+
+
+class ShardedFlaky:
+    """Two-shard device sim: shard = u % 2; shard 1 always drops."""
+
+    def __init__(self, index, dead_shard=1):
+        self.index = index
+        self.dead = dead_shard
+        self.calls = []
+
+    def shard_of(self, us):
+        return np.asarray(us) % 2
+
+    def query_batch(self, us, rects):
+        us = np.asarray(us)
+        self.calls.append(us.copy())
+        if (self.shard_of(us) == self.dead).any():
+            raise ShardDropout(self.dead, "cluster.query_batch")
+        return self.index.query_batch(us, rects)
+
+
+def test_resilient_shard_dropout_degrades_only_that_shard(small_index):
+    idx, us, rects, want = small_index
+    dev = ShardedFlaky(idx)
+    res = _resilient(idx, dev,
+                     breaker=BreakerPolicy(failure_threshold=1,
+                                           reset_timeout_s=100.0))
+    np.testing.assert_array_equal(res.query_batch(us, rects), want)
+    assert res.shard_breaker(1).state == OPEN
+    assert res.breaker.state == CLOSED  # engine itself stays healthy
+    # second batch: dead shard filtered before the device call, healthy
+    # shard served on device, remainder host-filled — still exact
+    np.testing.assert_array_equal(res.query_batch(us, rects), want)
+    assert (res.shard_breaker(1).state == OPEN)
+    last = dev.calls[-1]
+    assert (last % 2 == 0).all()        # no dead-shard query on device
+    assert res.stats["fallback_queries"] >= int((us % 2 == 1).sum())
+
+
+def test_resilient_analytics_fallback_exact(small_index):
+    idx, us, rects, want = small_index
+    from repro.queries.host import range_count_host
+
+    dev = FlakyDevice(idx)              # exposes no count_batch at all
+    res = _resilient(idx, dev)
+    got = res.count_batch(us, rects)
+    np.testing.assert_array_equal(got, range_count_host(idx, us, rects))
+    assert res.stats["fallback_batches"] == 1
+    assert res.stats["fallback_queries"] == len(us)
