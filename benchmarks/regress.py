@@ -1,0 +1,291 @@
+"""Bench-regression sentinel: BENCH_*.json runs vs a committed history.
+
+The three perf benches (``perf_rangereach``, ``perf_build``,
+``perf_queries``) each emit a structured ``BENCH_*.json``, but until
+now nothing *read* the trajectory — a PR could double the device
+engine's µs/query and CI would stay green as long as the exactness
+gates held.  This tool closes the loop:
+
+1. **extract** a flat ``{metric path: value}`` view of each BENCH file
+   (latency-like metrics only — lower is better for everything
+   tracked here);
+2. **compare** the current run against a noise-aware baseline: the
+   median of the last ``--baseline-n`` history entries for that metric
+   (median, not mean, so one noisy CI run cannot poison the baseline),
+   with a configurable relative tolerance — global ``--tol`` plus
+   per-metric ``--metric-tol name=frac`` overrides;
+3. **append** the run to ``results/bench_history.jsonl`` (one JSON
+   object per line: timestamp, bench, label, metrics) so the next run
+   sees it;
+4. print a per-metric verdict table and **exit nonzero** when any
+   metric regressed past tolerance.
+
+Usage::
+
+    python benchmarks/perf_rangereach.py --smoke
+    python benchmarks/regress.py                      # check + append all
+    python benchmarks/regress.py --tol 1.0 --label ci # cross-machine CI
+    python benchmarks/regress.py --no-append --bench BENCH_build.json
+
+Tolerance guidance: local same-machine history supports a tight
+``--tol 0.25``; the CI gate runs ``--tol 1.0`` because the committed
+seed history and the CI runner are different machines — it catches
+algorithmic regressions (2x+), not scheduler noise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+HISTORY = os.path.join(ROOT, "results", "bench_history.jsonl")
+BENCHES = ("BENCH_rangereach.json", "BENCH_build.json",
+           "BENCH_queries.json")
+
+SCHEMA_VERSION = 1
+
+#: verdicts, in severity order
+OK, IMPROVED, NEW, REGRESSED = "ok", "improved", "new", "REGRESSED"
+
+
+# ---------------------------------------------------------------- extract
+
+def _extract_rangereach(doc: dict) -> Dict[str, float]:
+    out = {f"engines.{k}": float(v)
+           for k, v in doc.get("engines", {}).items()}
+    for eng, pct in doc.get("latency_percentiles_us", {}).items():
+        if "p99" in pct:
+            out[f"latency.{eng}.p99"] = float(pct["p99"])
+    deg = doc.get("degraded", {})
+    if "degraded_us_per_q" in deg:
+        out["degraded.us_per_q"] = float(deg["degraded_us_per_q"])
+    return out
+
+
+def _extract_build(doc: dict) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for variant, row in (doc.get("largest_config", {})
+                         .get("per_variant", {})).items():
+        for key in ("host_total_s", "device_warm_total_s"):
+            if key in row:
+                out[f"build.{variant}.{key}"] = float(row[key])
+    return out
+
+
+def _extract_queries(doc: dict) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for cls, row in doc.get("classes", {}).items():
+        for key in ("host_us_per_q", "device_us_per_q"):
+            if key in row:
+                out[f"queries.{cls}.{key}"] = float(row[key])
+    return out
+
+
+EXTRACTORS = {
+    "BENCH_rangereach.json": _extract_rangereach,
+    "BENCH_build.json": _extract_build,
+    "BENCH_queries.json": _extract_queries,
+}
+
+
+def extract(bench: str, doc: dict) -> Dict[str, float]:
+    """Flat latency metrics (lower is better) for one BENCH document."""
+    fn = EXTRACTORS.get(os.path.basename(bench))
+    if fn is None:
+        raise ValueError(
+            f"no extractor for {bench!r} (known: {sorted(EXTRACTORS)})")
+    return fn(doc)
+
+
+# ---------------------------------------------------------------- history
+
+def load_history(path: str = HISTORY) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    runs = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                runs.append(json.loads(line))
+    return runs
+
+
+def append_history(path: str, bench: str, metrics: Dict[str, float],
+                   label: str = "", t: Optional[float] = None) -> dict:
+    run = {
+        "schema_version": SCHEMA_VERSION,
+        "t": time.time() if t is None else t,
+        "bench": os.path.basename(bench),
+        "label": label,
+        "metrics": metrics,
+    }
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(run) + "\n")
+    return run
+
+
+def _median(xs: List[float]) -> float:
+    s = sorted(xs)
+    n = len(s)
+    mid = n // 2
+    return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+
+def baseline_for(history: List[dict], bench: str, metric: str,
+                 n: int) -> Optional[float]:
+    """Median of the metric over the last ``n`` history runs of this
+    bench that recorded it (None: no baseline yet)."""
+    bench = os.path.basename(bench)
+    vals = [run["metrics"][metric] for run in history
+            if run.get("bench") == bench and metric in run.get(
+                "metrics", {})]
+    if not vals:
+        return None
+    return _median([float(v) for v in vals[-n:]])
+
+
+# ---------------------------------------------------------------- compare
+
+def compare(bench: str, metrics: Dict[str, float], history: List[dict],
+            baseline_n: int = 5, tol: float = 0.25,
+            metric_tol: Optional[Dict[str, float]] = None) -> List[dict]:
+    """Per-metric verdict rows: current vs noise-aware baseline.
+
+    A metric REGRESSES when ``current > baseline * (1 + tolerance)``;
+    it is IMPROVED below ``baseline * (1 - tolerance)`` (informational),
+    NEW without a baseline, and ok otherwise.
+    """
+    metric_tol = metric_tol or {}
+    rows = []
+    for name in sorted(metrics):
+        cur = float(metrics[name])
+        base = baseline_for(history, bench, name, baseline_n)
+        t = float(metric_tol.get(name, tol))
+        if base is None:
+            verdict, ratio = NEW, None
+        else:
+            ratio = cur / base if base > 0 else float("inf")
+            if cur > base * (1.0 + t):
+                verdict = REGRESSED
+            elif cur < base * (1.0 - t):
+                verdict = IMPROVED
+            else:
+                verdict = OK
+        rows.append({"metric": name, "current": cur, "baseline": base,
+                     "ratio": ratio, "tolerance": t, "verdict": verdict})
+    return rows
+
+
+def print_table(bench: str, rows: List[dict]) -> None:
+    name_w = max([len(r["metric"]) for r in rows] + [12])
+    print(f"[regress] {os.path.basename(bench)}")
+    print(f"  {'metric':<{name_w}}  {'current':>12}  {'baseline':>12}  "
+          f"{'ratio':>7}  {'tol':>5}  verdict")
+    for r in rows:
+        base = "-" if r["baseline"] is None else f"{r['baseline']:12.3f}"
+        ratio = "-" if r["ratio"] is None else f"{r['ratio']:7.2f}"
+        print(f"  {r['metric']:<{name_w}}  {r['current']:12.3f}  "
+              f"{base:>12}  {ratio:>7}  {r['tolerance']:5.2f}  "
+              f"{r['verdict']}")
+
+
+# ---------------------------------------------------------------- driver
+
+def run_sentinel(bench_paths: List[str], history_path: str = HISTORY,
+                 baseline_n: int = 5, tol: float = 0.25,
+                 metric_tol: Optional[Dict[str, float]] = None,
+                 append: bool = True, label: str = "") -> int:
+    """Check every bench file against the history, optionally append
+    the runs, print verdict tables; returns the process exit code
+    (1 when anything REGRESSED)."""
+    history = load_history(history_path)
+    regressed = []
+    for path in bench_paths:
+        with open(path) as f:
+            doc = json.load(f)
+        metrics = extract(path, doc)
+        if not metrics:
+            print(f"[regress] {os.path.basename(path)}: no tracked "
+                  f"metrics — skipped")
+            continue
+        rows = compare(path, metrics, history, baseline_n=baseline_n,
+                       tol=tol, metric_tol=metric_tol)
+        print_table(path, rows)
+        regressed += [r for r in rows if r["verdict"] == REGRESSED]
+        if append:
+            append_history(history_path, path, metrics, label=label)
+    if regressed:
+        print(f"[regress] FAIL: {len(regressed)} metric(s) regressed "
+              f"past tolerance:")
+        for r in regressed:
+            print(f"  {r['metric']}: {r['current']:.3f} vs baseline "
+                  f"{r['baseline']:.3f} (x{r['ratio']:.2f} > "
+                  f"1+{r['tolerance']:.2f})")
+        return 1
+    print(f"[regress] ok: no regressions past tolerance "
+          f"({len(history)} historical runs consulted)")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", action="append", default=None,
+                    help="BENCH_*.json to check (repeatable; default: "
+                         "every known BENCH file present in the repo "
+                         "root)")
+    ap.add_argument("--history", default=HISTORY,
+                    help="history JSONL (append-only)")
+    ap.add_argument("--baseline-n", type=int, default=5,
+                    help="baseline = median of the last N runs")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="global relative tolerance (0.25 = fail past "
+                         "+25%%)")
+    ap.add_argument("--metric-tol", action="append", default=[],
+                    metavar="NAME=FRAC",
+                    help="per-metric tolerance override (repeatable)")
+    ap.add_argument("--no-append", action="store_true",
+                    help="check only — do not record this run")
+    ap.add_argument("--no-check", action="store_true",
+                    help="append only — seed/extend the history "
+                         "without gating")
+    ap.add_argument("--label", default="",
+                    help="free-form run label recorded in the history "
+                         "(e.g. ci / local / a git sha)")
+    args = ap.parse_args(argv)
+
+    benches = args.bench or [
+        os.path.join(ROOT, b) for b in BENCHES
+        if os.path.exists(os.path.join(ROOT, b))]
+    if not benches:
+        print("[regress] no BENCH_*.json found — run the perf benches "
+              "first")
+        return 2
+    mtol = {}
+    for spec in args.metric_tol:
+        name, _, frac = spec.partition("=")
+        if not frac:
+            ap.error(f"--metric-tol wants NAME=FRAC, got {spec!r}")
+        mtol[name] = float(frac)
+    if args.no_check:
+        for path in benches:
+            with open(path) as f:
+                metrics = extract(path, json.load(f))
+            append_history(args.history, path, metrics, label=args.label)
+            print(f"[regress] appended {os.path.basename(path)} "
+                  f"({len(metrics)} metrics) to {args.history}")
+        return 0
+    return run_sentinel(benches, history_path=args.history,
+                        baseline_n=args.baseline_n, tol=args.tol,
+                        metric_tol=mtol, append=not args.no_append,
+                        label=args.label)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

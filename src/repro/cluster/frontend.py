@@ -424,5 +424,15 @@ class Frontend:
                   else np.zeros(len(us), dtype=np.int64))
         vclass = obs_querylog.vertex_class_of(self.engine, us)
         lats = [now - b[3] for b in batch]
+        # engine-reported serving status (resilient engines rewrite
+        # last_report per batch): healthy vs exact-host-degraded split
+        statuses, retries = "ok", 0
+        rep = getattr(self.engine, "last_report", None)
+        if rep is not None:
+            mask = np.asarray(rep.get("degraded", ()), dtype=bool)
+            if len(mask) == len(us):
+                statuses = np.where(mask, "degraded", "ok")
+            retries = int(rep.get("retries", 0))
         qlog.record_batch("reach", vclass, rects, shards, lats,
-                          np.asarray(ans).astype(np.int64))
+                          np.asarray(ans).astype(np.int64), us=us,
+                          statuses=statuses, retries=retries)

@@ -13,11 +13,13 @@ from .queries import (
     REGION_EXTENT_VALUES,
     SELECTIVITY_VALUES,
     STREAM_OP_KINDS,
+    ZIPF_DEFAULT_S,
     apply_stream_op,
     knn_workload,
     polygon_workload,
     streaming_workload,
     workload,
+    zipf_workload,
 )
 from .registry import dataset_names, get_dataset
 from .sampler import SampledBlock, pad_block, sample_blocks

@@ -144,6 +144,42 @@ def polygon_workload(
     return us.astype(np.int64), tuple(polys)
 
 
+ZIPF_DEFAULT_S = 1.2
+
+
+def zipf_workload(
+    g: GeosocialGraph,
+    n_queries: int = 1000,
+    s: float = ZIPF_DEFAULT_S,
+    extent_ratio: float = REGION_EXTENT_DEFAULT,
+    seed: int = 0,
+    max_ranks: int = 100_000,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(us, rects) with Zipf(s)-skewed query vertices — the workload the
+    heavy-hitter analytics and hot-shard placement report are for.
+
+    Vertices are ranked by out-degree descending (popular users are
+    popular query subjects — the LBSN assumption) and rank ``r`` is
+    drawn with probability proportional to ``r^-s``; at the default
+    ``s=1.2`` the top handful of vertices dominate the stream, so an
+    exact recount of the served log has a non-trivial heavy-hitter set
+    to check the Space-Saving sketch against.  Regions follow the
+    paper's region-extent methodology (uniform centres).
+    """
+    if s <= 0:
+        raise ValueError(f"zipf exponent must be > 0, got {s}")
+    rng = np.random.default_rng(seed)
+    deg = g.out_degree()
+    n_ranks = min(g.n_nodes, int(max_ranks))
+    # stable sort so equal-degree vertices rank deterministically
+    ranked = np.argsort(-deg, kind="stable")[:n_ranks]
+    p = np.arange(1, n_ranks + 1, dtype=np.float64) ** -float(s)
+    p /= p.sum()
+    us = ranked[rng.choice(n_ranks, size=n_queries, p=p)]
+    rects = region_for_extent(g, extent_ratio, n_queries, rng)
+    return us.astype(np.int64), rects
+
+
 STREAM_OP_KINDS = ("query", "add_edge", "add_vertex", "add_spatial")
 
 

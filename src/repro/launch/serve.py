@@ -42,7 +42,7 @@ import numpy as np
 
 from .. import obs
 from ..core import batch_query, build_index, index_nbytes
-from ..data import get_dataset, workload
+from ..data import get_dataset, workload, zipf_workload
 
 
 def _percentiles(lat_s: np.ndarray) -> dict:
@@ -167,6 +167,24 @@ def _serve_cluster(index, us, rects, args):
         fe.close()
 
 
+def _log_served(index, us, rects, lats_s, cards,
+                query_class: str = "reach", shards=None) -> None:
+    """Feed a served pass into the structured query log (and through it
+    the workload-analytics sinks).  Only while obs is enabled, and only
+    for the engines that don't log per batch themselves — the cluster
+    frontend records its own batches."""
+    if not obs.enabled():
+        return
+    us = np.asarray(us)
+    if shards is None:
+        shards = np.zeros(len(us), dtype=np.int64)
+    if rects is None:
+        rects = np.zeros((len(us), 4), dtype=np.float32)
+    obs.QUERY_LOG.record_batch(
+        query_class, obs.vertex_class_of(index, us), rects, shards,
+        lats_s, np.asarray(cards).astype(np.int64), us=us)
+
+
 def _serve_query_class(index, g, args):
     """Analytics query-class serving (count / collect / knn / polygon)
     through ``core.api.run_queries`` — host or device engine, answers
@@ -251,6 +269,8 @@ def _serve_query_class(index, g, args):
         dt = time.perf_counter() - t0
         lats[lo:hi] = dt / (hi - lo)
         total += dt
+    _log_served(index, us, rects, lats, np.zeros(n, dtype=np.int64),
+                query_class=kind)
     pct = _percentiles(lats)
     print(f"[serve] {args.engine} {kind}: {n} queries in "
           f"{total * 1e3:.1f} ms ({total / n * 1e6:.2f} us/query mean), "
@@ -286,10 +306,20 @@ def main():
                     help="cluster frontend deadline flush (ms)")
     ap.add_argument("--verify", type=int, default=64,
                     help="queries to verify against the BFS oracle")
+    ap.add_argument("--zipf", type=float, default=0.0,
+                    help="draw query vertices from a Zipf(s) rank "
+                         "distribution over degree-ranked vertices "
+                         "instead of the paper's degree-bucket sweep "
+                         "(0 = off); the skewed stream is what the "
+                         "--obs heavy-hitter analytics are for")
     ap.add_argument("--obs", action="store_true",
-                    help="enable repro.obs span/metric recording and "
-                         "dump trace.json / metrics.json / "
-                         "querylog.jsonl after serving")
+                    help="enable repro.obs span/metric recording plus "
+                         "the stage-2 workload intelligence (heavy "
+                         "hitters, placement report, time-series "
+                         "sampler, SLO monitor) and dump trace.json / "
+                         "metrics.json / metrics.prom / querylog.jsonl "
+                         "/ timeseries.jsonl / placement_report.json "
+                         "after serving")
     ap.add_argument("--obs-dir", default="results/obs",
                     help="directory for the --obs artifacts")
     ap.add_argument("--obs-profile", default="",
@@ -297,8 +327,16 @@ def main():
                          "trace of the timed pass (TensorBoard format)")
     args = ap.parse_args()
 
+    wa = mon = None
     if args.obs:
         obs.enable()
+        # workload intelligence: sketches see every query-log record as
+        # a streaming sink; the background sampler snapshots the
+        # registry and ticks the SLO burn-rate monitor on its cadence
+        wa = obs.WorkloadAnalytics()
+        obs.QUERY_LOG.add_sink(wa.observe)
+        mon = obs.default_slos(obs.SLOMonitor(clock=time.time))
+        obs.start_timeseries().add_hook(lambda t, _s: mon.tick(t))
     g = get_dataset(args.dataset, scale=args.scale)
     print(f"[serve] dataset {args.dataset} x{args.scale}: "
           f"{g.n_nodes} nodes, {g.n_edges} edges, {g.n_spatial} venues")
@@ -313,11 +351,18 @@ def main():
             t_q0 = time.perf_counter()
             _serve_query_class(index, g, args)
             t_q1 = time.perf_counter()
-        _obs_report(args, t_q0, t_q1)
+        _obs_report(args, t_q0, t_q1, wa=wa, mon=mon)
         return
 
-    us, rects = workload(g, n_queries=args.queries,
-                         extent_ratio=args.extent, seed=1)
+    if args.zipf > 0:
+        us, rects = zipf_workload(g, n_queries=args.queries, s=args.zipf,
+                                  extent_ratio=args.extent, seed=1)
+        uniq = len(np.unique(us))
+        print(f"[serve] zipf(s={args.zipf:g}) workload: {len(us)} "
+              f"queries over {uniq} distinct vertices")
+    else:
+        us, rects = workload(g, n_queries=args.queries,
+                             extent_ratio=args.extent, seed=1)
 
     # correctness gate before timing
     if args.verify:
@@ -377,18 +422,26 @@ def main():
         t_q1 = time.perf_counter()
     if args.engine in ("device", "cluster"):
         assert (ans == host).all(), f"{args.engine} engine mismatch"
+    if args.engine != "cluster":        # the frontend logs its batches
+        _log_served(index, us, rects, lats, ans.astype(np.int64))
     pct = _percentiles(lats)
     print(f"[serve] {args.engine}: {len(us)} queries in {dt * 1e3:.1f} ms "
           f"({dt / len(us) * 1e6:.2f} us/query mean), "
           f"{_fmt_pct(pct)}, {int(np.sum(ans))} positive")
-    _obs_report(args, t_q0, t_q1)
+    _obs_report(args, t_q0, t_q1, wa=wa, mon=mon)
 
 
-def _obs_report(args, t_q0: float, t_q1: float) -> None:
+def _obs_report(args, t_q0: float, t_q1: float,
+                wa=None, mon=None) -> None:
     """--obs epilogue: span coverage of the timed pass, the top stage
-    totals, and the trace/metrics/querylog artifact dump."""
+    totals, the workload-intelligence report (heavy-hitter table +
+    placement report, SLO state) and the artifact dump."""
+    import json
+    import os
+
     if not args.obs:
         return
+    obs.stop_timeseries()               # final sample covers the tail
     cov = obs.coverage(t_q0, t_q1)
     totals = sorted(obs.stage_totals().items(),
                     key=lambda kv: kv[1], reverse=True)
@@ -396,8 +449,30 @@ def _obs_report(args, t_q0: float, t_q1: float) -> None:
     print(f"[serve] obs: span coverage {cov * 100:.1f}% of the timed "
           f"pass; top stages: {top}")
     paths = obs.dump(args.obs_dir)
-    print(f"[serve] obs: wrote {paths['trace']} (chrome://tracing), "
-          f"{paths['metrics']}, {paths['querylog']}")
+    if wa is not None and wa.total:
+        mon.tick()                       # one last burn-rate evaluation
+        report = wa.placement_report(query_log=obs.QUERY_LOG)
+        report["slo"] = mon.snapshot()
+        path = os.path.join(args.obs_dir, "placement_report.json")
+        with open(path, "w") as f:
+            json.dump(report, f, indent=1)
+        paths["placement_report"] = path
+        skew = report["skew"]
+        ver = report["verified"]
+        print(f"[serve] obs: workload heavy hitters "
+              f"({wa.total} queries observed):")
+        print(wa.top_table(top_k=5))
+        print(f"[serve] obs: shard skew gini_q {skew['gini_queries']:.3f} "
+              f"gini_lat {skew['gini_latency']:.3f} max_share "
+              f"{skew['max_query_share']:.2f} over {skew['n_shards']} "
+              f"shard(s); degraded {report['degraded_fraction']:.1%}; "
+              f"sketch vs exact recount: "
+              f"{'MATCH' if ver['exact_match'] else ver}")
+        fired = sum(1 for e in mon.events if e["kind"] == "fired")
+        print(f"[serve] obs: SLOs {len(mon.slos)} tracked, {fired} "
+              f"fired, active now: {sorted(mon.active()) or 'none'}")
+    print(f"[serve] obs: wrote " + ", ".join(
+        sorted(paths.values())))
 
 
 if __name__ == "__main__":

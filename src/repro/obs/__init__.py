@@ -38,27 +38,35 @@ import os
 import time
 from typing import Optional, Sequence
 
-from . import metrics, profiler, querylog, tracer
+from . import export, metrics, profiler, querylog, slo, timeseries, \
+    tracer, workload
+from .export import to_openmetrics, write_prom
 from .metrics import (
     Counter,
     CounterDict,
     Gauge,
     Histogram,
+    HistogramState,
     REGISTRY,
     Registry,
     latency_percentiles,
 )
 from .profiler import annotate, device_trace, engine_cost_model
 from .querylog import QUERY_LOG, QueryLog, rect_bucket, vertex_class_of
+from .slo import SLOMonitor, default_slos
+from .timeseries import TimeSeriesCollector
 from .tracer import TRACER, span, traced
+from .workload import SpaceSaving, WorkloadAnalytics, gini
 
 __all__ = [
-    "Counter", "CounterDict", "Gauge", "Histogram", "QueryLog",
-    "Registry", "REGISTRY", "TRACER", "QUERY_LOG",
-    "annotate", "coverage", "device_trace", "disable", "dump", "enable",
-    "enabled", "engine_cost_model", "latency_percentiles",
-    "rect_bucket", "reset", "snapshot", "span", "stage_totals",
-    "traced", "vertex_class_of",
+    "Counter", "CounterDict", "Gauge", "Histogram", "HistogramState",
+    "QueryLog", "Registry", "REGISTRY", "SLOMonitor", "SpaceSaving",
+    "TRACER", "TimeSeriesCollector", "QUERY_LOG", "WorkloadAnalytics",
+    "annotate", "coverage", "default_slos", "device_trace", "disable",
+    "dump", "enable", "enabled", "engine_cost_model", "gini",
+    "latency_percentiles", "rect_bucket", "reset", "snapshot", "span",
+    "stage_totals", "start_timeseries", "stop_timeseries",
+    "to_openmetrics", "traced", "vertex_class_of", "write_prom",
 ]
 
 # the default layer prefixes coverage() attributes wall time to
@@ -82,11 +90,41 @@ def enabled() -> bool:
 
 
 def reset() -> None:
-    """Clear spans, zero metrics, empty the query log (registrations
-    and enablement state stay)."""
+    """Clear spans, zero metrics, empty the query log, forget the
+    time-series sampler (registrations and enablement state stay)."""
+    global _TIMESERIES
     tracer.TRACER.clear()
     metrics.REGISTRY.reset()
     querylog.QUERY_LOG.clear()
+    if _TIMESERIES is not None:
+        _TIMESERIES.stop(final_sample=False)
+        _TIMESERIES = None
+
+
+# -- stage-2 singletons: the time-series sampler --------------------------
+
+_TIMESERIES: Optional[timeseries.TimeSeriesCollector] = None
+
+
+def start_timeseries(interval: float = 0.25,
+                     **kw) -> timeseries.TimeSeriesCollector:
+    """Start (or return) the process-wide background sampler over the
+    global registry; its ring is what :func:`dump` writes to
+    ``timeseries.jsonl``."""
+    global _TIMESERIES
+    if _TIMESERIES is None:
+        _TIMESERIES = timeseries.TimeSeriesCollector(
+            interval=interval, **kw)
+    return _TIMESERIES.start()
+
+
+def stop_timeseries() -> Optional[timeseries.TimeSeriesCollector]:
+    """Stop the process-wide sampler (taking one final sample).  The
+    collector and its ring stay registered so :func:`dump` still writes
+    ``timeseries.jsonl``; :func:`reset` forgets it."""
+    if _TIMESERIES is not None:
+        _TIMESERIES.stop()
+    return _TIMESERIES
 
 
 def stage_totals(prefix: str = "") -> dict:
@@ -106,7 +144,7 @@ def snapshot() -> dict:
     and histogram percentiles, per-span totals, query-log aggregates,
     tracer state.  Schema is additive-versioned for the BENCH files."""
     return {
-        "schema_version": 1,
+        "schema_version": 2,
         "wall_time": time.time(),
         "metrics": metrics.REGISTRY.snapshot(),
         "spans": tracer.TRACER.summary(),
@@ -120,8 +158,10 @@ def snapshot() -> dict:
 
 
 def dump(dirpath: str, prefix: str = "") -> dict:
-    """Write the trace (Chrome format), metrics snapshot and query log
-    under ``dirpath``; returns {kind: path}."""
+    """Write the trace (Chrome format), metrics snapshot (JSON and
+    OpenMetrics text) and query log under ``dirpath`` — plus the
+    time-series ring when the background sampler ran; returns
+    {kind: path}."""
     import json
 
     os.makedirs(dirpath, exist_ok=True)
@@ -129,9 +169,14 @@ def dump(dirpath: str, prefix: str = "") -> dict:
         "trace": tracer.TRACER.dump(
             os.path.join(dirpath, prefix + "trace.json")),
         "metrics": os.path.join(dirpath, prefix + "metrics.json"),
+        "prom": export.write_prom(
+            os.path.join(dirpath, prefix + "metrics.prom")),
         "querylog": querylog.QUERY_LOG.to_jsonl(
             os.path.join(dirpath, prefix + "querylog.jsonl")),
     }
     with open(paths["metrics"], "w") as f:
         json.dump(snapshot(), f, indent=1)
+    if _TIMESERIES is not None and len(_TIMESERIES):
+        paths["timeseries"] = _TIMESERIES.to_jsonl(
+            os.path.join(dirpath, prefix + "timeseries.jsonl"))
     return paths

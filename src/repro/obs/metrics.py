@@ -96,6 +96,24 @@ class Gauge:
         return {"value": self._value, "max": self._max}
 
 
+class HistogramState:
+    """Opaque snapshot of a histogram's cumulative state, taken with
+    :meth:`Histogram.state` and subtracted with :meth:`Histogram.since`
+    — the windowed-view primitive the time-series collector and the SLO
+    burn-rate windows are built on."""
+
+    __slots__ = ("count", "sum", "buckets", "n_samples", "min", "max")
+
+    def __init__(self, count: int, sum_: float, buckets: np.ndarray,
+                 n_samples: int, min_: float, max_: float):
+        self.count = count
+        self.sum = sum_
+        self.buckets = buckets
+        self.n_samples = n_samples
+        self.min = min_
+        self.max = max_
+
+
 class Histogram:
     """Bounded log-linear histogram with an exact sample window.
 
@@ -167,6 +185,95 @@ class Histogram:
     def record_many(self, values) -> None:
         for v in np.asarray(values, dtype=np.float64).ravel():
             self.record(v)
+
+    # -- merge / windowed views -----------------------------------------
+
+    def _compatible(self, other: "Histogram") -> None:
+        if (self.lo, self.hi, self.sub) != (other.lo, other.hi, other.sub):
+            raise ValueError(
+                f"cannot combine histograms with different bucket "
+                f"layouts: lo/hi/sub {self.lo}/{self.hi}/{self.sub} vs "
+                f"{other.lo}/{other.hi}/{other.sub}")
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold ``other`` into this histogram (bucket layouts must
+        match).  While the combined count fits this histogram's exact
+        window, merged percentiles are bit-for-bit ``np.percentile`` on
+        the concatenated samples; past saturation they degrade to the
+        usual bucket interpolation.  Returns ``self``."""
+        self._compatible(other)
+        with other._lock:
+            buckets = other._buckets.copy()
+            count, sum_ = other._count, other._sum
+            mn, mx = other._min, other._max
+            samples = list(other._samples)
+        with self._lock:
+            self._buckets += buckets
+            self._count += count
+            self._sum += sum_
+            if mn < self._min:
+                self._min = mn
+            if mx > self._max:
+                self._max = mx
+            room = self.max_samples - len(self._samples)
+            if room > 0:
+                self._samples.extend(samples[:room])
+        return self
+
+    def state(self) -> HistogramState:
+        """Cumulative snapshot for later :meth:`since` subtraction."""
+        with self._lock:
+            return HistogramState(self._count, self._sum,
+                                  self._buckets.copy(),
+                                  len(self._samples), self._min, self._max)
+
+    def since(self, prev: Optional[HistogramState]) -> "Histogram":
+        """A new histogram holding only what was recorded after
+        ``prev`` (``None``: everything) — snapshot-delta subtraction.
+
+        While both snapshots were unsaturated the window's samples are
+        exact (the sample list is append-only below ``max_samples``),
+        so the windowed percentiles are bit-for-bit ``np.percentile``
+        of the values recorded in between; otherwise they fall back to
+        the bucket-diff interpolation."""
+        out = Histogram(name=self.name, lo=self.lo, hi=self.hi,
+                        sub=self.sub, max_samples=self.max_samples)
+        with self._lock:
+            buckets = self._buckets.copy()
+            count, sum_ = self._count, self._sum
+            mn, mx = self._min, self._max
+            tail = list(self._samples[prev.n_samples:]) if prev else \
+                list(self._samples)
+        if prev is None:
+            out._buckets[:] = buckets
+            out._count, out._sum = count, sum_
+        else:
+            out._buckets[:] = buckets - prev.buckets
+            out._count = count - prev.count
+            out._sum = sum_ - prev.sum
+        out._samples = tail
+        if out._count == len(tail) and tail:
+            out._min = min(tail)
+            out._max = max(tail)
+        elif out._count:
+            # saturated window: exact extrema unknown — inherit the
+            # cumulative bounds (they still bracket every windowed value)
+            out._min, out._max = mn, mx
+        return out
+
+    def count_above(self, threshold: float) -> int:
+        """Recordings ``>= threshold`` — the bad-event count for a
+        latency SLO.  Exact while unsaturated; afterwards counted at
+        bucket granularity (the threshold's whole bucket is included,
+        so the answer errs toward alerting)."""
+        v = float(threshold)
+        with self._lock:
+            if self._count <= len(self._samples):
+                if not self._samples:
+                    return 0
+                return int(np.sum(
+                    np.asarray(self._samples, dtype=np.float64) >= v))
+            return int(self._buckets[self._idx(v):].sum())
 
     # -- percentiles ----------------------------------------------------
 
@@ -289,6 +396,13 @@ class Registry:
     def names(self) -> list:
         with self._lock:
             return sorted(self._metrics)
+
+    def items(self) -> list:
+        """Sorted ``[(name, metric), ...]`` over the live metric
+        objects — the iteration surface for the time-series collector
+        and the OpenMetrics exporter."""
+        with self._lock:
+            return sorted(self._metrics.items())
 
     def snapshot(self) -> Dict[str, dict]:
         """{counters: {...}, gauges: {...}, histograms: {...}} — the

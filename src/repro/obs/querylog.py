@@ -1,14 +1,28 @@
 """Structured query log: the durable record of what was actually served.
 
-Every served query can append one bounded-memory record — vertex class,
-query class, log2 rect-area bucket, owning shard, latency, result
-cardinality — the direct input for the planned result cache (cache key =
+Every served query can append one bounded-memory record — query vertex,
+vertex class, query class, log2 rect-area bucket, owning shard, latency,
+result cardinality, and the engine-reported serving status (healthy vs
+degraded, retry count) — the direct input for the workload analytics
+(:mod:`repro.obs.workload`), the planned result cache (cache key =
 ``(vertex_class, rect_bucket)``) and query-log-driven hot-shard
 repartitioning (shard load = records per shard).  The log is a
 ring buffer (oldest records drop once ``capacity`` is reached, with a
 drop counter, never unbounded growth) plus always-cheap aggregate
 counters that survive ring eviction; ``to_jsonl`` exports the retained
-window for offline analysis.
+window for offline analysis (first line: a schema header).
+
+Streaming consumers (the Space-Saving sketches in
+:mod:`~repro.obs.workload`) attach with :meth:`QueryLog.add_sink` and
+see every record *before* ring eviction, so their aggregates cover the
+whole stream even when the ring only retains a window of it.
+
+Schema v2 grew ``u`` (the query vertex id — heavy-hitter detection
+needs the key, not just its class), ``status`` (``ok`` / ``degraded``:
+whether the engine answered on the device path or the exact host
+fallback) and ``retries`` (device attempts the batch burned beyond the
+first); v1 consumers keyed on field names keep working, the JSONL dump
+carries ``schema_version`` in its header line.
 """
 
 from __future__ import annotations
@@ -18,12 +32,18 @@ import json
 import math
 import threading
 import time
-from typing import Dict, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-FIELDS = ("t", "query_class", "vertex_class", "rect_bucket", "shard",
-          "latency_us", "cardinality")
+SCHEMA_VERSION = 2
+
+FIELDS = ("t", "query_class", "u", "vertex_class", "rect_bucket", "shard",
+          "latency_us", "cardinality", "status", "retries")
+
+# tuple indices for consumers iterating raw records
+I_T, I_QUERY_CLASS, I_U, I_VERTEX_CLASS, I_RECT_BUCKET, I_SHARD, \
+    I_LATENCY_US, I_CARDINALITY, I_STATUS, I_RETRIES = range(len(FIELDS))
 
 
 def rect_bucket(rect) -> int:
@@ -67,31 +87,62 @@ class QueryLog:
         self.total = 0
         self.by_class: Dict[str, int] = {}
         self.by_shard: Dict[int, int] = {}
+        self.by_status: Dict[str, int] = {}
+        self._sinks: List[Callable[[tuple], None]] = []
+
+    def add_sink(self, sink: Callable[[tuple], None]) -> None:
+        """Register a streaming consumer called with every record
+        appended from now on (before any ring eviction drops it)."""
+        with self._lock:
+            self._sinks.append(sink)
+
+    def remove_sink(self, sink: Callable[[tuple], None]) -> None:
+        with self._lock:
+            if sink in self._sinks:
+                self._sinks.remove(sink)
 
     def record(self, query_class: str, vertex_class: str, rect_b: int,
                shard: int, latency_s: float, cardinality: int,
-               t: Optional[float] = None) -> None:
-        rec = (t if t is not None else time.time(), query_class,
+               t: Optional[float] = None, u: int = -1,
+               status: str = "ok", retries: int = 0) -> None:
+        rec = (t if t is not None else time.time(), query_class, int(u),
                vertex_class, int(rect_b), int(shard),
-               float(latency_s) * 1e6, int(cardinality))
+               float(latency_s) * 1e6, int(cardinality), status,
+               int(retries))
         with self._lock:
             self._ring.append(rec)
             self.total += 1
             self.by_class[query_class] = self.by_class.get(query_class, 0) + 1
-            self.by_shard[rec[4]] = self.by_shard.get(rec[4], 0) + 1
+            self.by_shard[rec[I_SHARD]] = \
+                self.by_shard.get(rec[I_SHARD], 0) + 1
+            self.by_status[status] = self.by_status.get(status, 0) + 1
+            sinks = list(self._sinks)
+        for sink in sinks:
+            sink(rec)
 
     def record_batch(self, query_class: str, vertex_classes, rects,
-                     shards, latencies_s, cardinalities) -> None:
+                     shards, latencies_s, cardinalities,
+                     us=None, statuses=None, retries: int = 0) -> None:
         """Vectorised append for a served batch (one lock per record,
-        shared wall timestamp)."""
+        shared wall timestamp).  ``statuses`` is a per-query string
+        sequence (or one string for the whole batch); ``retries`` is
+        the batch-level device retry count the engine reported."""
         now = time.time()
         shards = np.asarray(shards)
         lats = np.asarray(latencies_s, dtype=np.float64)
         cards = np.asarray(cardinalities)
         for i in range(len(lats)):
+            if statuses is None:
+                st = "ok"
+            elif isinstance(statuses, str):
+                st = statuses
+            else:
+                st = str(statuses[i])
             self.record(query_class, str(vertex_classes[i]),
                         rect_bucket(rects[i]), int(shards[i]),
-                        float(lats[i]), int(cards[i]), t=now)
+                        float(lats[i]), int(cards[i]), t=now,
+                        u=int(us[i]) if us is not None else -1,
+                        status=st, retries=retries)
 
     # -- introspection --------------------------------------------------
 
@@ -112,9 +163,10 @@ class QueryLog:
     def snapshot(self) -> dict:
         with self._lock:
             n = len(self._ring)
-            lat = np.fromiter((r[5] for r in self._ring), dtype=np.float64,
-                              count=n)
+            lat = np.fromiter((r[I_LATENCY_US] for r in self._ring),
+                              dtype=np.float64, count=n)
             out = {
+                "schema_version": SCHEMA_VERSION,
                 "retained": n,
                 "total": self.total,
                 "dropped": self.total - n,
@@ -122,6 +174,7 @@ class QueryLog:
                 "by_class": dict(self.by_class),
                 "by_shard": {str(k): v
                              for k, v in sorted(self.by_shard.items())},
+                "by_status": dict(self.by_status),
             }
         if n:
             out["latency_us"] = {
@@ -129,8 +182,12 @@ class QueryLog:
         return out
 
     def to_jsonl(self, path: str) -> str:
-        """Export the retained window, one JSON object per line."""
+        """Export the retained window, one JSON object per line; the
+        first line is a schema header (``schema_version`` + field
+        list), the rest are records."""
         with open(path, "w") as f:
+            f.write(json.dumps({"schema_version": SCHEMA_VERSION,
+                                "fields": list(FIELDS)}) + "\n")
             for rec in self.records():
                 f.write(json.dumps(dict(zip(FIELDS, rec))) + "\n")
         return path
@@ -141,6 +198,7 @@ class QueryLog:
             self.total = 0
             self.by_class = {}
             self.by_shard = {}
+            self.by_status = {}
 
 
 QUERY_LOG = QueryLog()

@@ -93,6 +93,13 @@ class ResilientEngine:
         self._c_fb_batches = self._reg.counter("resilience.fallback_batches")
         self._c_fb_queries = self._reg.counter("resilience.fallback_queries")
         self._h_degraded = self._reg.histogram("resilience.degraded_query_us")
+        #: per-batch serving report, rewritten by every ``*_batch`` call:
+        #: {"degraded": (B,) bool — answered by the host fallback,
+        #:  "retries": device attempts burned beyond the first}.  The
+        #: frontend copies it into the structured query log so workload
+        #: analytics can split healthy vs degraded traffic.
+        self.last_report: Dict[str, object] = {
+            "degraded": np.zeros(0, dtype=bool), "retries": 0}
 
     # ------------------------------------------------------------------
     # breaker surface
@@ -188,6 +195,8 @@ class ResilientEngine:
         dl = Deadline(deadline, clock=self._clock)
         out = np.zeros(B, dtype=bool)
         pending = np.ones(B, dtype=bool)
+        report = {"degraded": np.zeros(B, dtype=bool), "retries": 0}
+        self.last_report = report
         attempts, prev_sleep = 0, 0.0
         while attempts < self.retry.max_attempts and not dl.expired():
             mask, granted = self._grants(us, pending)
@@ -204,6 +213,7 @@ class ResilientEngine:
                     prev_sleep = self.retry.next_backoff(
                         prev_sleep, self._rng)
                     self.stats["retries"] += 1
+                    report["retries"] += 1
                     self._c_retries.inc()
                     s = min(prev_sleep, max(dl.remaining(), 0.0))
                     if s > 0:
@@ -219,6 +229,7 @@ class ResilientEngine:
             # only shard-excluded queries remain: degrade just those
             break
         if pending.any():
+            report["degraded"] = pending.copy()
             out[pending] = self._host_fallback(
                 lambda sel: self.index.query_batch(us[sel], rects[sel]),
                 pending)
@@ -252,6 +263,8 @@ class ResilientEngine:
         (structured results do not merge across a per-shard split)."""
         dl = Deadline(deadline, clock=self._clock)
         attempts, prev_sleep = 0, 0.0
+        report = {"degraded": np.zeros(max(n, 0), dtype=bool), "retries": 0}
+        self.last_report = report
         have_dev = hasattr(self.engine, method)
         while have_dev and attempts < self.retry.max_attempts \
                 and not dl.expired():
@@ -266,6 +279,7 @@ class ResilientEngine:
                     prev_sleep = self.retry.next_backoff(
                         prev_sleep, self._rng)
                     self.stats["retries"] += 1
+                    report["retries"] += 1
                     self._c_retries.inc()
                     s = min(prev_sleep, max(dl.remaining(), 0.0))
                     if s > 0:
@@ -274,6 +288,7 @@ class ResilientEngine:
             self._breaker.record_success()
             self.stats["device_batches"] += 1
             return got
+        report["degraded"] = np.ones(max(n, 0), dtype=bool)
         return self._host_fallback(lambda _sel: host_call(),
                                    np.ones(max(n, 1), dtype=bool))
 

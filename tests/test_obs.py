@@ -30,7 +30,13 @@ import pytest
 from conftest import random_geosocial, random_queries
 from repro import obs
 from repro.obs.metrics import CounterDict, Histogram, Registry
-from repro.obs.querylog import FIELDS, QueryLog, rect_bucket
+from repro.obs.querylog import (
+    FIELDS,
+    I_VERTEX_CLASS,
+    QueryLog,
+    SCHEMA_VERSION,
+    rect_bucket,
+)
 from repro.obs.tracer import Tracer
 
 
@@ -102,6 +108,55 @@ def test_histogram_monotone_and_stats():
     snap = h.snapshot()
     assert snap["min"] == 1.0 and snap["max"] == 10.0
     assert snap["count"] == 4
+
+
+def test_histogram_merge_golden():
+    """Merged percentiles are bit-for-bit np.percentile on the
+    concatenated samples while the combined window is unsaturated."""
+    rng = np.random.default_rng(9)
+    a = rng.lognormal(3.0, 1.0, 700)
+    b = rng.exponential(50.0, 300)
+    ha = Histogram.from_samples(a, max_samples=2000)
+    hb = Histogram.from_samples(b)
+    assert ha.merge(hb) is ha
+    both = np.concatenate([a, b])
+    assert ha.count == 1000 and not ha.saturated
+    for p in (0, 50, 95, 99, 100):
+        assert ha.percentile(p) == float(np.percentile(both, p))
+    snap = ha.snapshot()
+    assert snap["min"] == both.min() and snap["max"] == both.max()
+    assert snap["sum"] == pytest.approx(both.sum())
+    with pytest.raises(ValueError, match="bucket layouts"):
+        ha.merge(Histogram(sub=8))
+
+
+def test_histogram_since_windowed_view():
+    """state()/since() subtraction yields exact percentiles for just
+    the values recorded in between (the time-series window)."""
+    rng = np.random.default_rng(13)
+    h = Histogram()
+    first = rng.lognormal(2.0, 0.7, 400)
+    h.record_many(first)
+    st = h.state()
+    second = rng.lognormal(4.0, 0.3, 300)
+    h.record_many(second)
+    win = h.since(st)
+    assert win.count == 300 and win.sum == pytest.approx(second.sum())
+    for p in (50, 95, 99):
+        assert win.percentile(p) == float(np.percentile(second, p))
+    assert win.min == second.min() and win.max == second.max()
+    whole = h.since(None)
+    assert whole.count == 700
+    assert whole.percentile(50) == h.percentile(50)
+    empty = h.since(h.state())              # no records in between
+    assert empty.count == 0 and np.isnan(empty.percentile(50))
+
+
+def test_histogram_count_above():
+    h = Histogram.from_samples([1.0, 5.0, 10.0, 50.0, 100.0])
+    assert h.count_above(10.0) == 3          # exact while unsaturated
+    assert h.count_above(1000.0) == 0
+    assert h.count_above(0.5) == 5
 
 
 def test_counter_gauge_registry():
@@ -266,11 +321,37 @@ def test_querylog_jsonl_roundtrip(tmp_path):
         np.array([0, 1]), [1e-3, 2e-3], [1, 0])
     path = log.to_jsonl(str(tmp_path / "q.jsonl"))
     lines = [json.loads(l) for l in open(path)]
-    assert len(lines) == 2
-    assert all(set(l) == set(FIELDS) for l in lines)
-    assert lines[0]["vertex_class"] == "user"
-    assert lines[1]["rect_bucket"] == 2
-    assert lines[1]["shard"] == 1
+    header, recs = lines[0], lines[1:]
+    assert header == {"schema_version": SCHEMA_VERSION,
+                      "fields": list(FIELDS)}
+    assert len(recs) == 2
+    assert all(set(r) == set(FIELDS) for r in recs)
+    assert recs[0]["vertex_class"] == "user"
+    assert recs[1]["rect_bucket"] == 2
+    assert recs[1]["shard"] == 1
+    # schema-v2 defaults when the producer reports nothing
+    assert recs[0]["status"] == "ok" and recs[0]["retries"] == 0
+    assert recs[0]["u"] == -1
+
+
+def test_querylog_status_and_sinks():
+    """v2 fields flow through record/record_batch; streaming sinks see
+    every record before ring eviction."""
+    log = QueryLog(capacity=4)
+    seen = []
+    log.add_sink(seen.append)
+    log.record_batch(
+        "reach", ["user"] * 3,
+        np.zeros((3, 4), dtype=np.float32), np.zeros(3),
+        [1e-3] * 3, [0] * 3, us=np.array([7, 7, 9]),
+        statuses=["ok", "degraded", "ok"], retries=2)
+    for i in range(6):                       # overflow the ring
+        log.record("reach", "user", 0, 0, 1e-3, 0, u=7)
+    assert len(log) == 4 and log.dropped == 5
+    assert len(seen) == 9                    # sinks saw the whole stream
+    snap = log.snapshot()
+    assert snap["schema_version"] == SCHEMA_VERSION
+    assert snap["by_status"] == {"ok": 8, "degraded": 1}
 
 
 # ------------------------------------------------- engine + frontend obs
@@ -310,7 +391,7 @@ def test_mixed_serve_coverage_at_least_95pct(built):
     layers = {name.split(".")[0] for name in totals}
     assert {"serve", "engine", "frontend"} <= layers
     snap = obs.snapshot()
-    assert snap["schema_version"] == 1
+    assert snap["schema_version"] == 2
     assert snap["query_log"]["total"] >= 64          # frontend logged
     assert "frontend.flush" in snap["spans"]
 
@@ -327,11 +408,12 @@ def test_frontend_explicit_query_log(built):
         fe.submit_many(us[:48], rects[:48])
     assert qlog.total == 48
     recs = qlog.records()
-    classes = {r[2] for r in recs}
+    classes = {r[I_VERTEX_CLASS] for r in recs}
     assert classes <= {"user", "sink", "unknown"}
     excluded = np.asarray(idx.excluded)
     want_sink = int(excluded[us[:48].astype(np.int64)].sum())
-    assert sum(1 for r in recs if r[2] == "sink") == want_sink
+    assert sum(1 for r in recs
+               if r[I_VERTEX_CLASS] == "sink") == want_sink
 
 
 def test_obs_dump_writes_artifacts(tmp_path, built):
@@ -345,7 +427,12 @@ def test_obs_dump_writes_artifacts(tmp_path, built):
                for e in trace["traceEvents"])
     snap = json.load(open(paths["metrics"]))
     assert "engine.batch_us" in snap["metrics"]["histograms"]
-    assert open(paths["querylog"]).read() == ""      # nothing frontend-served
+    qlines = open(paths["querylog"]).read().splitlines()
+    assert len(qlines) == 1                  # header only: nothing served
+    assert json.loads(qlines[0])["schema_version"] == SCHEMA_VERSION
+    prom = open(paths["prom"]).read()        # OpenMetrics always written
+    assert prom.endswith("# EOF\n")
+    assert "repro_engine_batch_us_count 1" in prom
 
 
 def test_engine_cost_model_sanity(built):

@@ -1,0 +1,155 @@
+"""Bench-regression sentinel: extraction, baselines, verdicts, CLI.
+
+The CI contract: ``regress.py`` exits 0 when a fresh bench matches the
+seeded history and nonzero when a metric regresses past tolerance; the
+committed ``results/bench_history.jsonl`` seed parses and covers every
+tracked metric of the committed BENCH files.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+import regress  # noqa: E402
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _bench(tmp_path, name="BENCH_rangereach.json", scale=1.0):
+    doc = json.load(open(os.path.join(REPO, name)))
+    if scale != 1.0:
+        for k in doc["engines"]:
+            doc["engines"][k] *= scale
+    os.makedirs(str(tmp_path), exist_ok=True)
+    path = str(tmp_path / name)
+    json.dump(doc, open(path, "w"))
+    return path
+
+
+# ------------------------------------------------------------- extraction
+
+def test_extract_committed_bench_files():
+    for name in regress.BENCHES:
+        doc = json.load(open(os.path.join(REPO, name)))
+        metrics = regress.extract(name, doc)
+        assert metrics, f"{name}: no metrics extracted"
+        assert all(isinstance(v, float) and v > 0
+                   for v in metrics.values())
+    with pytest.raises(ValueError, match="no extractor"):
+        regress.extract("BENCH_unknown.json", {})
+
+
+def test_committed_seed_history_covers_benches():
+    """The committed seed parses and gives every tracked metric of every
+    committed BENCH file a baseline."""
+    history = regress.load_history(
+        os.path.join(REPO, "results", "bench_history.jsonl"))
+    assert history, "seed history missing or empty"
+    for run in history:
+        assert run["schema_version"] == regress.SCHEMA_VERSION
+        assert run["metrics"]
+    for name in regress.BENCHES:
+        doc = json.load(open(os.path.join(REPO, name)))
+        for metric in regress.extract(name, doc):
+            assert regress.baseline_for(history, name, metric,
+                                        5) is not None, \
+                f"{name}:{metric} has no baseline in the seed"
+
+
+# ---------------------------------------------------- baseline + verdicts
+
+def test_baseline_is_median_of_last_n():
+    hist = [{"bench": "b.json", "metrics": {"m": v}}
+            for v in (10.0, 10.0, 400.0, 12.0, 11.0)]
+    # median of the last 3 (400, 12, 11) = 12: one outlier run cannot
+    # poison the baseline
+    assert regress.baseline_for(hist, "b.json", "m", 3) == 12.0
+    assert regress.baseline_for(hist, "b.json", "m", 5) == 11.0
+    assert regress.baseline_for(hist, "b.json", "missing", 3) is None
+    assert regress.baseline_for(hist, "other.json", "m", 3) is None
+
+
+def test_compare_verdicts():
+    hist = [{"bench": "b.json", "metrics": {"ok": 10.0, "slow": 10.0,
+                                            "fast": 10.0}}]
+    rows = regress.compare(
+        "b.json", {"ok": 11.0, "slow": 20.0, "fast": 2.0, "fresh": 5.0},
+        hist, tol=0.25)
+    verdicts = {r["metric"]: r["verdict"] for r in rows}
+    assert verdicts == {"ok": regress.OK, "slow": regress.REGRESSED,
+                        "fast": regress.IMPROVED, "fresh": regress.NEW}
+    by = {r["metric"]: r for r in rows}
+    assert by["slow"]["ratio"] == pytest.approx(2.0)
+    assert by["fresh"]["baseline"] is None
+
+
+def test_per_metric_tolerance_override():
+    hist = [{"bench": "b.json", "metrics": {"noisy": 10.0}}]
+    rows = regress.compare("b.json", {"noisy": 18.0}, hist, tol=0.25,
+                           metric_tol={"noisy": 1.0})
+    assert rows[0]["verdict"] == regress.OK
+    rows = regress.compare("b.json", {"noisy": 18.0}, hist, tol=0.25)
+    assert rows[0]["verdict"] == regress.REGRESSED
+
+
+# ----------------------------------------------------------- CLI contract
+
+def test_cli_seed_then_pass_then_fail(tmp_path, capsys):
+    hist = str(tmp_path / "hist.jsonl")
+    good = _bench(tmp_path)
+
+    # seed (append-only, no gating)
+    assert regress.main(["--bench", good, "--history", hist,
+                         "--no-check", "--label", "seed"]) == 0
+    runs = regress.load_history(hist)
+    assert len(runs) == 1 and runs[0]["label"] == "seed"
+
+    # identical rerun passes and appends
+    assert regress.main(["--bench", good, "--history", hist]) == 0
+    assert len(regress.load_history(hist)) == 2
+    assert "verdict" in capsys.readouterr().out
+
+    # doctored 3x regression fails with exit 1 ...
+    bad = _bench(tmp_path / "bad", scale=3.0)
+    assert regress.main(["--bench", bad, "--history", hist]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSED" in out and "engines.host" in out
+    # ... and the bad run is still recorded (the artifact shows it)
+    assert len(regress.load_history(hist)) == 3
+
+    # --no-append gates without recording
+    assert regress.main(["--bench", good, "--history", hist,
+                         "--no-append", "--baseline-n", "2"]) == 0
+    assert len(regress.load_history(hist)) == 3
+
+
+def test_cli_tolerance_absorbs_noise(tmp_path):
+    hist = str(tmp_path / "hist.jsonl")
+    regress.main(["--bench", _bench(tmp_path), "--history", hist,
+                  "--no-check"])
+    wobbly = _bench(tmp_path / "w", scale=1.6)
+    # 1.6x fails the tight default but passes the cross-machine CI tol
+    assert regress.main(["--bench", wobbly, "--history", hist,
+                         "--no-append"]) == 1
+    assert regress.main(["--bench", wobbly, "--history", hist,
+                         "--no-append", "--tol", "1.0"]) == 0
+
+
+def test_cli_metric_tol_parsing(tmp_path):
+    hist = str(tmp_path / "hist.jsonl")
+    regress.main(["--bench", _bench(tmp_path), "--history", hist,
+                  "--no-check"])
+    bad = _bench(tmp_path / "b", scale=2.0)
+    args = ["--bench", bad, "--history", hist, "--no-append"]
+    for m in ("engines.host", "engines.device", "engines.wavefront",
+              "engines.cluster", "engines.pallas_leafscan"):
+        args += ["--metric-tol", f"{m}=5.0"]
+    # scaling only touched engines.*; with those overridden the
+    # untouched latency metrics keep it green
+    assert regress.main(args) == 0

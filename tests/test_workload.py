@@ -1,0 +1,402 @@
+"""Workload intelligence: sketches, skew, SLO burn rates, exporters.
+
+Covers the stage-2 observability acceptance gates:
+
+* Space-Saving guarantees on adversarial Zipf streams — every true
+  heavy hitter monitored, estimates within the ``n/capacity`` bound,
+  ``heavy_hitters(phi)`` a superset of the exact heavy-hitter set.
+* Gini coefficient identical to the exact pairwise NumPy definition.
+* ``WorkloadAnalytics``: shard shares sum to 1, exact-recount
+  verification against the query log, placement report structure.
+* SLO burn-rate monitor fires and clears deterministically on a fake
+  clock, with multi-window semantics (short window gates clearing).
+* OpenMetrics exposition parse-checked line-by-line; summary quantiles
+  bit-for-bit ``np.percentile``.
+* Time-series collector: counter deltas/rates and windowed histogram
+  percentiles under a fake clock; JSONL dump with schema header.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+
+import numpy as np
+import pytest
+
+from repro.obs.export import metric_name, to_openmetrics
+from repro.obs.metrics import Registry
+from repro.obs.querylog import QueryLog
+from repro.obs.slo import SLOMonitor, default_slos, hist_count, \
+    latency_above
+from repro.obs.timeseries import TimeSeriesCollector
+from repro.obs.workload import SpaceSaving, WorkloadAnalytics, gini
+
+
+def zipf_keys(rng, n, n_keys=5000, s=1.3):
+    p = np.arange(1, n_keys + 1, dtype=np.float64) ** -s
+    p /= p.sum()
+    return rng.choice(n_keys, size=n, p=p)
+
+
+# ----------------------------------------------------------- Space-Saving
+
+def test_space_saving_exact_below_capacity():
+    ss = SpaceSaving(capacity=64)
+    stream = [1, 2, 2, 3, 3, 3, 4] * 5
+    for k in stream:
+        ss.offer(k)
+    assert ss.n == len(stream)
+    assert ss.count(3) == (15, 0)            # exact, zero error
+    assert ss.count(99) is None
+    assert [k for k, _, _ in ss.top(2)] == [3, 2]
+
+
+@pytest.mark.parametrize("s", [1.1, 1.5])
+def test_space_saving_zipf_guarantees(s):
+    """The classic guarantees on a skewed stream with far more distinct
+    keys than sketch capacity."""
+    rng = np.random.default_rng(int(s * 10))
+    capacity = 64
+    stream = zipf_keys(rng, 20000, n_keys=5000, s=s)
+    ss = SpaceSaving(capacity)
+    exact: dict = {}
+    for k in stream:
+        k = int(k)
+        ss.offer(k)
+        exact[k] = exact.get(k, 0) + 1
+    n = len(stream)
+    bound = n / capacity
+    assert len(ss) == capacity               # memory stays bounded
+    # (1) every key with true count > n/capacity is monitored
+    for k, c in exact.items():
+        if c > bound:
+            assert ss.count(k) is not None, f"hot key {k} not monitored"
+    # (2) true <= estimate <= true + n/capacity, and the per-key error
+    #     bound brackets the overcount
+    for k, est, err in ss.items():
+        t = exact.get(k, 0)
+        assert t <= est <= t + bound
+        assert est - err <= t
+    # (3) heavy_hitters(phi) has no false negatives for phi > 1/capacity
+    phi = 2.0 / capacity
+    hh = {k for k, _, _ in ss.heavy_hitters(phi)}
+    exact_hh = {k for k, c in exact.items() if c >= phi * n}
+    assert exact_hh <= hh
+
+
+def test_space_saving_adversarial_churn():
+    """Worst case for the lazy heap: a long all-distinct prefix (every
+    offer evicts) followed by a returning hot key."""
+    ss = SpaceSaving(capacity=8)
+    for k in range(1000):
+        ss.offer(k)
+    for _ in range(500):
+        ss.offer("hot")
+    est, err = ss.count("hot")
+    assert est >= 500                        # never undercounts
+    assert est - err <= 500                  # error brackets the truth
+    assert ss.top(1)[0][0] == "hot"
+    assert len(ss) == 8
+
+
+def test_space_saving_validates_capacity():
+    with pytest.raises(ValueError):
+        SpaceSaving(0)
+
+
+# -------------------------------------------------------------------- Gini
+
+def exact_gini(x):
+    x = np.asarray(x, dtype=np.float64)
+    n = len(x)
+    if n == 0 or x.sum() == 0:
+        return 0.0
+    return float(np.abs(x[:, None] - x[None, :]).sum()
+                 / (2.0 * n * n * x.mean()))
+
+
+def test_gini_matches_pairwise_definition():
+    rng = np.random.default_rng(4)
+    for x in (rng.random(50), rng.lognormal(0, 2, 200),
+              np.array([5.0]), np.array([1.0, 1.0, 1.0])):
+        assert gini(x) == pytest.approx(exact_gini(x), abs=1e-12)
+
+
+def test_gini_extremes():
+    assert gini([]) == 0.0
+    assert gini([0.0, 0.0]) == 0.0
+    assert gini([3.0, 3.0, 3.0, 3.0]) == pytest.approx(0.0)
+    n = 10                                   # one shard carries all
+    assert gini([1.0] + [0.0] * (n - 1)) == pytest.approx((n - 1) / n)
+
+
+# --------------------------------------------------- workload analytics
+
+def _fill_log(log, rng, n=3000, n_shards=4):
+    """Zipf vertices, skewed shards, a degraded slice."""
+    us = zipf_keys(rng, n, n_keys=500, s=1.4)
+    shards = rng.choice(n_shards, size=n, p=[0.55, 0.25, 0.15, 0.05])
+    for i in range(n):
+        log.record("reach", "user", int(rng.integers(-2, 3)),
+                   int(shards[i]), float(rng.exponential(1e-4)),
+                   1, u=int(us[i]),
+                   status="degraded" if i % 10 == 0 else "ok",
+                   retries=1 if i % 50 == 0 else 0)
+    return us, shards
+
+
+def test_workload_analytics_report_and_verify():
+    rng = np.random.default_rng(17)
+    log = QueryLog(capacity=10000)           # no eviction: exact window
+    wa = WorkloadAnalytics()
+    log.add_sink(wa.observe)
+    us, shards = _fill_log(log, rng)
+    n = len(us)
+    assert wa.total == n
+
+    rep = wa.placement_report(top_k=5, query_log=log)
+    skew = rep["skew"]
+    assert skew["n_shards"] == 4
+    q_shares = [v["query_share"] for v in skew["per_shard"].values()]
+    l_shares = [v["latency_share"] for v in skew["per_shard"].values()]
+    assert sum(q_shares) == pytest.approx(1.0)
+    assert sum(l_shares) == pytest.approx(1.0)
+    assert sum(v["queries"] for v in skew["per_shard"].values()) == n
+    # gini of the shares matches the exact NumPy recount of the stream
+    counts = np.bincount(shards, minlength=4).astype(float)
+    assert skew["gini_queries"] == pytest.approx(exact_gini(counts))
+    assert skew["max_query_share"] == pytest.approx(counts.max() / n)
+
+    # the sketch's heavy hitters match the exact recount of the log
+    ver = rep["verified"]
+    assert ver["window_is_stream"]
+    assert ver["exact_match"]
+    assert ver["all_exact_reported"]
+    exact = np.bincount(us)
+    top_true = int(np.argmax(exact))
+    assert rep["heavy_hitters"]["vertices"][0]["key"] == top_true
+    assert rep["by_status"]["degraded"] == n // 10
+    assert rep["degraded_fraction"] == pytest.approx(0.1, abs=0.01)
+    assert rep["device_retries"] == n // 50
+    # the humans' table renders every sketch
+    table = wa.top_table(top_k=3)
+    assert "vertex" in table and "shard" in table and "%" in table
+
+
+def test_workload_analytics_sink_outlives_ring():
+    """Sketch totals cover the whole stream even when the log ring only
+    retains a small window of it."""
+    rng = np.random.default_rng(23)
+    log = QueryLog(capacity=64)              # heavy eviction
+    wa = WorkloadAnalytics()
+    log.add_sink(wa.observe)
+    _fill_log(log, rng, n=2000)
+    assert log.dropped == 2000 - 64
+    assert wa.total == 2000                  # sink saw pre-eviction
+    assert wa.vertices.n == 2000
+    ver = wa.verify(log)
+    assert not ver["window_is_stream"]       # and says so
+    assert ver["window"] == 64
+
+
+# ------------------------------------------------------------ SLO monitor
+
+def test_slo_fires_and_clears_on_fake_clock():
+    reg = Registry()
+    bad, tot = reg.counter("bad"), reg.counter("total")
+    mon = SLOMonitor(registry=reg)
+    mon.add("avail", "bad", "total", budget=0.01,
+            windows=(5.0, 60.0), threshold=1.0)
+
+    t = 0.0
+    for _ in range(61):                      # healthy minute: no alerts
+        tot.inc(100)
+        assert mon.tick(t) == []
+        t += 1.0
+    assert not mon.slos[0].active
+
+    fired_at = None
+    for _ in range(10):                      # 50% bad: burn 50x short,
+        tot.inc(100)                         # >1x long -> must fire
+        bad.inc(50)
+        for e in mon.tick(t):
+            assert e["kind"] == "fired" and e["slo"] == "avail"
+            fired_at = e["t"]
+            assert e["burns"]["5s"] > 1.0 and e["burns"]["60s"] > 1.0
+        t += 1.0
+    assert fired_at is not None
+    assert mon.slos[0].active
+    assert reg.counter("slo.avail.fired").value == 1
+    assert reg.gauge("slo.avail.active").value == 1
+
+    cleared = []
+    for _ in range(10):                      # recovery: short window
+        tot.inc(100)                         # drains -> clears
+        cleared += [e for e in mon.tick(t) if e["kind"] == "cleared"]
+        t += 1.0
+    assert len(cleared) == 1
+    assert not mon.slos[0].active
+    assert reg.gauge("slo.avail.active").value == 0
+    snap = mon.snapshot()
+    assert snap["active"] == []
+    assert [e["kind"] for e in snap["events"]] == ["fired", "cleared"]
+
+
+def test_slo_long_window_gates_blips():
+    """A short bad blip burns the 5s window but not the 60s window:
+    multi-window alerting stays quiet."""
+    reg = Registry()
+    bad, tot = reg.counter("b"), reg.counter("t")
+    mon = SLOMonitor(registry=reg)
+    mon.add("x", "b", "t", budget=0.01, windows=(5.0, 60.0))
+    t = 0.0
+    for i in range(120):
+        tot.inc(100)
+        if i == 100:                         # one bad second
+            bad.inc(60)
+        assert mon.tick(t) == [], f"fired on a blip at t={t}"
+        t += 1.0
+
+
+def test_slo_latency_sources():
+    reg = Registry()
+    h = reg.histogram("lat_us")
+    for v in [10.0] * 90 + [9000.0] * 10:
+        h.record(v)
+    assert latency_above("lat_us", 1000.0)(reg) == 10
+    assert hist_count("lat_us")(reg) == 100
+
+
+def test_default_slos_wiring():
+    reg = Registry()
+    mon = default_slos(SLOMonitor(registry=reg))
+    names = {s.name for s in mon.slos}
+    assert names == {"availability", "degraded", "breaker", "latency"}
+    # resolvable against a registry that has seen no traffic
+    assert mon.tick(0.0) == []
+    with pytest.raises(ValueError):
+        mon.add("zero-budget", "b", "t", budget=0.0)
+
+
+# ------------------------------------------------------------ OpenMetrics
+
+# one OpenMetrics sample line: name{labels} value
+_SAMPLE = re.compile(
+    r'^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[a-zA-Z0-9_]+="[^"]*"'
+    r'(,[a-zA-Z0-9_]+="[^"]*")*\})? -?[0-9].*$|'
+    r'^[a-zA-Z_:][a-zA-Z0-9_:]*(\{.*\})? (NaN|[+-]Inf)$')
+_TYPE = re.compile(r"^# TYPE [a-zA-Z_:][a-zA-Z0-9_:]* "
+                   r"(counter|gauge|summary)$")
+
+
+def test_openmetrics_parses_line_by_line():
+    reg = Registry()
+    reg.counter("frontend.requests").inc(42)
+    reg.gauge("frontend.queue_depth").set(7)
+    lat = np.random.default_rng(0).lognormal(3, 1, 500)
+    h = reg.histogram("engine.batch_us")
+    h.record_many(lat)
+    reg.counter("weird-name.с")              # sanitisation fodder
+
+    text = to_openmetrics(reg)
+    lines = text.splitlines()
+    assert lines[-1] == "# EOF"
+    typed = set()
+    for ln in lines[:-1]:
+        if ln.startswith("# TYPE"):
+            assert _TYPE.match(ln), f"bad TYPE line: {ln!r}"
+            typed.add(ln.split()[2])
+        else:
+            assert _SAMPLE.match(ln), f"unparseable sample: {ln!r}"
+            fam = re.split(r"[{ ]", ln)[0]
+            base = re.sub(r"(_total|_sum|_count|_hwm)$", "", fam)
+            assert fam in typed or base in typed, f"untyped: {ln!r}"
+
+    assert "repro_frontend_requests_total 42" in lines
+    assert "repro_frontend_queue_depth 7" in lines
+    # summary quantiles are the histogram's exact percentiles
+    for q, p in ((0.5, 50), (0.99, 99)):
+        want = float(np.percentile(lat, p))
+        assert f'repro_engine_batch_us{{quantile="{q:g}"}} {want!r}' \
+            in text or f'repro_engine_batch_us{{quantile="{q:g}"}} ' \
+            f'{int(want)}' in text
+    assert "repro_engine_batch_us_count 500" in lines
+
+
+def test_metric_name_sanitisation():
+    assert metric_name("a.b-c d") == "repro_a_b_c_d"
+    assert metric_name("engine.batch_us") == "repro_engine_batch_us"
+    assert metric_name("9lives", prefix="") == "_9lives"
+
+
+# ------------------------------------------------------------ time series
+
+def test_timeseries_deltas_and_windows_fake_clock():
+    reg = Registry()
+    c = reg.counter("served")
+    h = reg.histogram("lat")
+    clock_t = [100.0]
+    ts = TimeSeriesCollector(registry=reg, clock=lambda: clock_t[0],
+                             capacity=16)
+
+    c.inc(10)
+    first = np.array([5.0, 10.0, 20.0])
+    h.record_many(first)
+    s0 = ts.sample()
+    assert s0["dt"] is None
+    assert s0["counters"]["served"] == {"value": 10.0, "delta": 10.0}
+    assert s0["histograms"]["lat"]["delta"] == 3
+    assert s0["histograms"]["lat"]["p50"] == float(np.percentile(first, 50))
+
+    clock_t[0] = 102.0
+    c.inc(30)
+    second = np.array([100.0, 200.0, 300.0, 400.0])
+    h.record_many(second)
+    s1 = ts.sample()
+    assert s1["dt"] == pytest.approx(2.0)
+    assert s1["counters"]["served"]["delta"] == 30.0
+    assert s1["counters"]["served"]["rate"] == pytest.approx(15.0)
+    win = s1["histograms"]["lat"]
+    assert win["count"] == 7 and win["delta"] == 4
+    # windowed percentiles describe only this interval's recordings
+    assert win["p50"] == float(np.percentile(second, 50))
+    assert win["sum_delta"] == pytest.approx(second.sum())
+
+    tsx, vals = ts.series("counters", "served", "rate")
+    assert tsx == [102.0] and vals == [15.0]
+
+
+def test_timeseries_hooks_drive_slo(tmp_path):
+    reg = Registry()
+    bad, tot = reg.counter("b"), reg.counter("t")
+    mon = SLOMonitor(registry=reg)
+    mon.add("x", "b", "t", budget=0.01, windows=(2.0,))
+    clock_t = [0.0]
+    ts = TimeSeriesCollector(registry=reg, clock=lambda: clock_t[0])
+    ts.add_hook(lambda t, _s: mon.tick(t))
+    for i in range(8):
+        tot.inc(100)
+        if i >= 5:
+            bad.inc(100)                     # 100% bad -> fire
+        ts.sample()
+        clock_t[0] += 1.0
+    assert mon.slos[0].active                # ticked via the hook
+    path = ts.to_jsonl(str(tmp_path / "ts.jsonl"))
+    lines = [json.loads(l) for l in open(path)]
+    assert lines[0]["schema_version"] == 1
+    assert lines[0]["samples"] == 8 == len(lines) - 1
+    assert lines[4]["counters"]["t"]["value"] == 400.0
+
+
+def test_timeseries_ring_bounded():
+    reg = Registry()
+    reg.counter("c").inc()
+    clock_t = [0.0]
+    ts = TimeSeriesCollector(registry=reg, clock=lambda: clock_t[0],
+                             capacity=4)
+    for _ in range(10):
+        ts.sample()
+        clock_t[0] += 1.0
+    assert len(ts) == 4
+    assert ts.dropped == 6
