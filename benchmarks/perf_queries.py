@@ -91,37 +91,57 @@ def class_sweep(dataset="gowalla", scale=0.5, n_q=2000, k=10,
         ),
     }
 
+    # the classes with a retained two-launch path: timed alongside the
+    # fused trace so the artifact carries the fusion win per class
+    two_phase = {
+        "reach": lambda: eng.query_batch_two_phase(us, rects),
+        "count": lambda: eng.count_batch_two_phase(us, rects),
+        "collect": lambda: eng.collect_batch_two_phase(us, rects, k),
+    }
+
     # warm every class (shared prepare trace + per-class scans + the
     # candidate/collect-cap high-water marks), then gate on flat compiles
     for kind, (host_fn, dev_fn) in cases.items():
-        assert _same(kind, host_fn(), dev_fn()), \
+        host_ans = host_fn()
+        assert _same(kind, host_ans, dev_fn()), \
             f"{kind}: device answers diverge from host"
+        if kind in two_phase:
+            assert _same(kind, host_ans, two_phase[kind]()), \
+                f"{kind}: two-phase answers diverge from host"
     warm = eng.n_compiles
+
+    def _stage_pass(fn):
+        """One instrumented pass after the timed one: per-stage span
+        attribution without skewing the us_per_q numbers."""
+        was = obs.enabled()
+        obs.enable()
+        sub0 = obs.stage_totals("engine.")
+        fn()
+        sub1 = obs.stage_totals("engine.")
+        if not was:
+            obs.disable()
+        return {k2: round(sub1.get(k2, 0.0) - sub0.get(k2, 0.0), 3)
+                for k2 in sub1
+                if sub1.get(k2, 0.0) > sub0.get(k2, 0.0)}
 
     rows = []
     for kind, (host_fn, dev_fn) in cases.items():
         compiles0 = eng.n_compiles
         t_host = _t(host_fn, repeats=repeats)
         t_dev = _t(dev_fn, repeats=repeats)
-        # one instrumented device pass after the timed one: per-stage
-        # span attribution without skewing device_us_per_q
-        was = obs.enabled()
-        obs.enable()
-        sub0 = obs.stage_totals("engine.")
-        dev_fn()
-        sub1 = obs.stage_totals("engine.")
-        if not was:
-            obs.disable()
-        stage_us = {k2: round(sub1.get(k2, 0.0) - sub0.get(k2, 0.0), 3)
-                    for k2 in sub1
-                    if sub1.get(k2, 0.0) > sub0.get(k2, 0.0)}
-        rows.append(dict(
+        stage_us = _stage_pass(dev_fn)
+        row = dict(
             query_class=kind, variant=variant, n_queries=n_q, k=k,
             host_us_per_q=t_host / n_q * 1e6,
             device_us_per_q=t_dev / n_q * 1e6,
             device_stage_us=stage_us,
-            steady_state_recompiles=eng.n_compiles - compiles0,
-        ))
+        )
+        if kind in two_phase:
+            t_tp = _t(two_phase[kind], repeats=repeats)
+            row["two_phase_us_per_q"] = t_tp / n_q * 1e6
+            row["two_phase_stage_us"] = _stage_pass(two_phase[kind])
+        row["steady_state_recompiles"] = eng.n_compiles - compiles0
+        rows.append(row)
     rows.append(dict(query_class="_all", variant=variant, n_queries=n_q,
                      k=k, host_us_per_q=None, device_us_per_q=None,
                      steady_state_recompiles=eng.n_compiles - warm))
@@ -133,11 +153,18 @@ def bench_summary(rows: List[Dict]) -> Dict:
     for r in rows:
         if r["query_class"] == "_all":
             continue
-        classes[r["query_class"]] = {
+        cls = {
             "host_us_per_q": r["host_us_per_q"],
             "device_us_per_q": r["device_us_per_q"],
             "device_stage_us": r.get("device_stage_us"),
         }
+        if r.get("two_phase_us_per_q") is not None:
+            cls["two_phase_us_per_q"] = r["two_phase_us_per_q"]
+            cls["two_phase_stage_us"] = r.get("two_phase_stage_us")
+            cls["fusion_speedup_x"] = (
+                r["two_phase_us_per_q"] / r["device_us_per_q"]
+                if r["device_us_per_q"] else None)
+        classes[r["query_class"]] = cls
     total_rec = int(sum(r["steady_state_recompiles"] for r in rows
                         if r["query_class"] != "_all"))
     return {

@@ -14,11 +14,16 @@ gates held.  This tool closes the loop:
    (median, not mean, so one noisy CI run cannot poison the baseline),
    with a configurable relative tolerance — global ``--tol`` plus
    per-metric ``--metric-tol name=frac`` overrides;
-3. **append** the run to ``results/bench_history.jsonl`` (one JSON
+3. **gate** the history-free structural ratios (:data:`RATIO_GATES`):
+   per query class the fused device engine must not be slower than the
+   host descent (``device_us_per_q <= host_us_per_q``) and the cluster
+   emulation must stay within 2x the single device — same-run ratios,
+   so they hold on any machine speed;
+4. **append** the run to ``results/bench_history.jsonl`` (one JSON
    object per line: timestamp, bench, label, metrics) so the next run
    sees it;
-4. print a per-metric verdict table and **exit nonzero** when any
-   metric regressed past tolerance.
+5. print a per-metric verdict table and **exit nonzero** when any
+   metric regressed past tolerance or any ratio gate broke.
 
 Usage::
 
@@ -151,6 +156,70 @@ def baseline_for(history: List[dict], bench: str, metric: str,
     return _median([float(v) for v in vals[-n:]])
 
 
+# -------------------------------------------------------------- invariants
+
+#: History-free ratio ceilings — the structural perf claims the fused
+#: serving path must hold on every run, regardless of machine speed:
+#: per query class the device engine may not be slower than the host
+#: descent (the paper's "device strictly fastest" claim; both numbers
+#: come from the same process so machine noise cancels), and the
+#: single-host cluster emulation may not cost more than 2x the
+#: single-device engine.  (bench, gate name, numerator metric,
+#: denominator metric, max ratio).
+RATIO_GATES = (
+    ("BENCH_queries.json", "reach.device_vs_host",
+     "queries.reach.device_us_per_q", "queries.reach.host_us_per_q", 1.0),
+    ("BENCH_queries.json", "count.device_vs_host",
+     "queries.count.device_us_per_q", "queries.count.host_us_per_q", 1.0),
+    ("BENCH_queries.json", "collect.device_vs_host",
+     "queries.collect.device_us_per_q",
+     "queries.collect.host_us_per_q", 1.0),
+    ("BENCH_queries.json", "knn.device_vs_host",
+     "queries.knn.device_us_per_q", "queries.knn.host_us_per_q", 1.0),
+    # polygon serves through the two-phase scan (host point-in-polygon
+    # epilogue) — narrower margin, so a little noise headroom
+    ("BENCH_queries.json", "polygon.device_vs_host",
+     "queries.polygon.device_us_per_q",
+     "queries.polygon.host_us_per_q", 1.25),
+    ("BENCH_rangereach.json", "device_vs_host",
+     "engines.device", "engines.host", 1.0),
+    ("BENCH_rangereach.json", "cluster_vs_device",
+     "engines.cluster", "engines.device", 2.0),
+)
+
+
+def gate_rows(bench: str, metrics: Dict[str, float],
+              slack: float = 0.0) -> List[dict]:
+    """Evaluate the :data:`RATIO_GATES` for one bench over its
+    extracted metrics; ``slack`` relaxes every ceiling by a relative
+    fraction (for cross-machine CI)."""
+    bench = os.path.basename(bench)
+    rows = []
+    for b, name, num, den, ceil in RATIO_GATES:
+        if b != bench or num not in metrics or den not in metrics:
+            continue
+        d = metrics[den]
+        ratio = metrics[num] / d if d > 0 else float("inf")
+        limit = ceil * (1.0 + slack)
+        rows.append({"gate": name, "numerator": metrics[num],
+                     "denominator": d, "ratio": ratio, "limit": limit,
+                     "verdict": OK if ratio <= limit else REGRESSED})
+    return rows
+
+
+def print_gates(bench: str, rows: List[dict]) -> None:
+    if not rows:
+        return
+    name_w = max([len(r["gate"]) for r in rows] + [12])
+    print(f"[regress] {os.path.basename(bench)} ratio gates")
+    print(f"  {'gate':<{name_w}}  {'num':>12}  {'den':>12}  "
+          f"{'ratio':>7}  {'limit':>6}  verdict")
+    for r in rows:
+        print(f"  {r['gate']:<{name_w}}  {r['numerator']:12.3f}  "
+              f"{r['denominator']:12.3f}  {r['ratio']:7.2f}  "
+              f"{r['limit']:6.2f}  {r['verdict']}")
+
+
 # ---------------------------------------------------------------- compare
 
 def compare(bench: str, metrics: Dict[str, float], history: List[dict],
@@ -201,12 +270,14 @@ def print_table(bench: str, rows: List[dict]) -> None:
 def run_sentinel(bench_paths: List[str], history_path: str = HISTORY,
                  baseline_n: int = 5, tol: float = 0.25,
                  metric_tol: Optional[Dict[str, float]] = None,
-                 append: bool = True, label: str = "") -> int:
-    """Check every bench file against the history, optionally append
-    the runs, print verdict tables; returns the process exit code
-    (1 when anything REGRESSED)."""
+                 append: bool = True, label: str = "",
+                 gates: bool = True, gate_slack: float = 0.0) -> int:
+    """Check every bench file against the history plus the history-free
+    :data:`RATIO_GATES`, optionally append the runs, print verdict
+    tables; returns the process exit code (1 when anything REGRESSED)."""
     history = load_history(history_path)
     regressed = []
+    gated = []
     for path in bench_paths:
         with open(path) as f:
             doc = json.load(f)
@@ -219,6 +290,10 @@ def run_sentinel(bench_paths: List[str], history_path: str = HISTORY,
                        tol=tol, metric_tol=metric_tol)
         print_table(path, rows)
         regressed += [r for r in rows if r["verdict"] == REGRESSED]
+        if gates:
+            grows = gate_rows(path, metrics, slack=gate_slack)
+            print_gates(path, grows)
+            gated += [r for r in grows if r["verdict"] == REGRESSED]
         if append:
             append_history(history_path, path, metrics, label=label)
     if regressed:
@@ -228,6 +303,13 @@ def run_sentinel(bench_paths: List[str], history_path: str = HISTORY,
             print(f"  {r['metric']}: {r['current']:.3f} vs baseline "
                   f"{r['baseline']:.3f} (x{r['ratio']:.2f} > "
                   f"1+{r['tolerance']:.2f})")
+    if gated:
+        print(f"[regress] FAIL: {len(gated)} ratio gate(s) broken:")
+        for r in gated:
+            print(f"  {r['gate']}: {r['numerator']:.3f} / "
+                  f"{r['denominator']:.3f} = x{r['ratio']:.2f} > "
+                  f"{r['limit']:.2f}")
+    if regressed or gated:
         return 1
     print(f"[regress] ok: no regressions past tolerance "
           f"({len(history)} historical runs consulted)")
@@ -250,6 +332,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--metric-tol", action="append", default=[],
                     metavar="NAME=FRAC",
                     help="per-metric tolerance override (repeatable)")
+    ap.add_argument("--no-gates", action="store_true",
+                    help="skip the history-free device-vs-host ratio "
+                         "ceilings")
+    ap.add_argument("--gate-slack", type=float, default=0.0,
+                    help="relative slack on every ratio-gate ceiling "
+                         "(0.1 = allow 10%% over)")
     ap.add_argument("--no-append", action="store_true",
                     help="check only — do not record this run")
     ap.add_argument("--no-check", action="store_true",
@@ -284,7 +372,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     return run_sentinel(benches, history_path=args.history,
                         baseline_n=args.baseline_n, tol=args.tol,
                         metric_tol=mtol, append=not args.no_append,
-                        label=args.label)
+                        label=args.label, gates=not args.no_gates,
+                        gate_slack=args.gate_slack)
 
 
 if __name__ == "__main__":

@@ -6,8 +6,19 @@ partitioned by tree id (size-balanced bin packing over per-tree entry
 counts, :mod:`repro.cluster.partition`), one ``QueryEngine``-style SoA
 arena + tile pyramid is uploaded **per shard** (stacked and sharded over
 the mesh's ``data`` axis), and the vertex→tree pointer arrays are
-replicated on every device.  ``query_batch`` runs as two
-``shard_map``-ed jits mirroring the single-device two-phase structure:
+replicated on every device.  ``query_batch`` runs as **one**
+``shard_map``-ed collective program (the fused path, mirroring the
+single-device :mod:`repro.kernels.range_query.fused` megakernel): every
+device routes the replicated batch, masks it to the queries whose trees
+live on its shards, runs the quantized-plane fused prune+scan per local
+shard, and the per-query hits ``psum``-OR-reduce across the mesh in the
+same trace that ``pmax``-es the candidate max — no prune→host→scan
+round trip, one dispatch per batch per capacity bucket (the capacity is
+a monotone high-water mark: an overflowing batch ratchets and re-runs
+once; steady state runs exactly once).  The pre-fusion two-phase
+structure (separate route+prune and scan ``shard_map`` jits with a host
+bucket step between them) is retained as ``query_batch_two_phase`` —
+the reference the fused program is bit-compared against:
 
 1. **route + prune** — every device evaluates the fused pointer lookup
    for the whole (replicated) batch, masks it down to the queries whose
@@ -45,6 +56,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map
 from ..core.engine import (
+    DevicePadder,
     PointerSide,
     _bucket,
     _unsupported_msg,
@@ -56,6 +68,14 @@ from ..distributed.sharding import index_shard_specs
 from ..kernels.range_query.descent import (
     descent_scan_pallas,
     prune_tiles_pallas,
+)
+from ..kernels.range_query.fused import (
+    fused_serve_pallas,
+    fused_serve_xla,
+    make_quant_grid,
+    quantize_coarse,
+    quantize_fine,
+    quantize_rects,
 )
 from ..kernels.range_query.kernel import TB
 from ..launch.mesh import make_shard_mesh
@@ -128,6 +148,22 @@ class ShardedEngine:
         self._entries = put(entries, specs["entries"])
         self._fine = put(fine, specs["fine"])
         self._coarse = put(coarse, specs["coarse"])
+        # quantized MBR planes for the fused collective program: one
+        # grid over the whole forest extent (soundness only needs the
+        # rounding to be outward; sharing the grid keeps the replicated
+        # rect quantization identical on every device)
+        ent = index.forest.entries
+        self._grid = make_quant_grid(
+            np.concatenate([ent[:, : self.dim].min(0),
+                            ent[:, self.dim:].max(0)]).astype(np.float64)
+            if len(ent) else None,
+            self.dim)
+        self._qfine = put(
+            jax.vmap(lambda p: quantize_fine(self._grid, p, self.dim))(
+                jnp.asarray(fine)), specs["fine"])
+        self._qcoarse = put(
+            jax.vmap(lambda p: quantize_coarse(self._grid, p, self.dim))(
+                jnp.asarray(coarse)), specs["coarse"])
         self._tree_shard = put(
             jnp.asarray(self.partition.tree_shard), specs["tree_shard"])
         self._tree_qs = put(
@@ -140,6 +176,7 @@ class ShardedEngine:
             "uploads": 1, "batches": 0, "queries": 0,
             "adopted": int(getattr(index.forest, "device", None) is not None),
             "tiles_scanned": 0, "tiles_grid": 0, "tiles_full_scan": 0,
+            "fused_reruns": 0,
         }
         self.shard_queries = np.zeros(n_shards, dtype=np.int64)
         # per-shard hit counters ride next to the query routing counts:
@@ -159,6 +196,14 @@ class ShardedEngine:
         # window's candidate union crosses the warmed power-of-two
         # bucket; after that the mark covers it for good
         self._kb_hwm = 1
+        self._fused_impl = ("pallas" if jax.default_backend() == "tpu"
+                            else "xla")
+        self._padder = DevicePadder(self.dim)
+        # fused collective programs, memoised per static capacity —
+        # shard_map cannot take static kwargs, so each ratcheted kcap
+        # gets its own program object (bounded: the hwm is monotone
+        # pow2, so at most log2(n_tiles) of these ever exist)
+        self._fused_progs: Dict[int, object] = {}
         self._prepare = jax.jit(self._make_prepare())
         self._scan = jax.jit(self._make_scan())
 
@@ -228,6 +273,64 @@ class ShardedEngine:
             out_specs=P(),
         )
 
+    def _fused_prog(self, kcap: int):
+        """The single collective serving program at one static candidate
+        capacity: replicated route + rect quantization, per-local-shard
+        fused prune+compact+scan, and the cross-shard ``psum`` OR-reduce
+        and ``pmax`` capacity check — all in ONE ``shard_map``-ed jit,
+        collapsing the old two-dispatch (+ host bucket sync) round."""
+        prog = self._fused_progs.get(kcap)
+        if prog is not None:
+            return prog
+        side, dim = self._side, self.dim
+        interpret = self._interpret
+        impl = self._fused_impl
+        L, nt = self._shards_per_dev, self.n_tiles
+        tshard, tqs, tqe = self._tree_shard, self._tree_qs, self._tree_qe
+        grid = self._grid
+
+        def fused(qfine, qcoarse, entries, us, rsoa):
+            # qfine/qcoarse/entries: (L, ...) local shard stacks;
+            # us/rsoa replicated.  Everything below the routing runs
+            # against local shards only.
+            tid, valid, forced = side.route(us, rsoa)
+            t = jnp.maximum(tid, 0)
+            own = jnp.where(valid, tshard[t], -1)
+            r16, r32 = quantize_rects(grid, rsoa, dim)
+            first = jax.lax.axis_index(_AXIS) * L
+            dummy_ids = jnp.zeros((1, entries.shape[-1]), jnp.int32)
+            hit = jnp.zeros((rsoa.shape[1],), jnp.int32)
+            cnts = []
+            for l in range(L):
+                mine = own == first + l
+                qs = jnp.where(mine, tqs[t], 0)
+                qe = jnp.where(mine, tqe[t], 0)
+                if impl == "pallas":
+                    out, cnt = fused_serve_pallas(
+                        qfine[l], qcoarse[l], entries[l], dummy_ids,
+                        r16, r32, rsoa, qs, qe, mode="reach", kcap=kcap,
+                        nt=nt, dim=dim, interpret=interpret)
+                else:
+                    out, cnt = fused_serve_xla(
+                        qfine[l], qcoarse[l], entries[l], dummy_ids,
+                        r16, r32, rsoa, qs, qe, mode="reach", kcap=kcap,
+                        nt=nt, dim=dim)
+                hit = hit | out
+                cnts.append(cnt)
+            cnt = jnp.stack(cnts)
+            mx = jax.lax.pmax(cnt.max(), _AXIS)
+            # OR-reduce across shards: hits are 0/1 and each query's
+            # tree lives on exactly one shard, so a sum is an OR
+            return forced, own, jax.lax.psum(hit, _AXIS), cnt, mx
+
+        prog = jax.jit(shard_map(
+            fused, self.mesh,
+            in_specs=(P(_AXIS), P(_AXIS), P(_AXIS), P(), P()),
+            out_specs=(P(), P(), P(), P(_AXIS), P()),
+        ))
+        self._fused_progs[kcap] = prog
+        return prog
+
     # ------------------------------------------------------------------
     # public surface
     # ------------------------------------------------------------------
@@ -236,7 +339,11 @@ class ShardedEngine:
     def n_compiles(self) -> int:
         """Distinct (bucketed) shapes traced so far — flat in steady
         state; tests assert it via this introspection hook."""
-        return int(self._prepare._cache_size() + self._scan._cache_size())
+        return int(
+            self._prepare._cache_size() + self._scan._cache_size()
+            + self._padder._cache_size()
+            + sum(p._cache_size() for p in self._fused_progs.values())
+        )
 
     def shard_of(self, us: np.ndarray) -> np.ndarray:
         """Host-side vertex -> owning shard (-1: excluded / no tree) —
@@ -247,50 +354,26 @@ class ShardedEngine:
         out[ok] = self.partition.tree_shard[t[ok]]
         return out
 
-    def query_batch(self, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
-        """Batched RangeReach, bit-identical to the host path."""
-        us = np.asarray(us, dtype=np.int64)
-        B = len(us)
-        if B == 0:
-            return np.zeros(0, dtype=bool)
-        fault_point("cluster.query_batch", n=B)
-        t0 = time.perf_counter()
-        with span("cluster.query_batch", cat="cluster", n=B):
-            with span("cluster.pad_batch", cat="cluster"):
-                Bb, us_p, rsoa = pad_batch(us, rects, self.dim)
-                rsoa_dev = jnp.asarray(rsoa)
-
-            with span("cluster.route_prune", cat="cluster"):
-                forced, own, qs, qe, cand, cnt, mx = self._prepare(
-                    self._fine, self._coarse, jnp.asarray(us_p), rsoa_dev
-                )
-                # int(mx) blocks on the sharded prune + pmax round
-                self._kb_hwm = max(
-                    self._kb_hwm,
-                    min(_bucket(max(int(mx), 1), 1), self.n_tiles))
-            kb = self._kb_hwm
-            with span("cluster.scan", cat="cluster"):
-                hit = self._scan(
-                    self._entries, cand[:, :, :kb], qs, qe, rsoa_dev
-                )
-
-            S = self.n_shards
-            self.stats["batches"] += 1
-            self.stats["queries"] += B
-            self.stats["tiles_scanned"] += int(np.asarray(cnt).sum())
-            self.stats["tiles_grid"] += (Bb // TB) * kb * S
-            self.stats["tiles_full_scan"] += (Bb // TB) * self.n_tiles * S
-            with span("cluster.sync", cat="cluster"):
-                # routing stats over the *real* lanes only (padding
-                # reuses vertex 0, which routes to a real shard but
-                # answers nothing)
-                own_b = np.asarray(own)[:B]
-                out = (np.asarray(hit) > 0) | np.asarray(forced)
-            routed = own_b >= 0
-            self.shard_queries += np.bincount(
-                own_b[routed], minlength=S).astype(np.int64)
-            self.shard_hits += np.bincount(
-                own_b[routed & out[:B]], minlength=S).astype(np.int64)
+    def _finish_batch(self, B, Bb, kb, forced, own, hit, cnt, t0):
+        """Shared batch epilogue (fused + two-phase): stats, sync,
+        per-shard routing/hit counters, gated registry recording."""
+        S = self.n_shards
+        self.stats["batches"] += 1
+        self.stats["queries"] += B
+        self.stats["tiles_scanned"] += int(np.asarray(cnt).sum())
+        self.stats["tiles_grid"] += (Bb // TB) * kb * S
+        self.stats["tiles_full_scan"] += (Bb // TB) * self.n_tiles * S
+        with span("cluster.sync", cat="cluster"):
+            # routing stats over the *real* lanes only (padding
+            # reuses vertex 0, which routes to a real shard but
+            # answers nothing)
+            own_b = np.asarray(own)[:B]
+            out = (np.asarray(hit) > 0) | np.asarray(forced)
+        routed = own_b >= 0
+        self.shard_queries += np.bincount(
+            own_b[routed], minlength=S).astype(np.int64)
+        self.shard_hits += np.bincount(
+            own_b[routed & out[:B]], minlength=S).astype(np.int64)
         if _TRACER.enabled:
             dt_us = (time.perf_counter() - t0) * 1e6
             REGISTRY.histogram("cluster.batch_us").record(dt_us)
@@ -302,6 +385,64 @@ class ShardedEngine:
                 REGISTRY.counter(f"cluster.shard{s}.hits").inc(
                     int((routed & out[:B] & (own_b == s)).sum()))
         return out[:B]
+
+    def query_batch(self, us: np.ndarray, rects: np.ndarray) -> np.ndarray:
+        """Batched RangeReach, bit-identical to the host path — one
+        fused collective dispatch per batch (per capacity bucket)."""
+        us = np.asarray(us, dtype=np.int64)
+        B = len(us)
+        if B == 0:
+            return np.zeros(0, dtype=bool)
+        fault_point("cluster.query_batch", n=B)
+        t0 = time.perf_counter()
+        with span("cluster.query_batch", cat="cluster", n=B):
+            with span("cluster.pad_batch", cat="cluster"):
+                Bb, us_dev, rsoa_dev = self._padder.pad(us, rects)
+            with span("cluster.fused", cat="cluster", batch=B):
+                while True:
+                    kcap = min(self._kb_hwm, self.n_tiles)
+                    forced, own, hit, cnt, mx = self._fused_prog(kcap)(
+                        self._qfine, self._qcoarse, self._entries,
+                        us_dev, rsoa_dev)
+                    # int(mx) blocks on the whole collective launch
+                    mxi = int(mx)
+                    if mxi <= kcap or kcap >= self.n_tiles:
+                        break
+                    self._kb_hwm = min(_bucket(mxi, 1), self.n_tiles)
+                    self.stats["fused_reruns"] += 1
+            return self._finish_batch(B, Bb, kcap, forced, own, hit,
+                                      cnt, t0)
+
+    def query_batch_two_phase(self, us: np.ndarray,
+                              rects: np.ndarray) -> np.ndarray:
+        """The retained two-dispatch reference path (sharded prune →
+        host capacity bucket → sharded scan + psum) — the fused
+        collective program's oracle."""
+        us = np.asarray(us, dtype=np.int64)
+        B = len(us)
+        if B == 0:
+            return np.zeros(0, dtype=bool)
+        fault_point("cluster.query_batch", n=B)
+        t0 = time.perf_counter()
+        with span("cluster.query_batch", cat="cluster", n=B):
+            with span("cluster.pad_batch", cat="cluster"):
+                Bb, us_dev, rsoa_dev = self._padder.pad(us, rects)
+
+            with span("cluster.route_prune", cat="cluster"):
+                forced, own, qs, qe, cand, cnt, mx = self._prepare(
+                    self._fine, self._coarse, us_dev, rsoa_dev
+                )
+                # int(mx) blocks on the sharded prune + pmax round
+                self._kb_hwm = max(
+                    self._kb_hwm,
+                    min(_bucket(max(int(mx), 1), 1), self.n_tiles))
+            kb = self._kb_hwm
+            with span("cluster.scan", cat="cluster"):
+                hit = self._scan(
+                    self._entries, cand[:, :, :kb], qs, qe, rsoa_dev
+                )
+            return self._finish_batch(B, Bb, kb, forced, own, hit,
+                                      cnt, t0)
 
     def query(self, u: int, rect) -> bool:
         return bool(self.query_batch(np.array([u]), np.array([rect]))[0])

@@ -7,6 +7,28 @@ scanned) forfeits the reduction.  :class:`QueryEngine` uploads a built
 :class:`~repro.core.two_d_reach.TwoDReachIndex` to the accelerator
 **once** and answers ``query_batch`` entirely on device:
 
+The default serving path is the **fused megakernel**
+(:mod:`repro.kernels.range_query.fused`): ONE dispatch per batch that
+routes vertex→tree in-trace, prunes against *quantized* tile-MBR planes
+(int16 fine / int32 coarse, outward-rounded so the candidate set
+provably contains the f32 truth), compacts the surviving tiles into an
+in-kernel worklist, and scans them with the exact f32 leaf predicate —
+the boolean / count / collect epilogues share the trace via a mode
+flag, so ``query_batch`` / ``count_batch`` / ``collect_batch`` all ride
+one kernel with no prune→host→scan round trip.  Batches are padded to
+power-of-two buckets by an on-device :class:`DevicePadder` (donated
+per-bucket buffers, no host re-stack), and the candidate capacity K is
+a monotone high-water mark: an overflowing batch re-runs once at the
+ratcheted capacity, so steady-state serving recompiles nothing —
+asserted by tests via jit cache-size introspection.
+
+The pre-fusion **two-phase** path is retained in full — reachable via
+``path="two_phase"`` or the ``*_two_phase`` methods — as the oracle the
+fused path is bit-compared against, as the
+:class:`~repro.resilience.engine.ResilientEngine` degradation target,
+and as the host of the polygon class (whose half-plane scan is not
+fused):
+
 1. **fused pointer lookup** — vertex→tree inside the jit: a plain
    gather for the base/comp variants, or the Pointer variant's
    bit-vector + rank structure evaluated with an in-jit SWAR popcount;
@@ -20,15 +42,10 @@ scanned) forfeits the reduction.  :class:`QueryEngine` uploads a built
    kernel visits only the compacted candidate tiles, so work scales
    with the query's R-tree footprint instead of the arena size.
 
-Batches are padded to power-of-two **buckets** (and the candidate
-capacity K likewise, with a monotone high-water mark so a smaller batch
-never traces a new K shape), so the jit cache is keyed on a handful of
-shapes:
-steady-state serving recompiles nothing and re-transposes nothing —
-asserted by tests via jit cache-size introspection.  Exactness never
-rests on the pruning: the scan kernel re-masks by arena slice and exact
-box test, so the engine is bit-identical to the ``query_host`` oracle
-(scanning an extra tile is an idempotent OR with no new hits).
+Exactness never rests on the pruning (quantized or f32): the scan
+re-masks by arena slice and exact box test, so both paths are
+bit-identical to the ``query_host`` oracle (scanning an extra tile is
+an idempotent OR with no new hits).
 
 The upload path is factored into two reusable pieces so the sharded
 cluster engine (:mod:`repro.cluster`) serves the same structures:
@@ -60,6 +77,15 @@ from ..kernels.range_query.descent import (
     build_tile_pyramid,
     descent_scan_pallas,
     prune_tiles_pallas,
+)
+from ..kernels.range_query.fused import (
+    compact_ascending,
+    fused_serve_pallas,
+    fused_serve_xla,
+    make_quant_grid,
+    quantize_coarse,
+    quantize_fine,
+    quantize_rects,
 )
 from ..kernels.range_query.kernel import TB, TP
 from ..kernels.range_query.ops import forest_soa
@@ -222,17 +248,11 @@ def compact_candidates(mask: jax.Array, nt: int
 
     Returns ``(cand (NB, nt) int32, cnt (NB,) int32)``: active tiles
     first (ascending), then the last active tile repeated so consecutive
-    identical block indices elide the scan kernel's DMA.
+    identical block indices elide the scan kernel's DMA.  (Delegates to
+    the fused module's :func:`compact_ascending` — one definition shared
+    by the two-phase path, the fused XLA path, and the cluster engine.)
     """
-    active = mask[:, :nt] > 0
-    cnt = active.sum(axis=1).astype(jnp.int32)
-    j = jnp.arange(nt, dtype=jnp.int32)
-    order = jnp.argsort(
-        jnp.where(active, j[None, :], nt + j[None, :]), axis=1
-    ).astype(jnp.int32)
-    last = order[jnp.arange(order.shape[0]), jnp.maximum(cnt - 1, 0)]
-    cand = jnp.where(j[None, :] < cnt[:, None], order, last[:, None])
-    return cand, cnt
+    return compact_ascending(mask, nt)
 
 
 def pad_batch(us: np.ndarray, rects: np.ndarray, dim: int
@@ -256,6 +276,76 @@ def pad_batch(us: np.ndarray, rects: np.ndarray, dim: int
     return Bb, us_p, rsoa
 
 
+class DevicePadder:
+    """Device-resident batch padding — kills the host ``pad_batch``
+    re-stack on the serving hot path.
+
+    Keeps, per power-of-two bucket, a pinned host *staging* pair plus a
+    donated device buffer pair.  A batch copies only its true-B prefix
+    into the staging arrays (no allocation, no tail memset — O(B) host
+    work instead of the old full-bucket re-stack), uploads the
+    bucket-shaped staging, and the fill jit masks the stale tail inert
+    on-device with an iota-vs-live-count compare (``us=0``, rect
+    min=+inf / max=-inf), so a larger previous batch can never leak
+    rects into a smaller one's padding.  The live count enters the
+    trace as a *dynamic* scalar and every array input is bucket-shaped,
+    so the fill trace is keyed on the bucket alone — any unseen true B
+    inside a warmed bucket is compile-free.  The jit *donates* the
+    bucket's device buffers and the outputs are stored back as the next
+    batch's donation inputs (serving consumes a batch's rects strictly
+    before the same bucket pads again, so the aliasing is safe), which
+    lets XLA write each fill into the existing allocation.  The cache
+    size feeds the engine's ``n_compiles`` introspection.
+    """
+
+    def __init__(self, dim: int):
+        self.dim = dim
+        self._bufs: Dict[int, Tuple[jax.Array, jax.Array]] = {}
+        self._stage: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+
+        def fill(us_buf, r_buf, us_stage, r_stage, b):
+            Bb = us_buf.shape[0]
+            live = jnp.arange(Bb, dtype=jnp.int32) < b
+            us_o = jnp.where(live, us_stage, 0)
+            inert = jnp.concatenate([
+                jnp.full((dim, Bb), jnp.inf, jnp.float32),
+                jnp.full((dim, Bb), -jnp.inf, jnp.float32)])
+            r_o = jnp.where(live[None, :], r_stage, inert)
+            return us_o, r_o
+
+        self._fill = jax.jit(fill, donate_argnums=(0, 1))
+
+    def _cache_size(self) -> int:
+        return self._fill._cache_size()
+
+    def pad(self, us: np.ndarray, rects: np.ndarray
+            ) -> Tuple[int, jax.Array, jax.Array]:
+        """Pad to the pow2 bucket on-device.  Returns ``(Bb, us_dev
+        (Bb,) int32, rsoa_dev (2*dim, Bb) float32)`` — same contents as
+        ``pad_batch`` would produce, already device-resident."""
+        B = len(us)
+        Bb = _bucket(B, TB)
+        stage = self._stage.get(Bb)
+        if stage is None:
+            stage = self._stage[Bb] = (
+                np.zeros(Bb, np.int32),
+                np.zeros((2 * self.dim, Bb), np.float32))
+        us_s, r_s = stage
+        us_s[:B] = us
+        r_s[:, :B] = np.asarray(
+            rects, dtype=np.float32).reshape(B, 2 * self.dim).T
+        bufs = self._bufs.get(Bb)
+        if bufs is None:
+            rs0 = np.empty((2 * self.dim, Bb), np.float32)
+            rs0[: self.dim] = np.inf
+            rs0[self.dim:] = -np.inf
+            bufs = (jnp.zeros(Bb, jnp.int32), jnp.asarray(rs0))
+        us_b, r_b = self._fill(bufs[0], bufs[1], jnp.asarray(us_s),
+                               jnp.asarray(r_s), np.int32(B))
+        self._bufs[Bb] = (us_b, r_b)
+        return Bb, us_b, r_b
+
+
 # --------------------------------------------------------------------------
 # Single-device engine
 # --------------------------------------------------------------------------
@@ -268,19 +358,38 @@ class QueryEngine:
     index:     any 2DReach variant (``base`` / ``comp`` / ``pointer``).
     interpret: run the Pallas kernels in interpret mode; ``None`` picks
                real kernels on TPU and interpret elsewhere.
+    path:      ``"fused"`` (default) serves reach/count/collect through
+               the single-launch fused kernel; ``"two_phase"`` forces
+               the retained prune→compact→scan reference path.
+    fused_impl: ``"pallas"`` (the megakernel) or ``"xla"`` (the fused
+               XLA program, bit-identical); ``None`` picks the
+               megakernel on TPU and the XLA program elsewhere (one
+               compiled XLA dispatch beats an interpreted kernel on
+               CPU).
     """
 
     def __init__(self, index: TwoDReachIndex,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 path: str = "fused",
+                 fused_impl: Optional[str] = None):
         if not isinstance(index, TwoDReachIndex):
             raise TypeError(
                 f"QueryEngine serves TwoDReachIndex, got {type(index).__name__}"
             )
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
+        if path not in ("fused", "two_phase"):
+            raise ValueError(f"unknown engine path {path!r}")
+        if fused_impl is None:
+            fused_impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+        if fused_impl not in ("pallas", "xla"):
+            raise ValueError(f"unknown fused impl {fused_impl!r}")
         self._interpret = bool(interpret)
+        self.path = path
+        self._fused_impl = fused_impl
         self.variant = index.variant
         self.dim = index.forest.dim
+        self._index = index        # host mirror (KNN exact top-up)
 
         # ---- one-time upload (or zero-copy adoption) -------------------
         self._side = PointerSide(index)
@@ -305,10 +414,19 @@ class QueryEngine:
             if len(ent) else None
         )
 
+        # quantized MBR planes for the fused path: int16 fine / int32
+        # coarse codes over the arena extent, rounded outward so the
+        # quantized candidate set provably contains the f32 truth
+        self._grid = make_quant_grid(self._extent_host, self.dim)
+        self._qfine = quantize_fine(self._grid, self._arena.fine, self.dim)
+        self._qcoarse = quantize_coarse(
+            self._grid, self._arena.coarse, self.dim)
+
         self.stats: Dict[str, float] = {
             "uploads": 1, "batches": 0, "queries": 0,
             "adopted": int(getattr(index.forest, "device", None) is not None),
             "tiles_scanned": 0, "tiles_grid": 0, "tiles_full_scan": 0,
+            "fused_reruns": 0,
         }
         # candidate-capacity high-water mark: K only ratchets up, so a
         # smaller batch never traces a new K shape and lifetime scan
@@ -316,6 +434,19 @@ class QueryEngine:
         # K columns repeat the last candidate tile, whose DMA the
         # pipeline elides
         self._kb_hwm = 1
+        self._padder = DevicePadder(self.dim)
+        route = self._make_route()
+        serve = self._make_routed_serve()
+
+        def fused(us, rects_soa, *, mode, kcap, kc=None):
+            qs, qe, pts, exc = route(us)
+            return serve(rects_soa, qs, qe, pts, exc, mode=mode,
+                         kcap=kcap, kc=kc)
+
+        self._fused = jax.jit(fused, static_argnames=("mode", "kcap", "kc"))
+        self._route = jax.jit(route)
+        self._fused_routed = jax.jit(
+            serve, static_argnames=("mode", "kcap", "kc"))
         self._prepare = jax.jit(self._make_prepare())
         self._scan = jax.jit(self._make_scan())
         self._count_scan = jax.jit(self._make_count_scan())
@@ -327,6 +458,64 @@ class QueryEngine:
     # ------------------------------------------------------------------
     # jit closures (per-engine, so cache introspection is local)
     # ------------------------------------------------------------------
+
+    def _make_route(self):
+        """Vertex -> (arena slice, point, excluded) routing: the
+        rect-independent half of the fused trace, also jitted alone so
+        the KNN radius-doubling driver hoists it out of its loop."""
+        side = self._side
+        arena = self._arena
+
+        def route(us):
+            tid = side.lookup(us)
+            exc = side._excluded[us]
+            valid = (tid >= 0) & ~exc
+            t = jnp.maximum(tid, 0)
+            qs = jnp.where(valid, arena.entry_off[t], 0)
+            qe = jnp.where(valid, arena.entry_off[t + 1], 0)
+            return qs, qe, side._coords[us], exc
+
+        return route
+
+    def _make_routed_serve(self):
+        """The fused serve body with routing state as explicit inputs:
+        quantize rects outward, then one fused prune+compact+scan launch
+        (megakernel or the bit-identical XLA program).  Returns
+        ``(forced, out, cnt, cnt.max())`` — ``mx > kcap`` means the scan
+        truncated and the driver must ratchet and re-run."""
+        dim = self.dim
+        nt = self.n_tiles
+        interpret = self._interpret
+        impl = self._fused_impl
+        arena = self._arena
+        grid = self._grid
+        qf, qc = self._qfine, self._qcoarse
+        ids_row = self._ids_row
+
+        def serve(rects_soa, qs, qe, pts, exc, *, mode, kcap, kc=None):
+            inr = jnp.ones(rects_soa.shape[1], dtype=bool)
+            for a in range(dim):
+                inr = inr & (pts[:, a] >= rects_soa[a])
+                inr = inr & (pts[:, a] <= rects_soa[dim + a])
+            forced = exc & inr               # Alg. 2 spatial-sink case
+            r16, r32 = quantize_rects(grid, rects_soa, dim)
+            if impl == "pallas":
+                out, cnt = fused_serve_pallas(
+                    qf, qc, arena.entries, ids_row, r16, r32, rects_soa,
+                    qs, qe, mode=mode, kcap=kcap, nt=nt, dim=dim,
+                    interpret=interpret)
+            else:
+                out, cnt = fused_serve_xla(
+                    qf, qc, arena.entries, ids_row, r16, r32, rects_soa,
+                    qs, qe, mode=mode, kcap=kcap, nt=nt, dim=dim)
+            if mode == "collect" and kc is not None:
+                # collect epilogue inside the same trace: top-kc ids +
+                # exact totals, so the host never receives the full
+                # (Bb, kcap*TP) id matrix and collect stays one dispatch
+                out = _collect_post(out, kc=kc)
+            return forced, out, cnt, cnt.max()
+
+        return serve
 
     def _make_prepare(self):
         nt = self.n_tiles
@@ -412,7 +601,10 @@ class QueryEngine:
         """Distinct (bucketed) shapes traced so far — flat in steady
         state; tests assert it via this introspection hook."""
         return int(
-            self._prepare._cache_size() + self._scan._cache_size()
+            self._fused._cache_size() + self._route._cache_size()
+            + self._fused_routed._cache_size()
+            + self._padder._cache_size()
+            + self._prepare._cache_size() + self._scan._cache_size()
             + self._count_scan._cache_size()
             + self._collect_scan._cache_size()
             + self._collect_post._cache_size()
@@ -428,12 +620,9 @@ class QueryEngine:
         B = len(us)
         fault_point("engine.route_prune", n=B)
         with span("engine.pad_batch", cat="engine"):
-            Bb, us_p, rsoa = pad_batch(us, rects, self.dim)
-            rsoa_dev = jnp.asarray(rsoa)
+            Bb, us_dev, rsoa_dev = self._padder.pad(us, rects)
         with span("engine.route_prune", cat="engine", batch=B):
-            forced, qs, qe, cand, cnt, mx = self._prepare(
-                jnp.asarray(us_p), rsoa_dev
-            )
+            forced, qs, qe, cand, cnt, mx = self._prepare(us_dev, rsoa_dev)
             # int(mx) blocks on the device prune, so the span really
             # covers lookup + prune + candidate compaction
             self._kb_hwm = max(
@@ -449,6 +638,38 @@ class QueryEngine:
         self.stats["tiles_grid"] += (Bb // TB) * kb
         self.stats["tiles_full_scan"] += (Bb // TB) * self.n_tiles
         return Bb, rsoa_dev, forced, qs, qe, cand[:, :kb]
+
+    def _fused_serve(self, us: np.ndarray, rects: np.ndarray, mode: str,
+                     kc=None):
+        """One-dispatch serve for reach/count/collect: device pad, then
+        the fused route→prune→scan launch at the current capacity
+        high-water mark.  ``mx > kcap`` (capacity overflow — the scan
+        truncated) ratchets the monotone hwm and re-runs; warmup-only,
+        steady state runs exactly once and recompiles nothing.  Returns
+        ``(Bb, forced, out)`` — for collect with static ``kc``, ``out``
+        is the in-trace ``(top, counts)`` epilogue pair."""
+        B = len(us)
+        fault_point("engine.route_prune", n=B)
+        with span("engine.pad_batch", cat="engine"):
+            Bb, us_dev, rsoa_dev = self._padder.pad(us, rects)
+        with span("engine.fused", cat="engine", batch=B, mode=mode):
+            while True:
+                kcap = min(self._kb_hwm, self.n_tiles)
+                forced, out, cnt, mx = self._fused(
+                    us_dev, rsoa_dev, mode=mode, kcap=kcap, kc=kc)
+                # int(mx) blocks on the device, so the span covers the
+                # whole fused launch
+                mxi = int(mx)
+                if mxi <= kcap or kcap >= self.n_tiles:
+                    break
+                self._kb_hwm = min(_bucket(mxi, 1), self.n_tiles)
+                self.stats["fused_reruns"] += 1
+        self.stats["batches"] += 1
+        self.stats["queries"] += B
+        self.stats["tiles_scanned"] += int(np.asarray(cnt).sum())
+        self.stats["tiles_grid"] += (Bb // TB) * kcap
+        self.stats["tiles_full_scan"] += (Bb // TB) * self.n_tiles
+        return Bb, forced, out
 
     def _obs_batch(self, kind: str, B: int, t0: float) -> None:
         """Gated per-batch registry recording (enabled-only: one
@@ -471,10 +692,13 @@ class QueryEngine:
         fault_point("engine.query_batch", n=B)
         t0 = time.perf_counter()
         with span("engine.query_batch", cat="engine", n=B):
-            _, rsoa_dev, forced, qs, qe, cand_k = self._route_prune(
-                us, rects)
-            with span("engine.scan", cat="engine"):
-                hit = self._scan(cand_k, rsoa_dev, qs, qe)
+            if self.path == "fused":
+                _, forced, hit = self._fused_serve(us, rects, "reach")
+            else:
+                _, rsoa_dev, forced, qs, qe, cand_k = self._route_prune(
+                    us, rects)
+                with span("engine.scan", cat="engine"):
+                    hit = self._scan(cand_k, rsoa_dev, qs, qe)
             with span("engine.sync", cat="engine"):
                 out = np.asarray(hit).astype(bool) | np.asarray(forced)
         self._obs_batch("reach", B, t0)
@@ -482,6 +706,28 @@ class QueryEngine:
 
     def query(self, u: int, rect) -> bool:
         return bool(self.query_batch(np.array([u]), np.array([rect]))[0])
+
+    def _with_path(self, path: str, fn, *args):
+        prev, self.path = self.path, path
+        try:
+            return fn(*args)
+        finally:
+            self.path = prev
+
+    def query_batch_two_phase(self, us, rects) -> np.ndarray:
+        """``query_batch`` through the retained two-phase reference path
+        (prune → host compaction → descent scan) — the fused path's
+        oracle and the ResilientEngine degradation target."""
+        return self._with_path("two_phase", self.query_batch, us, rects)
+
+    def count_batch_two_phase(self, us, rects) -> np.ndarray:
+        """``count_batch`` through the two-phase reference path."""
+        return self._with_path("two_phase", self.count_batch, us, rects)
+
+    def collect_batch_two_phase(self, us, rects, k: int):
+        """``collect_batch`` through the two-phase reference path."""
+        return self._with_path("two_phase", self.collect_batch,
+                               us, rects, k)
 
     # -- analytics classes (see repro.queries) --------------------------
 
@@ -495,10 +741,13 @@ class QueryEngine:
             return np.zeros(0, dtype=np.int64)
         t0 = time.perf_counter()
         with span("engine.count_batch", cat="engine", n=B):
-            _, rsoa_dev, forced, qs, qe, cand_k = self._route_prune(
-                us, rects)
-            with span("engine.scan", cat="engine"):
-                counts = self._count_scan(cand_k, rsoa_dev, qs, qe)
+            if self.path == "fused":
+                _, forced, counts = self._fused_serve(us, rects, "count")
+            else:
+                _, rsoa_dev, forced, qs, qe, cand_k = self._route_prune(
+                    us, rects)
+                with span("engine.scan", cat="engine"):
+                    counts = self._count_scan(cand_k, rsoa_dev, qs, qe)
             # forced: an excluded (spatial-sink) query vertex reaches
             # exactly itself — its tree probe counted nothing (empty
             # slice)
@@ -527,11 +776,16 @@ class QueryEngine:
             )
         t0 = time.perf_counter()
         with span("engine.collect_batch", cat="engine", n=B):
-            _, rsoa_dev, forced, qs, qe, cand_k = self._route_prune(
-                us, rects)
-            with span("engine.scan", cat="engine"):
-                mat = self._collect_scan(cand_k, rsoa_dev, qs, qe)
-                top, cnt = self._collect_post(mat, kc=_bucket(k, 1))
+            if self.path == "fused":
+                _, forced, out = self._fused_serve(
+                    us, rects, "collect", kc=_bucket(k, 1))
+                top, cnt = out
+            else:
+                _, rsoa_dev, forced, qs, qe, cand_k = self._route_prune(
+                    us, rects)
+                with span("engine.scan", cat="engine"):
+                    mat = self._collect_scan(cand_k, rsoa_dev, qs, qe)
+                    top, cnt = self._collect_post(mat, kc=_bucket(k, 1))
         self._obs_batch("collect", B, t0)
         top = np.asarray(top)[:B]
         counts = np.asarray(cnt).astype(np.int64)[:B]

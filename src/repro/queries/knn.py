@@ -18,6 +18,16 @@ vertex id)`` ascending, distances float64 over the float32 coords):
   superset provably contains the true top-k; the final NumPy selection
   makes the answer bit-identical to the host descent.
 
+  On a fused-path engine the loop **hoists the routing state**: the
+  vertex→tree lookup (``qs``/``qe``/coords/excluded) is computed once
+  on the padded batch and every doubling iteration re-enters only the
+  fused prune+scan trace with the new rects (one dispatch per round
+  instead of a full ``count_batch`` re-route).  Doubling rounds are
+  capped at :data:`_MAX_DOUBLINGS`; queries still unresolved at the cap
+  (a query point astronomically far from the venue extent) fall back to
+  the exact host best-first descent — the same top-up already used for
+  collect overflow — so the answer stays bit-identical.
+
 Both resolve the Alg. 2 spatial-sink special case first: an excluded
 query vertex reaches exactly itself.
 """
@@ -26,12 +36,48 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..core.engine import _bucket
 from ..core.polygon import round_bounds_outward
 from ..core.rtree import query_host_knn
 from ..core.two_d_reach import TwoDReachIndex
+from ..obs import span
 from .program import KNNResult
 
-_MAX_DOUBLINGS = 128
+# Doubling-round cap: the initial radius is extent-span / 2^16, so ~17
+# rounds reach a box covering the whole extent from any in-extent point;
+# the slack covers far-out points before the exact host top-up takes
+# over (capped rounds + top-up replaces the old unbounded 128-round
+# loop that raised on non-convergence).
+_MAX_DOUBLINGS = 24
+
+
+def _fused_count(engine, us_sub: np.ndarray, rects: np.ndarray,
+                 state: dict) -> np.ndarray:
+    """One radius-doubling count round through the fused trace with
+    hoisted routing: pad rects on-device, reuse the routing computed on
+    the first round, ratchet-and-rerun on capacity overflow (the same
+    monotone hwm contract as ``QueryEngine._fused_serve``)."""
+    n = len(us_sub)
+    Bb, us_dev, rsoa_dev = engine._padder.pad(us_sub, rects)
+    routing = state.get("routing")
+    if routing is None:
+        routing = state["routing"] = engine._route(us_dev)
+    qs, qe, pts, exc = routing
+    with span("engine.fused", cat="engine", batch=n, mode="count"):
+        while True:
+            kcap = min(engine._kb_hwm, engine.n_tiles)
+            forced, out, cnt, mx = engine._fused_routed(
+                rsoa_dev, qs, qe, pts, exc, mode="count", kcap=kcap)
+            mxi = int(mx)
+            if mxi <= kcap or kcap >= engine.n_tiles:
+                break
+            engine._kb_hwm = min(_bucket(mxi, 1), engine.n_tiles)
+            engine.stats["fused_reruns"] += 1
+    engine.stats["batches"] += 1
+    engine.stats["queries"] += n
+    engine.stats["tiles_scanned"] += int(np.asarray(cnt).sum())
+    return (np.asarray(out).astype(np.int64)
+            + np.asarray(forced).astype(np.int64))[:n]
 
 
 def outward_rect(lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
@@ -107,13 +153,20 @@ def knn_radius_doubling(engine, us: np.ndarray, points: np.ndarray,
     # ---- phase 1: double the count box until it holds k venues -------
     n = len(rest)
     p = points[rest].astype(np.float64)
-    span = max(float(ext[2] - ext[0]), float(ext[3] - ext[1]), 1e-6)
-    r = np.full(n, span / 2 ** 16, dtype=np.float64)
+    ext_span = max(float(ext[2] - ext[0]), float(ext[3] - ext[1]), 1e-6)
+    r = np.full(n, ext_span / 2 ** 16, dtype=np.float64)
     resolved = np.zeros(n, dtype=bool)
     final_rects = np.zeros((n, 4), dtype=np.float32)
+    # fused engines hoist the routing out of the loop (state carries it
+    # between rounds); two-phase/older engines re-enter count_batch
+    fused = getattr(engine, "path", None) == "fused"
+    state: dict = {}
     for _ in range(_MAX_DOUBLINGS):
         rects = outward_rect(p - r[:, None], p + r[:, None])
-        counts = engine.count_batch(us[rest], rects)
+        if fused:
+            counts = _fused_count(engine, us[rest], rects, state)
+        else:
+            counts = engine.count_batch(us[rest], rects)
         covers = (
             (rects[:, 0].astype(np.float64) <= ext[0])
             & (rects[:, 1].astype(np.float64) <= ext[1])
@@ -142,8 +195,23 @@ def knn_radius_doubling(engine, us: np.ndarray, points: np.ndarray,
         if resolved.all():
             break
         r = np.where(resolved, r, r * 2)
-    else:
-        raise RuntimeError("kNN radius doubling failed to converge")
+    if not resolved.all():
+        # capped out: answer the stragglers with the exact host
+        # best-first descent (the same top-up used for collect
+        # overflow) and drop them from the device collect phase
+        index = getattr(engine, "_index", None)
+        if index is None:
+            raise RuntimeError("kNN radius doubling failed to converge")
+        for j in np.nonzero(~resolved)[0]:
+            b = rest[j]
+            tid = int(index.lookup_tree(us[b:b + 1])[0])
+            ids, d2 = query_host_knn(index.forest, tid, points[b], k)
+            res.ids[b, : len(ids)] = ids
+            res.dist2[b, : len(d2)] = d2
+        rest = rest[resolved]
+        final_rects = final_rects[resolved]
+        if rest.size == 0:
+            return res
 
     # ---- phase 2: collect every candidate in the bounding box --------
     # collect totals are exact even when capped, so one overflow is

@@ -19,7 +19,13 @@ two outcomes — the exact answer, or a typed error:
   so degradation changes latency, never answers.  Downgrades are
   counted (``resilience.fallback_*``) and their latency lands in the
   ``resilience.degraded_query_us`` histogram, not silently mixed into
-  the healthy numbers.
+  the healthy numbers.  With ``degraded_path="two_phase"`` the
+  degradation target is the engine's retained two-phase device path
+  (``*_batch_two_phase``) instead of host NumPy — the right lever when
+  only the *fused* serving path is suspect (it shares no prune/compact
+  trace with two-phase), while ``"host"`` stays the refuge from device
+  failures generally; classes without a two-phase variant (kNN,
+  polygon) always degrade to host.
 
 Per-shard degradation: when the wrapped engine exposes ``shard_of``
 (the cluster engine does), a shard whose breaker is open only reroutes
@@ -56,6 +62,10 @@ class ResilientEngine:
     breaker:  breaker thresholds (shared by the engine-level breaker
               and every lazily created shard breaker).
     name:     metric prefix (``resilience.breaker.<name>.*``).
+    degraded_path: ``"host"`` (default) degrades to the host descent;
+              ``"two_phase"`` degrades to the engine's retained
+              two-phase device path where it exists (see module
+              docstring), host otherwise.
     clock / sleep / seed: injectable time + jitter sources so chaos
               tests replay deterministic schedules without wall sleeps.
     """
@@ -67,12 +77,16 @@ class ResilientEngine:
                  retry: Optional[RetryPolicy] = None,
                  breaker: Optional[BreakerPolicy] = None,
                  name: str = "engine",
+                 degraded_path: str = "host",
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
                  seed: int = 0,
                  registry: Optional[obs_metrics.Registry] = None):
+        if degraded_path not in ("host", "two_phase"):
+            raise ValueError(f"unknown degraded_path {degraded_path!r}")
         self.engine = engine
         self.index = index
+        self.degraded_path = degraded_path
         self.retry = retry or RetryPolicy()
         self.breaker_policy = breaker or BreakerPolicy()
         self.name = name
@@ -230,10 +244,20 @@ class ResilientEngine:
             break
         if pending.any():
             report["degraded"] = pending.copy()
+            target = self._degrade_target(
+                "query_batch", self.index.query_batch)
             out[pending] = self._host_fallback(
-                lambda sel: self.index.query_batch(us[sel], rects[sel]),
-                pending)
+                lambda sel: target(us[sel], rects[sel]), pending)
         return out
+
+    def _degrade_target(self, method: str, host_fn):
+        """The degradation callable for one query class: the engine's
+        retained two-phase path when selected and present, else host."""
+        if self.degraded_path == "two_phase":
+            fn = getattr(self.engine, f"{method}_two_phase", None)
+            if fn is not None:
+                return fn
+        return host_fn
 
     def _host_fallback(self, call, pending: np.ndarray):
         """Serve the degraded remainder on the exact host path, counted
@@ -296,10 +320,13 @@ class ResilientEngine:
         from ..queries.host import range_count_host  # deferred: no cycle
 
         us = np.asarray(us, dtype=np.int64)
+        degrade = self._degrade_target(
+            "count_batch",
+            lambda u, r: range_count_host(self.index, u, r))
         return self._whole_batch(
             "count_batch", len(us),
             lambda: self.engine.count_batch(us, rects),
-            lambda: range_count_host(self.index, us, rects),
+            lambda: degrade(us, rects),
             deadline)
 
     def collect_batch(self, us, rects, k: int,
@@ -307,10 +334,13 @@ class ResilientEngine:
         from ..queries.host import range_collect_host  # deferred
 
         us = np.asarray(us, dtype=np.int64)
+        degrade = self._degrade_target(
+            "collect_batch",
+            lambda u, r, kk: range_collect_host(self.index, u, r, kk))
         return self._whole_batch(
             "collect_batch", len(us),
             lambda: self.engine.collect_batch(us, rects, k),
-            lambda: range_collect_host(self.index, us, rects, k),
+            lambda: degrade(us, rects, k),
             deadline)
 
     def knn_batch(self, us, points, k: int,

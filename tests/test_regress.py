@@ -98,6 +98,45 @@ def test_per_metric_tolerance_override():
     assert rows[0]["verdict"] == regress.REGRESSED
 
 
+# ------------------------------------------------------------ ratio gates
+
+def test_ratio_gates_device_vs_host():
+    """The committed BENCH files satisfy every history-free ceiling —
+    fused device ≤ host per class, cluster ≤ 2x device — and a
+    doctored device slowdown trips exactly its gate."""
+    for name in ("BENCH_queries.json", "BENCH_rangereach.json"):
+        doc = json.load(open(os.path.join(REPO, name)))
+        rows = regress.gate_rows(name, regress.extract(name, doc))
+        assert rows, f"{name}: no ratio gates evaluated"
+        assert all(r["verdict"] == regress.OK for r in rows), rows
+
+    doc = json.load(open(os.path.join(REPO, "BENCH_queries.json")))
+    m = regress.extract("BENCH_queries.json", doc)
+    m["queries.reach.device_us_per_q"] = (
+        m["queries.reach.host_us_per_q"] * 1.5)
+    rows = regress.gate_rows("BENCH_queries.json", m)
+    verdicts = {r["gate"]: r["verdict"] for r in rows}
+    assert verdicts["reach.device_vs_host"] == regress.REGRESSED
+    assert verdicts["count.device_vs_host"] == regress.OK
+    # slack relaxes the ceiling (cross-machine CI headroom)
+    rows = regress.gate_rows("BENCH_queries.json", m, slack=1.0)
+    assert all(r["verdict"] == regress.OK for r in rows)
+
+
+def test_cli_gate_failure_and_no_gates(tmp_path, capsys):
+    hist = str(tmp_path / "hist.jsonl")
+    name = "BENCH_queries.json"
+    doc = json.load(open(os.path.join(REPO, name)))
+    doc["classes"]["reach"]["device_us_per_q"] = (
+        doc["classes"]["reach"]["host_us_per_q"] * 2.0)
+    path = str(tmp_path / name)
+    json.dump(doc, open(path, "w"))
+    assert regress.main(["--bench", path, "--history", hist]) == 1
+    assert "ratio gate" in capsys.readouterr().out
+    assert regress.main(["--bench", path, "--history", hist,
+                         "--no-gates"]) == 0
+
+
 # ----------------------------------------------------------- CLI contract
 
 def test_cli_seed_then_pass_then_fail(tmp_path, capsys):
