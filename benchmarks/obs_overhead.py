@@ -32,6 +32,8 @@ import numpy as np
 from repro import obs
 from repro.core import QueryEngine, build_2dreach
 from repro.data import get_dataset, workload
+from repro.obs import trace_context
+from repro.obs.audit import ExactnessAuditor
 from repro.resilience.faults import INJECTOR, FaultPlan, fault_point, inject
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -103,6 +105,63 @@ def fault_hooks_per_batch(eng, us, rects) -> int:
     return n
 
 
+def disabled_trace_cost_s(batch: int) -> float:
+    """Per-batch seconds of the frontend's *disabled-path* causal-trace
+    plumbing: one tracer-enabled check per submit returning the shared
+    null context (minting and the scope push only happen enabled).
+    Measured differentially — the same list build without the gate is
+    subtracted — so loop machinery cancels and only the branch +
+    attribute read remain."""
+    assert not obs.enabled()
+    tr = obs.TRACER
+    null = trace_context.NULL
+    rounds = max(SPAN_CALLS // max(batch, 1), 50)
+
+    def best_of(body):
+        best = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            for _i in range(rounds):
+                body()
+            best = min(best, (time.perf_counter() - t0) / rounds)
+        return best
+
+    gated = best_of(lambda: [trace_context.mint(u=j) if tr.enabled
+                             else null for j in range(batch)])
+    base = best_of(lambda: [null for _j in range(batch)])
+    return max(0.0, gated - base)
+
+
+def enabled_mint_cost_s(batch: int) -> float:
+    """Per-batch seconds of minting ``batch`` contexts + one scope
+    push/pop — the *enabled* (opted-in) cost, reported informationally
+    next to the enabled span cost."""
+    rounds = max(SPAN_CALLS // max(batch, 1), 50)
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        for _i in range(rounds):
+            ctxs = [trace_context.mint(u=j) for j in range(batch)]
+            with trace_context.scope(ctxs):
+                pass
+        best = min(best, (time.perf_counter() - t0) / rounds)
+    return best
+
+
+def disabled_observe_cost_s(idx, us, rects) -> float:
+    """Per-batch seconds of a *disabled* auditor ``observe`` (sampling
+    off — the default), offered the whole batch."""
+    aud = ExactnessAuditor(idx, sample=0.0)
+    ans = np.zeros(len(us), dtype=bool)
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        for _i in range(2000):
+            aud.observe(us, rects, ans)
+        best = min(best, (time.perf_counter() - t0) / 2000)
+    return best
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -123,6 +182,10 @@ def main():
     fp_hook = disabled_fault_point_cost_s()
     fp_hooks = fault_hooks_per_batch(eng, us, rects)
     fp_overhead = fp_hooks * fp_hook / per_batch
+    trace_batch = disabled_trace_cost_s(len(us))
+    mint_batch = enabled_mint_cost_s(len(us))
+    observe_batch = disabled_observe_cost_s(idx, us, rects)
+    trace_overhead = (trace_batch + observe_batch) / per_batch
 
     report = {
         "disabled_span_cost_ns": per_hook * 1e9,
@@ -132,8 +195,13 @@ def main():
         "disabled_fault_point_cost_ns": fp_hook * 1e9,
         "fault_hooks_per_batch": fp_hooks,
         "disabled_fault_overhead_fraction": fp_overhead,
+        "disabled_trace_gate_us_per_batch": trace_batch * 1e6,
+        "enabled_mint_us_per_batch": mint_batch * 1e6,
+        "disabled_audit_observe_us_per_batch": observe_batch * 1e6,
+        "trace_overhead_fraction": trace_overhead,
         "gate": GATE,
-        "passed": bool(overhead < GATE and fp_overhead < GATE),
+        "passed": bool(overhead < GATE and fp_overhead < GATE
+                       and trace_overhead < GATE),
     }
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
@@ -146,6 +214,11 @@ def main():
     assert fp_overhead < GATE, (
         f"disabled fault hooks cost {fp_overhead * 100:.2f}% of a batch "
         f"({fp_hooks} hooks x {fp_hook * 1e9:.0f}ns vs "
+        f"{per_batch * 1e6:.0f}us) — over the {GATE * 100:.0f}% gate")
+    assert trace_overhead < GATE, (
+        f"disabled trace gate + disabled audit observe cost "
+        f"{trace_overhead * 100:.2f}% of a batch "
+        f"({(trace_batch + observe_batch) * 1e6:.1f}us vs "
         f"{per_batch * 1e6:.0f}us) — over the {GATE * 100:.0f}% gate")
 
 

@@ -24,6 +24,7 @@ engine's ``n_compiles`` introspection).
 
 from __future__ import annotations
 
+import contextlib
 import threading
 import time
 from concurrent.futures import Future, InvalidStateError
@@ -35,6 +36,8 @@ from ..kernels.range_query.kernel import TB
 from ..obs import metrics as obs_metrics
 from ..obs import querylog as obs_querylog
 from ..obs import span
+from ..obs import trace_context
+from ..obs.flight import FLIGHT
 from ..obs.tracer import TRACER as _TRACER
 from ..resilience.errors import (
     DeadlineExceeded,
@@ -70,6 +73,9 @@ class Frontend:
                after ``enqueue + max_delay`` counts as a deadline miss;
                defaults to ``max_delay / 4`` (absorbs timer wakeup
                jitter without hiding real scheduler stalls).
+    auditor:   optional :class:`repro.obs.ExactnessAuditor`; every
+               served batch is offered for sampled shadow-replay
+               (``observe`` is near-free when sampling is disabled).
     slo:       default per-request deadline budget (s).  When a request
                carries a budget (this default, or an explicit
                ``deadline=`` on submit), admission control sheds it
@@ -92,7 +98,8 @@ class Frontend:
                  query_log: Optional["obs_querylog.QueryLog"] = None,
                  clock: Optional[Callable[[], float]] = None,
                  deadline_grace: Optional[float] = None,
-                 slo: Optional[float] = None):
+                 slo: Optional[float] = None,
+                 auditor=None):
         if max_batch < 1 or max_queue < max_batch:
             raise ValueError(
                 f"need 1 <= max_batch <= max_queue, got "
@@ -104,13 +111,14 @@ class Frontend:
         self.metrics = metrics if metrics is not None else obs_metrics.REGISTRY
         self._query_log = query_log
         self._clock = clock if clock is not None else time.monotonic
+        self._auditor = auditor
         self.deadline_grace = (float(deadline_grace)
                                if deadline_grace is not None
                                else self.max_delay / 4.0)
         self.slo = None if slo is None else float(slo)
         self._cond = threading.Condition()
         self._rect_len = None                 # fixed by the first submit
-        # (u, rect, future, t_enq, t_deadline | None)
+        # (u, rect, future, t_enq, t_deadline | None, TraceContext)
         self._pending: List[tuple] = []
         self._inflight = False
         self._closed = False
@@ -204,7 +212,18 @@ class Frontend:
                 raise FrontendClosed("Frontend is closed")
             t_enq = self._clock()
             t_dl = None if budget is None else t_enq + budget
-            self._pending.append((int(u), rect, fut, t_enq, t_dl))
+            # admission is where the causal trace starts: mint the
+            # request's TraceContext here so every downstream span,
+            # querylog row and exemplar joins on its id.  Minting sits
+            # behind the tracer gate — disabled serving pays one
+            # attribute check and shares the null context.
+            if _TRACER.enabled:
+                ctx = trace_context.mint(u=int(u), query_class="reach",
+                                         t_admit=t_enq, deadline=budget)
+            else:
+                ctx = trace_context.NULL
+            fut.trace_id = ctx.trace_id
+            self._pending.append((int(u), rect, fut, t_enq, t_dl, ctx))
             self.stats["n_requests"] += 1
             self._c_requests.inc()
             depth = len(self._pending)
@@ -372,15 +391,29 @@ class Frontend:
                      if b[4] is None or now <= b[4]]
             self.stats["n_deadline_dropped"] += len(expired)
             self._c_dl_dropped.inc(len(expired))
+            # attribute the drops: the black box keeps which requests
+            # died in the queue (their traces end here, by design)
+            FLIGHT.note("frontend.deadline_dropped",
+                        trace_ids=[b[5].trace_id for b in expired])
             self._fail_batch(expired, DeadlineExceeded(
                 "deadline budget expired while queued"))
             if not batch:
                 return
+        ctxs = [b[5] for b in batch]
         try:
             # assembly inside the latch too: no input may ever kill the
-            # scheduler thread and strand the batch's futures
-            with span("frontend.flush", cat="frontend", n=len(batch),
-                      reason=reason):
+            # scheduler thread and strand the batch's futures.  The
+            # trace scope makes the batch's ids ambient: every span the
+            # engine stack opens below (padder, megakernel, shard
+            # fan-out, dynamic probes) tags itself with them, and the
+            # resilient engine attributes retries/degradations to them.
+            # (One gate check per batch: disabled serving skips the
+            # scope push — the contexts are all NULL then anyway.)
+            sc = (trace_context.scope(ctxs) if _TRACER.enabled
+                  else contextlib.nullcontext())
+            with sc, \
+                    span("frontend.flush", cat="frontend", n=len(batch),
+                         reason=reason):
                 fault_point("frontend.queue_stall", n=len(batch))
                 us = np.array([b[0] for b in batch], dtype=np.int64)
                 rects = np.stack([b[1] for b in batch])
@@ -402,13 +435,22 @@ class Frontend:
         self._h_batch.record(len(batch))
         self._g_occupancy.set(len(batch) / self.max_batch)
         now = self._clock()
-        for (_, _, fut, t_enq, _), a in zip(batch, ans):
-            self._h_wait.record((now - t_enq) * 1e6)
+        tracing = _TRACER.enabled
+        for (_, _, fut, t_enq, _, ctx), a in zip(batch, ans):
+            # queue-wait exemplars join the p99 quantile back to real
+            # requests; only retained while tracing (reservoir writes
+            # stay off the disabled fast path)
+            self._h_wait.record(
+                (now - t_enq) * 1e6,
+                exemplar=ctx.trace_id if tracing else None)
             try:
                 fut.set_result(bool(a))
             except InvalidStateError:       # client cancelled meanwhile
                 pass
         self._log_batch(us, rects, ans, batch, now)
+        if self._auditor is not None:
+            self._auditor.observe(us, rects, ans,
+                                  trace_ids=[c.trace_id for c in ctxs])
 
     def _log_batch(self, us, rects, ans, batch, now) -> None:
         """Structured query-log records for a served batch — explicit
@@ -426,13 +468,18 @@ class Frontend:
         lats = [now - b[3] for b in batch]
         # engine-reported serving status (resilient engines rewrite
         # last_report per batch): healthy vs exact-host-degraded split
-        statuses, retries = "ok", 0
+        statuses, retries, attempts = "ok", 0, None
         rep = getattr(self.engine, "last_report", None)
         if rep is not None:
             mask = np.asarray(rep.get("degraded", ()), dtype=bool)
             if len(mask) == len(us):
                 statuses = np.where(mask, "degraded", "ok")
             retries = int(rep.get("retries", 0))
+            att = rep.get("attempts")
+            if att is not None and len(att) == len(us):
+                attempts = att
         qlog.record_batch("reach", vclass, rects, shards, lats,
                           np.asarray(ans).astype(np.int64), us=us,
-                          statuses=statuses, retries=retries)
+                          statuses=statuses, retries=retries,
+                          trace_ids=[b[5].trace_id for b in batch],
+                          attempts=attempts)

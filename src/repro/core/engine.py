@@ -91,7 +91,7 @@ from ..kernels.range_query.kernel import TB, TP
 from ..kernels.range_query.ops import forest_soa
 from ..obs import CounterDict, REGISTRY, span
 from ..obs.tracer import TRACER as _TRACER
-from ..resilience.faults import fault_point
+from ..resilience.faults import fault_point, fault_value
 from .polygon import convex_halfplanes, points_in_polygon_region, polygon_bbox
 from .two_d_reach import TwoDReachIndex
 
@@ -702,7 +702,9 @@ class QueryEngine:
             with span("engine.sync", cat="engine"):
                 out = np.asarray(hit).astype(bool) | np.asarray(forced)
         self._obs_batch("reach", B, t0)
-        return out[:B]
+        # value point: a kind="corrupt" fault silently flips answers
+        # here — the failure the online exactness auditor must catch
+        return fault_value("engine.answer", out[:B])
 
     def query(self, u: int, rect) -> bool:
         return bool(self.query_batch(np.array([u]), np.array([rect]))[0])

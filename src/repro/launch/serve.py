@@ -91,7 +91,7 @@ def _serve_batched(fn, us, rects, batch: int):
         lambda lo, hi: fn(us[lo:hi], rects[lo:hi]), len(us), batch)
 
 
-def _serve_cluster(index, us, rects, args):
+def _serve_cluster(index, us, rects, args, auditor=None):
     """ShardedEngine behind the micro-batching Frontend: per-request
     latencies (submit→resolve), steady-state no-recompile assertion."""
     from ..cluster import Frontend, ShardedEngine
@@ -103,7 +103,7 @@ def _serve_cluster(index, us, rects, args):
           f"{part.n_trees} trees, per-shard entries "
           f"{part.shard_entries.tolist()} (balance {part.balance():.2f})")
     fe = Frontend(eng, max_batch=args.batch,
-                  max_delay=args.flush_ms * 1e-3)
+                  max_delay=args.flush_ms * 1e-3, auditor=auditor)
     try:
         fe.warmup(us[:args.batch], rects[:args.batch])
         fe.submit_many(us, rects)           # warm the K high-water mark
@@ -325,11 +325,25 @@ def main():
     ap.add_argument("--obs-profile", default="",
                     help="logdir for an opt-in jax.profiler device "
                          "trace of the timed pass (TensorBoard format)")
+    ap.add_argument("--audit-sample", type=float, default=0.0,
+                    dest="audit_sample",
+                    help="fraction of served cluster queries the online "
+                         "exactness auditor shadow-replays through the "
+                         "bit-identical host path (0 = off)")
+    ap.add_argument("--audit-oracle-sample", type=float, default=0.0,
+                    dest="audit_oracle_sample",
+                    help="fraction of audited queries also checked "
+                         "against the BFS oracle")
     args = ap.parse_args()
 
     wa = mon = None
     if args.obs:
+        import os as _os
+
         obs.enable()
+        # flight recorder: SLO burns / breaker opens / audit
+        # divergences freeze self-contained debug bundles here
+        obs.FLIGHT.arm(_os.path.join(args.obs_dir, "flightdump"))
         # workload intelligence: sketches see every query-log record as
         # a streaming sink; the background sampler snapshots the
         # registry and ticks the SLO burn-rate monitor on its cadence
@@ -380,11 +394,17 @@ def main():
     )
     # host reference answers, for the arms that verify against them
     host = None if host_arm else batch_query(index, us, rects)
+    auditor = None
+    if args.audit_sample > 0 and args.engine == "cluster":
+        auditor = obs.ExactnessAuditor(
+            index, graph=g, sample=args.audit_sample,
+            oracle_sample=args.audit_oracle_sample).start()
     with obs.device_trace(args.obs_profile, enabled=bool(args.obs_profile)):
         t_q0 = time.perf_counter()
         with obs.span(f"serve.{args.engine}_pass", cat="serve", n=len(us)):
             if args.engine == "cluster":
-                ans, lats, dt = _serve_cluster(index, us, rects, args)
+                ans, lats, dt = _serve_cluster(index, us, rects, args,
+                                               auditor=auditor)
             elif host_arm:
                 ans, lats, dt = _serve_batched(
                     lambda ub, rb: batch_query(index, ub, rb), us, rects,
@@ -428,11 +448,11 @@ def main():
     print(f"[serve] {args.engine}: {len(us)} queries in {dt * 1e3:.1f} ms "
           f"({dt / len(us) * 1e6:.2f} us/query mean), "
           f"{_fmt_pct(pct)}, {int(np.sum(ans))} positive")
-    _obs_report(args, t_q0, t_q1, wa=wa, mon=mon)
+    _obs_report(args, t_q0, t_q1, wa=wa, mon=mon, auditor=auditor)
 
 
 def _obs_report(args, t_q0: float, t_q1: float,
-                wa=None, mon=None) -> None:
+                wa=None, mon=None, auditor=None) -> None:
     """--obs epilogue: span coverage of the timed pass, the top stage
     totals, the workload-intelligence report (heavy-hitter table +
     placement report, SLO state) and the artifact dump."""
@@ -471,6 +491,18 @@ def _obs_report(args, t_q0: float, t_q1: float,
         fired = sum(1 for e in mon.events if e["kind"] == "fired")
         print(f"[serve] obs: SLOs {len(mon.slos)} tracked, {fired} "
               f"fired, active now: {sorted(mon.active()) or 'none'}")
+    if auditor is not None:
+        auditor.stop()                   # final drain covers the tail
+        rep = auditor.report()
+        print(f"[serve] obs: exactness audit checked {rep['checked']} "
+              f"of {rep['sampled']} sampled queries "
+              f"({rep['oracle_checked']} vs BFS oracle): "
+              f"{rep['divergences']} divergence(s)")
+    fl = obs.FLIGHT.snapshot()
+    if fl["dumps"]:
+        print(f"[serve] obs: flight recorder froze {fl['dumps']} debug "
+              f"bundle(s) under {fl['dir']} — replay with "
+              f"python -m repro.obs.flight <bundle>")
     print(f"[serve] obs: wrote " + ", ".join(
         sorted(paths.values())))
 

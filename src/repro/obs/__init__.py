@@ -38,9 +38,11 @@ import os
 import time
 from typing import Optional, Sequence
 
-from . import export, metrics, profiler, querylog, slo, timeseries, \
-    tracer, workload
+from . import audit, export, flight, metrics, profiler, querylog, slo, \
+    timeseries, trace_context, tracer, workload
+from .audit import ExactnessAuditor
 from .export import to_openmetrics, write_prom
+from .flight import FLIGHT, FlightRecorder
 from .metrics import (
     Counter,
     CounterDict,
@@ -55,17 +57,20 @@ from .profiler import annotate, device_trace, engine_cost_model
 from .querylog import QUERY_LOG, QueryLog, rect_bucket, vertex_class_of
 from .slo import SLOMonitor, default_slos
 from .timeseries import TimeSeriesCollector
+from .trace_context import TraceContext
 from .tracer import TRACER, span, traced
 from .workload import SpaceSaving, WorkloadAnalytics, gini
 
 __all__ = [
-    "Counter", "CounterDict", "Gauge", "Histogram", "HistogramState",
+    "Counter", "CounterDict", "ExactnessAuditor", "FLIGHT",
+    "FlightRecorder", "Gauge", "Histogram", "HistogramState",
     "QueryLog", "Registry", "REGISTRY", "SLOMonitor", "SpaceSaving",
-    "TRACER", "TimeSeriesCollector", "QUERY_LOG", "WorkloadAnalytics",
+    "TRACER", "TimeSeriesCollector", "TraceContext", "QUERY_LOG",
+    "WorkloadAnalytics",
     "annotate", "coverage", "default_slos", "device_trace", "disable",
-    "dump", "enable", "enabled", "engine_cost_model", "gini",
-    "latency_percentiles", "rect_bucket", "reset", "snapshot", "span",
-    "stage_totals", "start_timeseries", "stop_timeseries",
+    "dump", "dump_flight", "enable", "enabled", "engine_cost_model",
+    "gini", "latency_percentiles", "rect_bucket", "reset", "snapshot",
+    "span", "stage_totals", "start_timeseries", "stop_timeseries",
     "to_openmetrics", "traced", "vertex_class_of", "write_prom",
 ]
 
@@ -91,11 +96,13 @@ def enabled() -> bool:
 
 def reset() -> None:
     """Clear spans, zero metrics, empty the query log, forget the
-    time-series sampler (registrations and enablement state stay)."""
+    time-series sampler and the flight recorder's black box
+    (registrations and enablement state stay)."""
     global _TIMESERIES
     tracer.TRACER.clear()
     metrics.REGISTRY.reset()
     querylog.QUERY_LOG.clear()
+    flight.FLIGHT.reset()
     if _TIMESERIES is not None:
         _TIMESERIES.stop(final_sample=False)
         _TIMESERIES = None
@@ -142,7 +149,8 @@ def coverage(t0_s: float, t1_s: float,
 def snapshot() -> dict:
     """One structured view of everything observed so far: metric values
     and histogram percentiles, per-span totals, query-log aggregates,
-    tracer state.  Schema is additive-versioned for the BENCH files."""
+    tracer + flight-recorder state.  Schema is additive-versioned for
+    the BENCH files."""
     return {
         "schema_version": 2,
         "wall_time": time.time(),
@@ -154,7 +162,19 @@ def snapshot() -> dict:
             "events": len(tracer.TRACER),
             "dropped": tracer.TRACER.dropped,
         },
+        "flight": flight.FLIGHT.snapshot(),
     }
+
+
+def dump_flight(reason: str = "manual",
+                dirpath: Optional[str] = None) -> Optional[str]:
+    """Freeze a flight bundle right now (the ops/debugger entry point).
+    Arms the recorder at ``dirpath`` first when given; bypasses the
+    rate limit but not arming — returns the bundle directory, or
+    ``None`` when the recorder is unarmed / over its dump budget."""
+    if dirpath is not None and not flight.FLIGHT.armed:
+        flight.FLIGHT.arm(dirpath)
+    return flight.FLIGHT.trigger(reason, force=True)
 
 
 def dump(dirpath: str, prefix: str = "") -> dict:
@@ -176,7 +196,9 @@ def dump(dirpath: str, prefix: str = "") -> dict:
     }
     with open(paths["metrics"], "w") as f:
         json.dump(snapshot(), f, indent=1)
-    if _TIMESERIES is not None and len(_TIMESERIES):
+    # to_jsonl flushes the partial in-flight window itself, so even a
+    # sampler that never completed an interval exports its data
+    if _TIMESERIES is not None:
         paths["timeseries"] = _TIMESERIES.to_jsonl(
             os.path.join(dirpath, prefix + "timeseries.jsonl"))
     return paths

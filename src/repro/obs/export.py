@@ -16,6 +16,12 @@ underscores, everything prefixed ``repro_``):
   labelled samples from the one Histogram implementation, plus
   ``_sum`` / ``_count``.
 
+Histograms carrying (trace id, value) exemplar reservoirs annotate each
+quantile sample with one exemplar from the bucket the quantile falls in
+(OpenMetrics exemplar syntax — `` # {trace_id="..."} value``), so "show
+me an actual p99 request" survives the exposition round-trip: scrape
+the quantile, read the trace id, resolve it in the flight bundle.
+
 The output ends with the OpenMetrics ``# EOF`` terminator and is
 parse-checked line-by-line in ``tests/test_workload.py``.
 """
@@ -74,7 +80,12 @@ def to_openmetrics(registry: Optional[_metrics.Registry] = None,
             if m.count:
                 for q in QUANTILES:
                     v = m.percentile(q * 100.0)
-                    lines.append(f'{n}{{quantile="{q:g}"}} {_fmt(v)}')
+                    ln = f'{n}{{quantile="{q:g}"}} {_fmt(v)}'
+                    ex = m.exemplars_near(v)
+                    if ex:
+                        tid, ev = ex[-1]
+                        ln += f' # {{trace_id="{tid}"}} {_fmt(ev)}'
+                    lines.append(ln)
             lines.append(f"{n}_sum {_fmt(m.sum)}")
             lines.append(f"{n}_count {_fmt(m.count)}")
     lines.append("# EOF")

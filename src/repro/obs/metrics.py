@@ -23,8 +23,10 @@ from __future__ import annotations
 
 import json
 import math
+import random
 import threading
-from typing import Dict, Iterable, MutableMapping, Optional, Sequence, Union
+from typing import Dict, Iterable, List, MutableMapping, Optional, \
+    Sequence, Tuple, Union
 
 import numpy as np
 
@@ -126,13 +128,21 @@ class Histogram:
     max_samples: exact window size.  Below it, ``percentile`` is
                  bit-for-bit ``np.percentile``; above, bucket-
                  interpolated (``saturated`` flips to True).
+    exemplar_cap: bounded (trace id, value) exemplar reservoir size per
+                 bucket; recordings that pass ``exemplar=`` feed it.
+    seed:        exemplar reservoir rng seed — a fixed seed over a
+                 fixed stream keeps the retained exemplars
+                 deterministic (golden-tested).
     """
 
     __slots__ = ("name", "lo", "hi", "sub", "max_samples", "_buckets",
-                 "_samples", "_count", "_sum", "_min", "_max", "_lock")
+                 "_samples", "_count", "_sum", "_min", "_max", "_lock",
+                 "exemplar_cap", "seed", "_exemplars", "_ex_seen",
+                 "_ex_rng")
 
     def __init__(self, name: str = "", lo: float = 1e-3, hi: float = 1e9,
-                 sub: int = 16, max_samples: int = 65536):
+                 sub: int = 16, max_samples: int = 65536,
+                 exemplar_cap: int = 4, seed: int = 0):
         if not (0 < lo < hi):
             raise ValueError(f"need 0 < lo < hi, got {lo}/{hi}")
         self.name = name
@@ -140,6 +150,8 @@ class Histogram:
         self.hi = float(hi)
         self.sub = int(sub)
         self.max_samples = int(max_samples)
+        self.exemplar_cap = int(exemplar_cap)
+        self.seed = int(seed)
         n_octaves = int(math.ceil(math.log2(hi / lo)))
         # bucket 0: underflow; buckets 1..n: log-linear; last: overflow
         self._buckets = np.zeros(n_octaves * self.sub + 2, dtype=np.int64)
@@ -148,6 +160,10 @@ class Histogram:
         self._sum = 0.0
         self._min = math.inf
         self._max = -math.inf
+        # bucket -> bounded reservoir of (trace_id, value) exemplars
+        self._exemplars: Dict[int, List[Tuple[int, float]]] = {}
+        self._ex_seen: Dict[int, int] = {}   # stream length per bucket
+        self._ex_rng = random.Random(self.seed)
         self._lock = threading.Lock()
 
     @classmethod
@@ -169,10 +185,16 @@ class Histogram:
             return len(self._buckets) - 1
         return 1 + int(math.log2(v / self.lo) * self.sub)
 
-    def record(self, v: Number) -> None:
+    def record(self, v: Number, exemplar: Optional[int] = None) -> None:
+        """Record one value; ``exemplar=`` attaches a trace id to the
+        value's bucket reservoir (Algorithm-R reservoir sampling with
+        the histogram's seeded rng, so a fixed stream retains a fixed
+        exemplar set — "show me an actual p99 request" is then a bucket
+        lookup)."""
         v = float(v)
         with self._lock:
-            self._buckets[self._idx(v)] += 1
+            i = self._idx(v)
+            self._buckets[i] += 1
             self._count += 1
             self._sum += v
             if v < self._min:
@@ -181,6 +203,16 @@ class Histogram:
                 self._max = v
             if len(self._samples) < self.max_samples:
                 self._samples.append(v)
+            if exemplar is not None:
+                seen = self._ex_seen.get(i, 0)
+                self._ex_seen[i] = seen + 1
+                res = self._exemplars.setdefault(i, [])
+                if len(res) < self.exemplar_cap:
+                    res.append((int(exemplar), v))
+                else:
+                    j = self._ex_rng.randrange(seen + 1)
+                    if j < self.exemplar_cap:
+                        res[j] = (int(exemplar), v)
 
     def record_many(self, values) -> None:
         for v in np.asarray(values, dtype=np.float64).ravel():
@@ -342,6 +374,23 @@ class Histogram:
         return {f"{prefix}{int(p) if float(p).is_integer() else p}{suffix}":
                 self.percentile(p) for p in ps}
 
+    # -- exemplars ------------------------------------------------------
+
+    def exemplars(self) -> Dict[int, List[Tuple[int, float]]]:
+        """{bucket index: [(trace_id, value), ...]} — every retained
+        exemplar reservoir (buckets that never saw an ``exemplar=``
+        recording are absent)."""
+        with self._lock:
+            return {i: list(res) for i, res in self._exemplars.items()
+                    if res}
+
+    def exemplars_near(self, v: float) -> List[Tuple[int, float]]:
+        """The exemplar reservoir of the bucket ``v`` falls in — e.g.
+        ``h.exemplars_near(h.percentile(99))`` answers "show me actual
+        p99 requests" as a lookup."""
+        with self._lock:
+            return list(self._exemplars.get(self._idx(float(v)), ()))
+
     def reset(self) -> None:
         with self._lock:
             self._buckets[:] = 0
@@ -350,6 +399,9 @@ class Histogram:
             self._sum = 0.0
             self._min = math.inf
             self._max = -math.inf
+            self._exemplars = {}
+            self._ex_seen = {}
+            self._ex_rng = random.Random(self.seed)
 
     def snapshot(self) -> Dict[str, Number]:
         out: Dict[str, Number] = {
@@ -361,6 +413,10 @@ class Histogram:
         }
         if self._count:
             out.update(self.percentiles())
+        if self._exemplars:
+            out["exemplars"] = {
+                str(i): [[tid, val] for tid, val in res]
+                for i, res in sorted(self._exemplars.items()) if res}
         return out
 
 

@@ -23,6 +23,16 @@ whether the engine answered on the device path or the exact host
 fallback) and ``retries`` (device attempts the batch burned beyond the
 first); v1 consumers keyed on field names keep working, the JSONL dump
 carries ``schema_version`` in its header line.
+
+Schema v3 grew the causal columns: ``trace_id`` (the per-request
+:class:`~repro.obs.trace_context.TraceContext` id minted at
+``Frontend.submit`` — the join key against span ``trace_ids`` and
+histogram exemplars in a flight bundle) and ``attempt`` (device
+attempts that included *this* query, attributed per trace id by
+``ResilientEngine.last_report`` instead of the batch-level ``retries``
+count, which stays for v2 consumers).  Both default to their "unknown"
+values (-1 / 0) for producers without a trace context; the aggregate
+surfaces (``by_status`` et al.) are unchanged.
 """
 
 from __future__ import annotations
@@ -36,14 +46,17 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 FIELDS = ("t", "query_class", "u", "vertex_class", "rect_bucket", "shard",
-          "latency_us", "cardinality", "status", "retries")
+          "latency_us", "cardinality", "status", "retries",
+          "trace_id", "attempt")
 
-# tuple indices for consumers iterating raw records
+# tuple indices for consumers iterating raw records (v3 appends fields,
+# so v2 consumers indexing by these constants keep working)
 I_T, I_QUERY_CLASS, I_U, I_VERTEX_CLASS, I_RECT_BUCKET, I_SHARD, \
-    I_LATENCY_US, I_CARDINALITY, I_STATUS, I_RETRIES = range(len(FIELDS))
+    I_LATENCY_US, I_CARDINALITY, I_STATUS, I_RETRIES, \
+    I_TRACE_ID, I_ATTEMPT = range(len(FIELDS))
 
 
 def rect_bucket(rect) -> int:
@@ -104,11 +117,12 @@ class QueryLog:
     def record(self, query_class: str, vertex_class: str, rect_b: int,
                shard: int, latency_s: float, cardinality: int,
                t: Optional[float] = None, u: int = -1,
-               status: str = "ok", retries: int = 0) -> None:
+               status: str = "ok", retries: int = 0,
+               trace_id: int = -1, attempt: int = 0) -> None:
         rec = (t if t is not None else time.time(), query_class, int(u),
                vertex_class, int(rect_b), int(shard),
                float(latency_s) * 1e6, int(cardinality), status,
-               int(retries))
+               int(retries), int(trace_id), int(attempt))
         with self._lock:
             self._ring.append(rec)
             self.total += 1
@@ -122,11 +136,15 @@ class QueryLog:
 
     def record_batch(self, query_class: str, vertex_classes, rects,
                      shards, latencies_s, cardinalities,
-                     us=None, statuses=None, retries: int = 0) -> None:
+                     us=None, statuses=None, retries: int = 0,
+                     trace_ids=None, attempts=None) -> None:
         """Vectorised append for a served batch (one lock per record,
         shared wall timestamp).  ``statuses`` is a per-query string
         sequence (or one string for the whole batch); ``retries`` is
-        the batch-level device retry count the engine reported."""
+        the batch-level device retry count the engine reported;
+        ``trace_ids`` / ``attempts`` are the per-query causal columns
+        (schema v3) the frontend reads off the batch's trace contexts
+        and the resilient engine's per-trace attribution."""
         now = time.time()
         shards = np.asarray(shards)
         lats = np.asarray(latencies_s, dtype=np.float64)
@@ -142,7 +160,11 @@ class QueryLog:
                         rect_bucket(rects[i]), int(shards[i]),
                         float(lats[i]), int(cards[i]), t=now,
                         u=int(us[i]) if us is not None else -1,
-                        status=st, retries=retries)
+                        status=st, retries=retries,
+                        trace_id=(int(trace_ids[i])
+                                  if trace_ids is not None else -1),
+                        attempt=(int(attempts[i])
+                                 if attempts is not None else 0))
 
     # -- introspection --------------------------------------------------
 

@@ -143,6 +143,14 @@ class SLOMonitor:
         # instantaneous tracer event: alerts line up with stage spans
         TRACER.record(f"slo.{slo.name}.{kind}", "slo", _now_ns(), 0,
                       {k: round(v, 3) for k, v in event["burns"].items()})
+        # flight recorder: every transition lands in the black box; a
+        # burn *firing* freezes a debug bundle (rate-limited, no-op
+        # unless the recorder is armed)
+        from .flight import FLIGHT   # deferred: avoids an import cycle
+        FLIGHT.note(f"slo.{kind}", slo=slo.name, t=t,
+                    burns=event["burns"])
+        if kind == "fired":
+            FLIGHT.trigger(f"slo-{slo.name}", detail=event)
         return event
 
     def tick(self, t: Optional[float] = None) -> List[dict]:

@@ -165,8 +165,35 @@ class TimeSeriesCollector:
             vs.append(float(v))
         return ts, vs
 
-    def to_jsonl(self, path: str) -> str:
-        """Dump the ring, one sample per line after a schema header."""
+    def dirty(self) -> bool:
+        """True when the registry holds activity the ring has not
+        sampled yet — counter movement or histogram recordings since
+        the last :meth:`sample` (or any at all when none was taken)."""
+        with self._lock:
+            no_samples = self._prev_t is None
+            prev_counters = dict(self._prev_counters)
+            prev_hist = dict(self._prev_hist)
+        for name, m in self.registry.items():
+            if isinstance(m, _metrics.Counter):
+                if float(m.value) != prev_counters.get(name, 0.0):
+                    return True
+            elif isinstance(m, _metrics.Histogram):
+                prev = prev_hist.get(name)
+                if m.count != (prev.count if prev is not None else 0):
+                    return True
+        return no_samples and bool(self.registry.names())
+
+    def to_jsonl(self, path: str, final_sample: bool = True) -> str:
+        """Dump the ring, one sample per line after a schema header.
+
+        ``final_sample`` (default) first flushes the partial in-flight
+        window — anything recorded since the last background sample —
+        into one last sample, so a short serve that never spanned a
+        full ``interval`` still exports its data instead of silently
+        dropping the tail (or, with no elapsed interval at all, the
+        whole run)."""
+        if final_sample and self.dirty():
+            self.sample()
         samples = self.samples()
         with open(path, "w") as f:
             f.write(json.dumps({

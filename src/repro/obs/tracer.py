@@ -24,9 +24,12 @@ from __future__ import annotations
 
 import functools
 import json
+import math
 import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import trace_context
 
 # Timestamps are perf_counter_ns throughout, so spans recorded on any
 # thread share one monotonic clock and line up in the trace viewer.
@@ -90,36 +93,11 @@ class Tracer:
             s["mean_us"] = s["total_us"] / s["count"]
         return out
 
-    def stage_totals(self, prefix: str = "") -> Dict[str, float]:
-        """{name: total_us} over spans whose name starts with ``prefix``
-        — the per-stage attribution the benchmarks record."""
-        out: Dict[str, float] = {}
-        for name, _cat, _tid, _t0, dur, _args in self.events():
-            if name.startswith(prefix):
-                out[name] = out.get(name, 0.0) + dur / 1e3
-        return out
-
-    def coverage(self, t0_s: float, t1_s: float,
-                 prefixes: Sequence[str] = ()) -> float:
-        """Fraction of the wall interval ``[t0_s, t1_s]`` (perf_counter
-        seconds) covered by the union of matching spans.
-
-        Concurrent spans (frontend scheduler thread vs caller) merge, so
-        the result answers "how much of the end-to-end wall time is
-        attributed to *some* instrumented stage".
-        """
-        lo, hi = t0_s * 1e9, t1_s * 1e9
-        if hi <= lo:
-            return 0.0
-        iv: List[Tuple[int, int]] = []
-        for name, _cat, _tid, t0, dur, _args in self.events():
-            if prefixes and not any(name.startswith(p) for p in prefixes):
-                continue
-            a, b = max(t0, lo), min(t0 + dur, hi)
-            if b > a:
-                iv.append((a, b))
+    @staticmethod
+    def _union_len(iv: List[Tuple[float, float]]) -> float:
+        """Total length of the union of (start, end) intervals."""
         iv.sort()
-        covered, end = 0.0, lo
+        covered, end = 0.0, -math.inf
         for a, b in iv:
             if a > end:
                 covered += b - a
@@ -127,6 +105,74 @@ class Tracer:
             elif b > end:
                 covered += b - end
                 end = b
+        return covered
+
+    @staticmethod
+    def _merge_per_thread(per_thread: Dict[int, List[Tuple[float, float]]]
+                          ) -> List[Tuple[float, float]]:
+        """Union each thread's intervals first, then pool the per-thread
+        unions — the two-level shape both :meth:`stage_totals` and
+        :meth:`coverage` attribute through, so spans that overlap
+        (nested same-name spans on one thread, or concurrent frontend
+        flush threads) can never count the same wall time twice."""
+        pooled: List[Tuple[float, float]] = []
+        for iv in per_thread.values():
+            iv.sort()
+            start = end = None
+            for a, b in iv:
+                if start is None:
+                    start, end = a, b
+                elif a > end:
+                    pooled.append((start, end))
+                    start, end = a, b
+                elif b > end:
+                    end = b
+            if start is not None:
+                pooled.append((start, end))
+        return pooled
+
+    def stage_totals(self, prefix: str = "") -> Dict[str, float]:
+        """{name: total_us} over spans whose name starts with ``prefix``
+        — the per-stage attribution the benchmarks record.
+
+        Totals are interval *unions* computed per thread before merging
+        across threads: wall time during which at least one thread was
+        inside the stage.  Sequential spans sum as before; overlapping
+        same-name spans (recursion on one thread, concurrent frontend
+        flush threads) no longer double-count, so a stage total can
+        never exceed the wall interval it ran in.
+        """
+        per: Dict[str, Dict[int, List[Tuple[float, float]]]] = {}
+        for name, _cat, tid, t0, dur, _args in self.events():
+            if name.startswith(prefix):
+                per.setdefault(name, {}).setdefault(tid, []).append(
+                    (t0, t0 + dur))
+        return {name: self._union_len(self._merge_per_thread(by_tid)) / 1e3
+                for name, by_tid in per.items()}
+
+    def coverage(self, t0_s: float, t1_s: float,
+                 prefixes: Sequence[str] = ()) -> float:
+        """Fraction of the wall interval ``[t0_s, t1_s]`` (perf_counter
+        seconds) covered by the union of matching spans.
+
+        Intervals are clipped to the window, unioned **per thread
+        first**, then unioned across threads — concurrent spans
+        (frontend scheduler thread vs caller, or several flush threads)
+        merge rather than add, so coverage is capped at 1.0 by
+        construction.  The result answers "how much of the end-to-end
+        wall time is attributed to *some* instrumented stage".
+        """
+        lo, hi = t0_s * 1e9, t1_s * 1e9
+        if hi <= lo:
+            return 0.0
+        per_thread: Dict[int, List[Tuple[float, float]]] = {}
+        for name, _cat, tid, t0, dur, _args in self.events():
+            if prefixes and not any(name.startswith(p) for p in prefixes):
+                continue
+            a, b = max(t0, lo), min(t0 + dur, hi)
+            if b > a:
+                per_thread.setdefault(tid, []).append((a, b))
+        covered = self._union_len(self._merge_per_thread(per_thread))
         return covered / (hi - lo)
 
     def chrome_trace(self) -> dict:
@@ -186,8 +232,16 @@ class _Span:
 
     def __exit__(self, *exc):
         t1 = _now_ns()
+        args = self._args
+        # an active per-request scope stamps its trace ids onto every
+        # span recorded within it — the causal key the flight-recorder
+        # replay resolves.  Enabled-only cost: one thread-local read.
+        ids = trace_context.current_ids()
+        if ids is not None:
+            args = dict(args) if args else {}
+            args["trace_ids"] = ids
         TRACER.record(self._name, self._cat, self._t0, t1 - self._t0,
-                      self._args)
+                      args)
         return False
 
 

@@ -127,14 +127,18 @@ class CircuitBreaker:
                     self._c_closed.inc()
 
     def record_failure(self) -> None:
+        opened = False
         with self._lock:
             if self._state == HALF_OPEN:
                 self._open()                  # failed probe: back to open
-                return
-            if self._state == CLOSED:
+                opened = True
+            elif self._state == CLOSED:
                 self._failures += 1
                 if self._failures >= self.policy.failure_threshold:
                     self._open()
+                    opened = True
+        if opened:
+            self._notify_opened()
 
     def release(self) -> None:
         """An ``allow()`` grant went unused (no call was made): free the
@@ -147,3 +151,13 @@ class CircuitBreaker:
         """Force the breaker open (ops switch / degraded-bench arm)."""
         with self._lock:
             self._open()
+        self._notify_opened()
+
+    def _notify_opened(self) -> None:
+        """Black-box + bundle trigger for an open transition — called
+        *after* the state lock is released so bundle writing never
+        happens under a lock the serve path contends on."""
+        from ..obs.flight import FLIGHT   # deferred: keeps import light
+        FLIGHT.note("breaker.opened", name=self.name,
+                    opens=int(self._c_opened.value))
+        FLIGHT.trigger("breaker-open", detail={"breaker": self.name})

@@ -42,9 +42,25 @@ from typing import Callable, Dict, Optional
 import numpy as np
 
 from ..obs import metrics as obs_metrics
+from ..obs import span
+from ..obs import trace_context
+from ..obs.flight import FLIGHT
+from ..obs.tracer import TRACER, _now_ns
 from .breaker import BreakerPolicy, CircuitBreaker, CLOSED
 from .errors import ShardDropout
 from .retry import Deadline, RetryPolicy
+
+#: trace ids carried per flight-recorder note (the full lists live in
+#: ``last_report``; the black-box ring stays bounded per event)
+_NOTE_ID_CAP = 32
+
+
+def _ids_for(tids, mask) -> Optional[list]:
+    """The trace ids the boolean ``mask`` selects, or None without an
+    ambient trace context of matching length."""
+    if tids is None:
+        return None
+    return [tids[i] for i in np.flatnonzero(mask)]
 
 
 class ResilientEngine:
@@ -109,11 +125,21 @@ class ResilientEngine:
         self._h_degraded = self._reg.histogram("resilience.degraded_query_us")
         #: per-batch serving report, rewritten by every ``*_batch`` call:
         #: {"degraded": (B,) bool — answered by the host fallback,
-        #:  "retries": device attempts burned beyond the first}.  The
+        #:  "retries": device attempts burned beyond the first,
+        #:  "attempts": (B,) int — device attempts that *included* each
+        #:  query (0 = never reached the device),
+        #:  "trace_ids": the ambient per-request trace ids when a
+        #:  :mod:`~repro.obs.trace_context` scope of matching length is
+        #:  active (else None),
+        #:  "retried_trace_ids" / "degraded_trace_ids": the specific
+        #:  requests retries and degradations are attributed to}.  The
         #: frontend copies it into the structured query log so workload
-        #: analytics can split healthy vs degraded traffic.
+        #: analytics can split healthy vs degraded traffic and flight
+        #: bundles can resolve a trace id to its serving decisions.
         self.last_report: Dict[str, object] = {
-            "degraded": np.zeros(0, dtype=bool), "retries": 0}
+            "degraded": np.zeros(0, dtype=bool), "retries": 0,
+            "attempts": np.zeros(0, dtype=np.int32), "trace_ids": None,
+            "retried_trace_ids": [], "degraded_trace_ids": []}
 
     # ------------------------------------------------------------------
     # breaker surface
@@ -209,7 +235,13 @@ class ResilientEngine:
         dl = Deadline(deadline, clock=self._clock)
         out = np.zeros(B, dtype=bool)
         pending = np.ones(B, dtype=bool)
-        report = {"degraded": np.zeros(B, dtype=bool), "retries": 0}
+        tids = trace_context.current_ids()
+        if tids is not None and len(tids) != B:
+            tids = None      # ambient scope is not per-query for this batch
+        attempts_arr = np.zeros(B, dtype=np.int32)
+        report = {"degraded": np.zeros(B, dtype=bool), "retries": 0,
+                  "attempts": attempts_arr, "trace_ids": tids,
+                  "retried_trace_ids": [], "degraded_trace_ids": []}
         self.last_report = report
         attempts, prev_sleep = 0, 0.0
         while attempts < self.retry.max_attempts and not dl.expired():
@@ -219,6 +251,7 @@ class ResilientEngine:
                     br.release()
                 break
             attempts += 1
+            attempts_arr[mask] += 1
             try:
                 got = self.engine.query_batch(us[mask], rects[mask])
             except Exception as e:  # noqa: BLE001 — converted to fallback
@@ -229,6 +262,9 @@ class ResilientEngine:
                     self.stats["retries"] += 1
                     report["retries"] += 1
                     self._c_retries.inc()
+                    self._note_decision("retry", mask, tids, report,
+                                        "retried_trace_ids",
+                                        attempt=attempts, error=type(e).__name__)
                     s = min(prev_sleep, max(dl.remaining(), 0.0))
                     if s > 0:
                         self._sleep(s)
@@ -244,11 +280,31 @@ class ResilientEngine:
             break
         if pending.any():
             report["degraded"] = pending.copy()
+            self._note_decision("degraded", pending, tids, report,
+                                "degraded_trace_ids",
+                                path=self.degraded_path)
             target = self._degrade_target(
                 "query_batch", self.index.query_batch)
             out[pending] = self._host_fallback(
                 lambda sel: target(us[sel], rects[sel]), pending)
         return out
+
+    def _note_decision(self, what: str, mask: np.ndarray, tids, report,
+                       report_key: str, **fields) -> None:
+        """Attribute one retry/degradation decision to the specific
+        trace ids it affects: extend ``last_report[report_key]``, land a
+        black-box note, and (tracing enabled) drop an instant event next
+        to the stage spans."""
+        ids = _ids_for(tids, mask)
+        if ids is not None:
+            report[report_key].extend(ids)
+        note = dict(fields, n=int(mask.sum()))
+        if ids is not None:
+            note["trace_ids"] = ids[:_NOTE_ID_CAP]
+        FLIGHT.note(f"engine.{what}", **note)
+        if TRACER.enabled:
+            TRACER.record(f"resilience.{what}", "resilience",
+                          _now_ns(), 0, note)
 
     def _degrade_target(self, method: str, host_fn):
         """The degradation callable for one query class: the engine's
@@ -264,7 +320,11 @@ class ResilientEngine:
         and latency-attributed separately from healthy traffic."""
         n = int(pending.sum())
         t0 = time.perf_counter()
-        got = call(pending)
+        # the degraded serve is itself a span: a breaker-open window
+        # where no device engine runs must still leave causal evidence
+        # of who served each trace (the flight replay requires it)
+        with span("resilience.degraded_serve", cat="resilience", n=n):
+            got = call(pending)
         self._h_degraded.record(
             (time.perf_counter() - t0) * 1e6 / max(n, 1))
         self.stats["fallback_batches"] += 1
@@ -287,7 +347,14 @@ class ResilientEngine:
         (structured results do not merge across a per-shard split)."""
         dl = Deadline(deadline, clock=self._clock)
         attempts, prev_sleep = 0, 0.0
-        report = {"degraded": np.zeros(max(n, 0), dtype=bool), "retries": 0}
+        whole = np.ones(max(n, 0), dtype=bool)
+        tids = trace_context.current_ids()
+        if tids is not None and len(tids) != n:
+            tids = None
+        attempts_arr = np.zeros(max(n, 0), dtype=np.int32)
+        report = {"degraded": np.zeros(max(n, 0), dtype=bool), "retries": 0,
+                  "attempts": attempts_arr, "trace_ids": tids,
+                  "retried_trace_ids": [], "degraded_trace_ids": []}
         self.last_report = report
         have_dev = hasattr(self.engine, method)
         while have_dev and attempts < self.retry.max_attempts \
@@ -295,6 +362,7 @@ class ResilientEngine:
             if not self._breaker.allow():
                 break
             attempts += 1
+            attempts_arr += 1
             try:
                 got = dev_call()
             except Exception as e:  # noqa: BLE001 — converted to fallback
@@ -305,6 +373,10 @@ class ResilientEngine:
                     self.stats["retries"] += 1
                     report["retries"] += 1
                     self._c_retries.inc()
+                    self._note_decision("retry", whole, tids, report,
+                                        "retried_trace_ids",
+                                        attempt=attempts, method=method,
+                                        error=type(e).__name__)
                     s = min(prev_sleep, max(dl.remaining(), 0.0))
                     if s > 0:
                         self._sleep(s)
@@ -313,6 +385,9 @@ class ResilientEngine:
             self.stats["device_batches"] += 1
             return got
         report["degraded"] = np.ones(max(n, 0), dtype=bool)
+        self._note_decision("degraded", report["degraded"], tids, report,
+                            "degraded_trace_ids", method=method,
+                            path=self.degraded_path)
         return self._host_fallback(lambda _sel: host_call(),
                                    np.ones(max(n, 1), dtype=bool))
 

@@ -46,6 +46,11 @@ dynamic.compaction.mid_build      between index build and substrate build
 dynamic.compaction.pre_swap       swap critical section entry (lock held)
 dynamic.compaction.mid_swap       after base install, before op-log replay
 dynamic.compaction.replay         before the racing-mutation replay loop
+engine.answer                     value point on ``QueryEngine
+                                  .query_batch`` output (``kind=
+                                  "corrupt"`` flips answers — the
+                                  wrong-answer fault the online
+                                  exactness auditor must catch)
 ==============================    =========================================
 """
 
@@ -61,7 +66,16 @@ import numpy as np
 from ..obs import metrics as obs_metrics
 from .errors import InjectedFault
 
-KINDS = ("raise", "delay", "hang")
+KINDS = ("raise", "delay", "hang", "corrupt")
+
+
+def _default_mutator(value):
+    """Flip a boolean answer array's first element — the canonical
+    silent wrong answer the exactness auditor exists to catch."""
+    out = np.array(value, dtype=bool).copy()
+    if out.size:
+        out.flat[0] = ~out.flat[0]
+    return out
 
 
 @dataclasses.dataclass
@@ -86,6 +100,13 @@ class FaultSpec:
                frontend's deadline machinery's problem).
     exc:       exception *factory* ``(point, fire_no) -> BaseException``
                for ``kind="raise"``; default :class:`InjectedFault`.
+    mutator:   value transform for ``kind="corrupt"`` — applied to the
+               value crossing a :func:`fault_value` point (a **silent
+               wrong answer**, the failure mode the online exactness
+               auditor exists to catch); default flips the first
+               element of a boolean answer array.  Corrupt specs only
+               fire at value points; at plain :func:`fault_point` sites
+               they are ignored.
     """
 
     point: str
@@ -96,6 +117,7 @@ class FaultSpec:
     delay_s: float = 0.0
     hang_s: float = 30.0
     exc: Optional[Callable[[str, int], BaseException]] = None
+    mutator: Optional[Callable] = None
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -203,14 +225,47 @@ class FaultInjector:
         if decision is None:
             return
         spec, fire = decision
-        self._c_injected.inc()
-        obs_metrics.REGISTRY.counter(f"faults.{point}").inc()
+        self._count_fire(point, spec, fire)
         if spec.kind == "raise":
             raise spec.make_exc(fire)
         if spec.kind == "delay":
             time.sleep(spec.delay_s)
             return
+        if spec.kind == "corrupt":
+            return        # corrupt specs only act at fault_value points
         plan.release.wait(timeout=spec.hang_s)   # "hang": bounded stall
+
+    def hit_value(self, point: str, value, ctx: Optional[dict]):
+        """A :func:`fault_value` crossing: like :meth:`hit`, but the
+        point carries a value a ``kind="corrupt"`` spec may silently
+        mutate; every other kind behaves as at a plain point."""
+        self.hits_total += 1
+        plan = self._plan
+        if plan is None:
+            return value
+        decision = plan._decide(point)
+        if decision is None:
+            return value
+        spec, fire = decision
+        self._count_fire(point, spec, fire)
+        if spec.kind == "corrupt":
+            return (spec.mutator or _default_mutator)(value)
+        if spec.kind == "raise":
+            raise spec.make_exc(fire)
+        if spec.kind == "delay":
+            time.sleep(spec.delay_s)
+            return value
+        plan.release.wait(timeout=spec.hang_s)
+        return value
+
+    def _count_fire(self, point: str, spec: FaultSpec, fire: int) -> None:
+        self._c_injected.inc()
+        obs_metrics.REGISTRY.counter(f"faults.{point}").inc()
+        # black-box note: injected faults land in the flight recorder's
+        # always-on event ring next to what the stack did about them
+        from ..obs.flight import FLIGHT  # deferred: keeps import light
+        FLIGHT.note("fault.injected", point=point, fault_kind=spec.kind,
+                    fire=fire)
 
 
 INJECTOR = FaultInjector()
@@ -223,6 +278,18 @@ def fault_point(name: str, **ctx) -> None:
     if not INJECTOR.enabled:
         return
     INJECTOR.hit(name, ctx or None)
+
+
+def fault_value(name: str, value, **ctx):
+    """Named failure point **carrying a value** (an answer array about
+    to be returned).  Disabled: one attribute check and the value flows
+    through untouched.  Enabled: a ``kind="corrupt"`` spec may mutate
+    it — the silent-wrong-answer injection the online exactness auditor
+    is proven against — and every other kind acts as at a plain
+    :func:`fault_point`."""
+    if not INJECTOR.enabled:
+        return value
+    return INJECTOR.hit_value(name, value, ctx or None)
 
 
 class inject:

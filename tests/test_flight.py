@@ -1,0 +1,318 @@
+"""Flight recorder + online exactness auditor.
+
+Covers the black-box ring, arming/rate-limiting/dump-budget semantics,
+every trigger source (SLO burn, breaker open, audit divergence, manual
+``obs.dump_flight``), bundle self-containedness, the replay CLI, and
+the auditor's clean-run / injected-wrong-answer behavior.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from conftest import random_geosocial, random_queries
+from repro import obs
+from repro.obs import flight as obs_flight
+from repro.obs import trace_context
+from repro.obs.audit import ExactnessAuditor
+from repro.obs.flight import FLIGHT, FlightRecorder
+from repro.obs.metrics import REGISTRY
+from repro.obs.querylog import QUERY_LOG
+from repro.resilience.breaker import BreakerPolicy, CircuitBreaker
+from repro.resilience.faults import FaultPlan, FaultSpec, inject
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    obs.disable()
+    obs.reset()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+@pytest.fixture(scope="module")
+def built():
+    rng = np.random.default_rng(9)
+    g = random_geosocial(rng, 300, 900)
+    from repro.core import QueryEngine, build_2dreach
+
+    idx = build_2dreach(g, variant="comp")
+    eng = QueryEngine(idx)
+    us, rects = random_queries(rng, g, 64)
+    return g, idx, eng, us, rects
+
+
+def _populate_window(eng, us, rects, n=32):
+    """Serve traced traffic so a frozen bundle has spans + querylog."""
+    obs.enable()
+    ctxs = [trace_context.mint(u=int(u)) for u in us[:n]]
+    with trace_context.scope(ctxs):
+        ans = eng.query_batch(us[:n], rects[:n])
+    QUERY_LOG.record_batch(
+        "reach", ["member"] * n, rects[:n], [0] * n,
+        np.full(n, 250e-6), np.zeros(n, dtype=np.int64),
+        us=us[:n], trace_ids=[c.trace_id for c in ctxs],
+        attempts=[1] * n)
+    h = REGISTRY.histogram("frontend.queue_wait_us")
+    for c in ctxs:
+        h.record(250.0 + c.trace_id, exemplar=c.trace_id)
+    return ctxs, ans
+
+
+# ---------------------------------------------------------- black box
+
+
+def test_note_ring_bounded_and_counted():
+    fr = FlightRecorder(capacity_events=8)
+    for i in range(20):
+        fr.note("x", i=i)
+    assert fr.events_total == 20
+    evts = fr.events()
+    assert len(evts) == 8                       # bounded ring
+    assert [e["i"] for e in evts] == list(range(12, 20))
+    assert all("t" in e and e["kind"] == "x" for e in evts)
+    fr.reset()
+    assert fr.events() == [] and fr.events_total == 0
+
+
+def test_unarmed_trigger_is_counted_noop(tmp_path):
+    assert FLIGHT.trigger("unit-test") is None
+    assert REGISTRY.counter("flight.unarmed").value == 1
+    assert REGISTRY.counter("flight.trigger.unit-test").value == 1
+    assert not os.listdir(tmp_path)
+    assert FLIGHT.snapshot()["dumps"] == 0
+
+
+def test_manual_dump_bundle_contents(built, tmp_path):
+    _, _, eng, us, rects = built
+    ctxs, _ = _populate_window(eng, us, rects)
+    bundle = obs.dump_flight(reason="manual", dirpath=str(tmp_path))
+    assert bundle is not None and os.path.isdir(bundle)
+    assert os.path.basename(bundle) == "000-manual"
+    for fname in ("manifest.json", "trace.json", "spans.jsonl",
+                  "querylog.jsonl", "events.jsonl", "metrics.json"):
+        assert os.path.exists(os.path.join(bundle, fname)), fname
+    with open(os.path.join(bundle, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["schema_version"] == 1
+    assert man["reason"] == "manual"
+    assert man["counts"]["spans"] > 0
+    assert man["counts"]["querylog"] == len(ctxs)
+    assert man["worst_traces"], "no worst traces in a populated window"
+    assert "frontend.queue_wait_us" in man["exemplars"]
+    # spans.jsonl leads with its schema header
+    with open(os.path.join(bundle, "spans.jsonl")) as f:
+        head = json.loads(f.readline())
+    assert head["fields"][0] == "name"
+
+
+def test_rate_limit_and_force(built, tmp_path):
+    _, _, eng, us, rects = built
+    _populate_window(eng, us, rects, n=4)
+    FLIGHT.arm(str(tmp_path), min_interval_s=3600.0)
+    assert FLIGHT.trigger("first") is not None
+    assert FLIGHT.trigger("second") is None          # inside the window
+    assert REGISTRY.counter("flight.suppressed").value == 1
+    assert FLIGHT.trigger("forced", force=True) is not None
+    assert FLIGHT.snapshot()["dumps"] == 2
+
+
+def test_max_dumps_budget(built, tmp_path):
+    _, _, eng, us, rects = built
+    _populate_window(eng, us, rects, n=4)
+    FLIGHT.arm(str(tmp_path), min_interval_s=0.0, max_dumps=2)
+    assert FLIGHT.trigger("a") is not None
+    assert FLIGHT.trigger("b") is not None
+    assert FLIGHT.trigger("c") is None               # budget spent
+    assert FLIGHT.trigger("d", force=True) is None   # force can't exceed it
+    assert len(os.listdir(tmp_path)) == 2
+
+
+def test_slo_fired_freezes_bundle(built, tmp_path):
+    """A burn-rate fire (fake clock) freezes a ``slo-<name>`` bundle."""
+    _, _, eng, us, rects = built
+    _populate_window(eng, us, rects, n=8)
+    FLIGHT.arm(str(tmp_path), min_interval_s=0.0)
+    t = [0.0]
+    mon = obs.SLOMonitor(clock=lambda: t[0])
+    mon.add("latency", "bad", "total", budget=0.01, windows=(1.0,))
+    bad, tot = REGISTRY.counter("bad"), REGISTRY.counter("total")
+    tot.inc(100)
+    mon.tick()
+    t[0] = 2.0
+    bad.inc(50)
+    tot.inc(50)
+    events = mon.tick()
+    assert [e["kind"] for e in events] == ["fired"]
+    assert FLIGHT.snapshot()["dumps"] == 1
+    (bundle,) = os.listdir(tmp_path)
+    assert bundle == "000-slo-latency"
+    with open(os.path.join(tmp_path, bundle, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["detail"]["slo"] == "latency"
+    assert any(e["kind"] == "slo.fired" for e in FLIGHT.events())
+
+
+def test_breaker_open_freezes_bundle(built, tmp_path):
+    _, _, eng, us, rects = built
+    _populate_window(eng, us, rects, n=4)
+    FLIGHT.arm(str(tmp_path), min_interval_s=0.0)
+    br = CircuitBreaker("unit", BreakerPolicy(failure_threshold=3))
+    br.record_failure()
+    br.record_failure()
+    assert FLIGHT.snapshot()["dumps"] == 0           # not yet open
+    br.record_failure()                              # threshold: opens
+    assert br.state_name == "open"
+    assert FLIGHT.snapshot()["dumps"] == 1
+    (bundle,) = os.listdir(tmp_path)
+    assert bundle.startswith("000-breaker-open")
+    assert any(e["kind"] == "breaker.opened" and e["name"] == "unit"
+               for e in FLIGHT.events())
+
+
+# ------------------------------------------------------------- auditor
+
+
+def test_auditor_clean_run_zero_divergences(built):
+    _, idx, eng, us, rects = built
+    aud = ExactnessAuditor(idx, sample=1.0, seed=3)
+    ans = eng.query_batch(us, rects)
+    n = aud.observe(us, rects, ans, trace_ids=list(range(len(us))))
+    assert n == len(us)                      # sample=1.0 takes all
+    assert aud.drain() == len(us)
+    rep = aud.report()
+    assert rep["divergences"] == 0 and rep["kept"] == []
+    assert rep["checked"] == len(us)
+
+
+def test_auditor_oracle_subsample_clean(built):
+    g, idx, eng, us, rects = built
+    aud = ExactnessAuditor(idx, graph=g, sample=1.0, oracle_sample=0.5,
+                           seed=3)
+    ans = eng.query_batch(us[:32], rects[:32])
+    aud.observe(us[:32], rects[:32], ans)
+    aud.drain()
+    rep = aud.report()
+    assert rep["divergences"] == 0
+    assert 0 < rep["oracle_checked"] <= 32
+
+
+def test_auditor_flags_injected_wrong_answer(built, tmp_path):
+    """The e2e proof: a corrupt fault flips one served answer; the
+    auditor catches it within one drain and freezes an
+    ``audit-divergence`` bundle naming the poisoned trace."""
+    _, idx, eng, us, rects = built
+    ctxs, _ = _populate_window(eng, us, rects, n=16)
+    FLIGHT.arm(str(tmp_path), min_interval_s=0.0)
+    aud = ExactnessAuditor(idx, sample=1.0, seed=0)
+    plan = FaultPlan(FaultSpec("engine.answer", kind="corrupt",
+                               max_fires=1), seed=1)
+    with inject(plan):
+        with trace_context.scope(ctxs):
+            ans = eng.query_batch(us[:16], rects[:16])
+    assert plan.fires_at("engine.answer") == 1
+    aud.observe(us[:16], rects[:16], ans,
+                trace_ids=[c.trace_id for c in ctxs])
+    assert aud.drain() == 16                 # one drain suffices
+    rep = aud.report()
+    assert rep["divergences"] == 1
+    (d,) = rep["kept"]
+    assert d["served"] != d["expected"]
+    assert d["trace_id"] == ctxs[0].trace_id     # mutator flips flat[0]
+    # bundle frozen with the offender in the manifest detail
+    assert FLIGHT.snapshot()["dumps"] == 1
+    (bundle,) = os.listdir(tmp_path)
+    assert bundle == "000-audit-divergence"
+    with open(os.path.join(tmp_path, bundle, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["detail"]["trace_id"] == ctxs[0].trace_id
+    assert any(e["kind"] == "audit.divergence" for e in FLIGHT.events())
+    # the injected fault sits next to the divergence in the black box
+    assert any(e["kind"] == "fault.injected"
+               and e["point"] == "engine.answer"
+               for e in FLIGHT.events())
+
+
+def test_auditor_sample_zero_is_noop(built):
+    _, idx, _, us, rects = built
+    aud = ExactnessAuditor(idx, sample=0.0)
+    assert aud.observe(us, rects, np.zeros(len(us), bool)) == 0
+    assert aud.drain() == 0 and aud.pending() == 0
+
+
+def test_auditor_sampling_deterministic(built):
+    _, idx, _, us, rects = built
+    ans = np.zeros(len(us), dtype=bool)
+
+    def taken(seed):
+        a = ExactnessAuditor(idx, sample=0.3, seed=seed)
+        a.observe(us, rects, ans, trace_ids=list(range(len(us))))
+        with a._lock:
+            return [it[3] for it in a._pending]
+
+    assert taken(5) == taken(5)
+    assert 0 < len(taken(5)) < len(us)
+
+
+def test_auditor_background_drain_stop_final(built):
+    _, idx, eng, us, rects = built
+    aud = ExactnessAuditor(idx, sample=1.0, interval=30.0).start()
+    ans = eng.query_batch(us[:8], rects[:8])
+    aud.observe(us[:8], rects[:8], ans)
+    aud.stop(final_drain=True)               # drains despite long interval
+    assert aud.report()["checked"] == 8
+    assert aud.pending() == 0
+
+
+# ----------------------------------------------------- replay / CLI
+
+
+def _frozen_bundle(built, tmp_path):
+    _, _, eng, us, rects = built
+    ctxs, _ = _populate_window(eng, us, rects)
+    bundle = obs.dump_flight(dirpath=str(tmp_path))
+    return bundle, ctxs
+
+
+def test_resolve_trace_complete_story(built, tmp_path):
+    bundle, ctxs = _frozen_bundle(built, tmp_path)
+    data = obs_flight.load_bundle(bundle)
+    story = obs_flight.resolve_trace(data, ctxs[0].trace_id)
+    assert story["complete"]
+    assert story["record"]["trace_id"] == ctxs[0].trace_id
+    assert any(s["name"].startswith("engine.") for s in story["spans"])
+    # an id never served resolves incomplete, not crashing
+    missing = obs_flight.resolve_trace(data, 10**9)
+    assert not missing["complete"] and missing["record"] is None
+
+
+def test_replay_targets_worst_and_exemplars(built, tmp_path):
+    bundle, _ = _frozen_bundle(built, tmp_path)
+    rep = obs_flight.replay(bundle, top=8)
+    assert rep["stories"] and rep["resolved"] == len(rep["stories"])
+    assert rep["exemplar_ids"], "p99-bucket exemplars must be targets"
+    assert set(rep["exemplar_ids"]) <= set(rep["targets"])
+
+
+def test_cli_main_smoke(built, tmp_path, capsys):
+    bundle, _ = _frozen_bundle(built, tmp_path)
+    rc = obs_flight.main([bundle, "--top", "4"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "full causal chain" in out
+    assert "trace " in out and "span " in out
+
+
+def test_obs_snapshot_and_reset_include_flight(tmp_path):
+    FLIGHT.note("x")
+    FLIGHT.arm(str(tmp_path))
+    snap = obs.snapshot()
+    assert snap["flight"]["armed"] and snap["flight"]["events"] == 1
+    obs.reset()
+    fl = obs.snapshot()["flight"]
+    assert not fl["armed"] and fl["events"] == 0

@@ -1,0 +1,367 @@
+"""Causal trace propagation: mint -> scope -> spans/querylog/exemplars.
+
+The flight-recorder promise rests on one invariant: a trace id minted
+at ``Frontend.submit`` is resolvable in every artifact the request
+touched — padder/megakernel spans, the shard fan-out, retry and
+degradation attribution, querylog v3 rows, histogram exemplars.  These
+tests pin that invariant layer by layer, plus the per-thread interval
+accounting (coverage can never exceed 100% under concurrent flush
+threads) and the time-series final-sample flush.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+from conftest import random_geosocial, random_queries
+from repro import obs
+from repro.obs import trace_context
+from repro.obs.metrics import Histogram
+from repro.obs.querylog import I_ATTEMPT, I_TRACE_ID, QueryLog
+from repro.obs.timeseries import TimeSeriesCollector
+from repro.obs.tracer import Tracer
+from repro.resilience.engine import ResilientEngine
+from repro.resilience.faults import FaultPlan, FaultSpec, inject
+from repro.resilience.retry import RetryPolicy
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    obs.disable()
+    obs.reset()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+@pytest.fixture(scope="module")
+def built():
+    rng = np.random.default_rng(7)
+    g = random_geosocial(rng, 400, 1200)
+    from repro.core import QueryEngine, build_2dreach
+
+    idx = build_2dreach(g, variant="comp")
+    eng = QueryEngine(idx)
+    us, rects = random_queries(rng, g, 128)
+    return g, idx, eng, us, rects
+
+
+# ------------------------------------------------------------ context
+
+
+def test_mint_ids_unique_and_monotone():
+    ids = [trace_context.mint().trace_id for _ in range(100)]
+    assert len(set(ids)) == 100
+    assert ids == sorted(ids)
+
+
+def test_scope_nesting_and_thread_isolation():
+    a, b = trace_context.mint(u=1), trace_context.mint(u=2)
+    assert trace_context.current() is None
+    with trace_context.scope([a]):
+        assert trace_context.current_ids() == [a.trace_id]
+        with trace_context.scope([b]):          # innermost wins
+            assert trace_context.current_ids() == [b.trace_id]
+        assert trace_context.current_ids() == [a.trace_id]
+        seen = []
+        t = threading.Thread(
+            target=lambda: seen.append(trace_context.current()))
+        t.start()
+        t.join()
+        assert seen == [None]       # scopes never leak across threads
+    assert trace_context.current() is None
+
+
+def test_disabled_spans_record_nothing_under_scope():
+    ctx = trace_context.mint()
+    with trace_context.scope([ctx]):
+        with obs.span("engine.query_batch", cat="engine"):
+            pass
+    assert len(obs.TRACER) == 0
+
+
+# ----------------------------------------------- engine span propagation
+
+
+def test_padder_bucketing_spans_carry_trace_ids(built):
+    """A non-power-of-two batch pads to its bucket; the pad/fused spans
+    must still carry exactly the *real* requests' ids."""
+    _, _, eng, us, rects = built
+    B = 5                                   # pads to the 8-bucket
+    ctxs = [trace_context.mint(u=int(u)) for u in us[:B]]
+    eng.query_batch(us[:B], rects[:B])      # warm outside the scope
+    obs.enable()
+    with trace_context.scope(ctxs):
+        eng.query_batch(us[:B], rects[:B])
+    want = [c.trace_id for c in ctxs]
+    by_name = {e[0]: e[5] for e in obs.TRACER.events()}
+    for name in ("engine.query_batch", "engine.pad_batch"):
+        assert name in by_name, sorted(by_name)
+        assert by_name[name]["trace_ids"] == want, name
+
+
+def test_shard_fanout_spans_and_futures_carry_ids(built):
+    """8-shard ShardedEngine behind the Frontend: futures expose their
+    trace id, cluster spans carry the batch's ids, and the querylog v3
+    rows join on them."""
+    from repro.cluster import Frontend, ShardedEngine
+
+    _, idx, _, us, rects = built
+    eng = ShardedEngine(idx, n_shards=8)
+    qlog = QueryLog()
+    obs.enable()
+    fe = Frontend(eng, max_batch=16, max_delay=1e-3, query_log=qlog)
+    try:
+        fe.warmup(us[:16], rects[:16])
+        futs = [fe.submit(int(u), r) for u, r in zip(us[:16], rects[:16])]
+        fe.flush(timeout=60)
+        ans = [f.result(timeout=60) for f in futs]
+    finally:
+        fe.close()
+    want = sorted(f.trace_id for f in futs)
+    assert len(set(want)) == 16
+    # host truth for the same queries
+    assert ans == list(idx.query_batch(us[:16], rects[:16]))
+    # the cluster fan-out spans carry the batch ids
+    tagged = [e for e in obs.TRACER.events()
+              if e[0].startswith("cluster.")
+              and (e[5] or {}).get("trace_ids")]
+    assert tagged, "no cluster spans carried trace ids"
+    for e in tagged:
+        assert set(e[5]["trace_ids"]) <= set(want)
+    # querylog v3: one row per request, joined by trace id
+    recs = qlog.records()
+    assert sorted(r[I_TRACE_ID] for r in recs) == want
+    assert all(r[I_ATTEMPT] >= 0 for r in recs)
+
+
+def test_retry_and_two_phase_degradation_attribution(built):
+    """Injected device failures: last_report names the specific trace
+    ids that were retried and then degraded (two_phase target)."""
+    _, idx, eng, us, rects = built
+    ren = ResilientEngine(
+        eng, idx, name="trace-attrib", degraded_path="two_phase",
+        retry=RetryPolicy(max_attempts=2, base_s=1e-4, cap_s=1e-3),
+        sleep=lambda s: None)
+    B = 8
+    ctxs = [trace_context.mint(u=int(u)) for u in us[:B]]
+    want = [c.trace_id for c in ctxs]
+    # exactly the two device attempts fail; the two_phase degradation
+    # target crosses the same fault point, so it must stay unpoisoned
+    plan = FaultPlan(FaultSpec("engine.query_batch", kind="raise",
+                               max_fires=2), seed=5)
+    with inject(plan):
+        with trace_context.scope(ctxs):
+            out = ren.query_batch(us[:B], rects[:B])
+    rep = ren.last_report
+    assert rep["trace_ids"] == want
+    assert rep["retries"] == 1
+    assert rep["retried_trace_ids"] == want      # whole batch retried
+    assert rep["degraded_trace_ids"] == want     # ... then degraded
+    assert rep["degraded"].all()
+    assert (rep["attempts"] == 2).all()          # both device attempts
+    # degradation is exact: two_phase answers match the host truth
+    assert (out == idx.query_batch(us[:B], rects[:B])).all()
+
+
+def test_partial_failure_attributes_only_failed_ids(built):
+    """One poisoned attempt then success: attempts reflects per-query
+    device cost and nothing is degraded."""
+    _, idx, eng, us, rects = built
+    ren = ResilientEngine(
+        eng, idx, name="trace-partial",
+        retry=RetryPolicy(max_attempts=3, base_s=1e-4, cap_s=1e-3),
+        sleep=lambda s: None)
+    B = 4
+    ctxs = [trace_context.mint(u=int(u)) for u in us[:B]]
+    with inject(FaultPlan(FaultSpec("engine.query_batch", kind="raise",
+                                    max_fires=1), seed=2)):
+        with trace_context.scope(ctxs):
+            ren.query_batch(us[:B], rects[:B])
+    rep = ren.last_report
+    assert rep["retried_trace_ids"] == [c.trace_id for c in ctxs]
+    assert rep["degraded_trace_ids"] == []
+    assert not rep["degraded"].any()
+    assert (rep["attempts"] == 2).all()
+
+
+def test_dynamic_compaction_swap_preserves_trace_ids():
+    """DynamicIndex queries inside a scope keep carrying ids across a
+    mid-stream compaction swap (base index replaced under the reader)."""
+    from repro.core import build_dynamic_index
+
+    rng = np.random.default_rng(3)
+    g = random_geosocial(rng, 60, 160)
+    dyn = build_dynamic_index(g, "2dreach-comp")
+    us, rects = random_queries(rng, g, 4)
+    obs.enable()
+    ctxs = [trace_context.mint(u=int(u)) for u in us]
+    want = [c.trace_id for c in ctxs]
+    with trace_context.scope(ctxs):
+        before = [dyn.query(int(u), r) for u, r in zip(us, rects)]
+        dyn.add_edge(0, 1)
+        assert dyn.compact(background=False)     # swap mid-stream
+        after = [dyn.query(int(u), r) for u, r in zip(us, rects)]
+    assert dyn.stats["n_compactions"] == 1
+    tagged = [e for e in obs.TRACER.events()
+              if e[0].startswith("dynamic.")
+              and (e[5] or {}).get("trace_ids") == want]
+    # probes both before and after the swap carried the ids
+    assert len(tagged) >= len(before) + len(after)
+
+
+# ------------------------------------------------------------- exemplars
+
+
+def test_exemplar_reservoir_deterministic_under_seeded_stream():
+    rng = np.random.default_rng(11)
+    vals = rng.lognormal(3.0, 1.0, 2000)
+    tids = np.arange(1, 2001)
+
+    def fill(seed):
+        h = Histogram("t", exemplar_cap=4, seed=seed)
+        for t, v in zip(tids, vals):
+            h.record(float(v), exemplar=int(t))
+        return h
+
+    a, b = fill(0), fill(0)
+    assert a.exemplars() == b.exemplars()        # same seed: identical
+    assert a.exemplars()                          # and non-empty
+    for bucket, res in a.exemplars().items():
+        assert len(res) <= 4
+        for tid, v in res:
+            assert v == pytest.approx(vals[tid - 1])
+    c = fill(1)
+    assert c.exemplars().keys() == a.exemplars().keys()
+
+
+def test_exemplars_near_percentile_and_reset():
+    h = Histogram("t", exemplar_cap=2, seed=0)
+    for i, v in enumerate([10.0] * 50 + [1e6] * 2):
+        h.record(v, exemplar=i)
+    near = h.exemplars_near(h.percentile(99))
+    assert near and all(v == 1e6 for _t, v in near)
+    h.reset()
+    assert h.exemplars() == {}
+
+
+# ----------------------------------- per-thread interval accounting
+
+
+def _fake_span(tracer, name, t0_ns, dur_ns):
+    tracer.record(name, "x", t0_ns, dur_ns, None)
+
+
+def test_stage_totals_union_per_thread_then_across():
+    """Two threads inside the same stage with overlap: the total is the
+    union (wall time >=1 thread was in the stage), not the sum."""
+    tr = Tracer()
+    barrier = threading.Barrier(2)
+
+    def worker(t0, dur):
+        barrier.wait()
+        _fake_span(tr, "engine.scan", t0, dur)
+
+    ts = [threading.Thread(target=worker, args=(0, 100_000)),
+          threading.Thread(target=worker, args=(50_000, 100_000))]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    tids = {e[2] for e in tr.events()}
+    assert len(tids) == 2
+    # [0, 100us] U [50us, 150us] = 150us, not 200us
+    assert tr.stage_totals("engine.")["engine.scan"] == \
+        pytest.approx(150.0)
+
+
+def test_stage_totals_sequential_spans_still_sum():
+    tr = Tracer()
+    _fake_span(tr, "engine.scan", 0, 100_000)
+    _fake_span(tr, "engine.scan", 200_000, 100_000)
+    assert tr.stage_totals()["engine.scan"] == pytest.approx(200.0)
+
+
+def test_coverage_capped_under_concurrent_flush_threads():
+    """The golden from the field: two flush threads serving overlapping
+    batches used to sum to >100% coverage; per-thread union caps it."""
+    tr = Tracer()
+    done = threading.Barrier(3)
+
+    def worker(t0_ns):
+        _fake_span(tr, "frontend.flush", t0_ns, 80_000)
+        done.wait()
+
+    a = threading.Thread(target=worker, args=(0,))
+    b = threading.Thread(target=worker, args=(40_000,))
+    a.start()
+    b.start()
+    done.wait()
+    a.join()
+    b.join()
+    cov = tr.coverage(0.0, 100_000 / 1e9, prefixes=("frontend.",))
+    assert cov <= 1.0
+    # union [0,80]+[40,120]->clip[0,100] = 100us of a 100us window
+    assert cov == pytest.approx(1.0)
+    # one thread alone covers 80%
+    assert tr.coverage(0.0, 100_000 / 1e9) == pytest.approx(1.0)
+
+
+def test_coverage_same_thread_nested_spans_not_double_counted():
+    tr = Tracer()
+    _fake_span(tr, "engine.outer", 0, 100_000)
+    _fake_span(tr, "engine.inner", 10_000, 50_000)   # nested: same thread
+    assert tr.coverage(0.0, 100_000 / 1e9) == pytest.approx(1.0)
+
+
+# -------------------------------------------- timeseries final flush
+
+
+def test_timeseries_flushes_partial_window_on_dump(tmp_path):
+    """A run shorter than one sampling interval still exports its data:
+    to_jsonl takes one final sample covering the in-flight window."""
+    import json
+
+    from repro.obs.metrics import Registry
+
+    reg = Registry()
+    t = [100.0]
+    ts = TimeSeriesCollector(registry=reg, interval=60.0,
+                             clock=lambda: t[0])
+    reg.counter("served").inc(7)
+    reg.histogram("lat_us").record(123.0)
+    assert ts.dirty()
+    path = str(tmp_path / "ts.jsonl")
+    ts.to_jsonl(path)
+    lines = [json.loads(l) for l in open(path) if l.strip()]
+    assert lines[0]["samples"] == 1
+    sample = lines[1]
+    assert sample["t"] == 100.0
+    assert sample["counters"]["served"]["delta"] == 7.0
+    assert sample["histograms"]["lat_us"]["delta"] == 1
+    # no new activity -> dump again adds no sample (idempotent tail)
+    assert not ts.dirty()
+    ts.to_jsonl(path)
+    lines2 = [json.loads(l) for l in open(path) if l.strip()]
+    assert lines2[0]["samples"] == 1
+
+
+def test_timeseries_dirty_tracks_new_activity():
+    from repro.obs.metrics import Registry
+
+    reg = Registry()
+    t = [0.0]
+    ts = TimeSeriesCollector(registry=reg, clock=lambda: t[0])
+    assert not ts.dirty()                # empty registry, no samples
+    c = reg.counter("x")
+    assert ts.dirty()                    # registered but never sampled
+    ts.sample()
+    assert not ts.dirty()
+    c.inc()
+    assert ts.dirty()
+    t[0] = 1.0
+    ts.sample()
+    assert not ts.dirty()
